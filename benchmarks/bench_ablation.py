@@ -1,0 +1,34 @@
+"""Paper Figure 13: ablations — inter-cell edges (a), cell ordering (b)."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.search import recall_at_k
+from repro.core.types import SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
+    v, a = common.dataset(ds, n)
+    idx = common.built_index(ds, n)
+    s = common.searcher_for(idx)
+    rows = []
+    for m in (1, 2):
+        wl = make_queries(v, a, nq, m, seed=100 + m)
+        tids, _ = common.truth(ds, n, wl)
+        variants = {
+            "full": SearchParams(k=10, ef=64),
+            "no_inter_edges": SearchParams(k=10, ef=64,
+                                           use_inter_edges=False),
+            "no_ordering": SearchParams(k=10, ef=64, use_ordering=False),
+        }
+        for name, p in variants.items():
+            ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
+            qps, _ = common.timed_qps(
+                lambda: s.search(wl.q, wl.lo, wl.hi, p), nq)
+            rows.append(dict(bench="ablation", m=m, variant=name,
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+    return rows

@@ -1,0 +1,55 @@
+"""Paper Table 2: index build time + size, Garfield vs baselines.
+
+Columns mirror the paper: build seconds, index bytes; plus the analytic
+sizes of iRangeGraph/UNIFY-style structures at the same (n, M) for the
+inflation-ratio comparison (those systems are CPU C++ codebases; their
+*sizes* follow from their published space complexities — O(nM log n) and
+O(nMS) — which is the paper's own Table 2 story)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.baselines import FlatBaseline
+from repro.core import gmg
+from repro.core.types import GMGConfig
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    rows = []
+    for ds in sc["datasets"]:
+        n = sc["n"]
+        v, a = common.dataset(ds, n)
+        cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16, n_clusters=32)
+
+        t0 = time.perf_counter()
+        idx = gmg.build_gmg(v, a, cfg, seed=0)
+        t_gmg = time.perf_counter() - t0
+        nb = idx.nbytes()
+        common._CACHE[("index", ds, n, cfg.seg_per_attr, cfg.intra_degree,
+                       cfg.inter_degree, 0)] = idx
+
+        t0 = time.perf_counter()
+        flat = FlatBaseline.build(v, a, degree=16)
+        t_flat = time.perf_counter() - t0
+        common._CACHE[("flat", ds, n)] = flat
+
+        M = 16
+        irange_bytes = n * M * int(np.log2(n)) * 4       # O(nM log n)
+        unify_bytes = n * M * cfg.n_cells * 4            # O(nMS)
+        rows.append(dict(
+            bench="build", dataset=ds, n=n,
+            gmg_build_s=round(t_gmg, 2),
+            gmg_index_bytes=nb["index_bytes"],
+            flat_build_s=round(t_flat, 2),
+            flat_index_bytes=flat.nbytes()["graph_bytes"],
+            irangegraph_bytes_analytic=irange_bytes,
+            unify_bytes_analytic=unify_bytes,
+            inflation_vs_irange=round(irange_bytes / nb["index_bytes"], 2),
+            inflation_vs_unify=round(unify_bytes / nb["index_bytes"], 2),
+        ))
+    return rows

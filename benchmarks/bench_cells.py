@@ -1,0 +1,31 @@
+"""Paper Figure 11: impact of the number of cells S."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import gmg
+from repro.core.search import Searcher, ground_truth, recall_at_k
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
+    v, a = common.dataset(ds, n)
+    wl = make_queries(v, a, nq, 2, seed=90)
+    tids, _ = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+    rows = []
+    for seg in ((2, 2), (4, 2), (4, 4), (4, 6)):
+        cfg = GMGConfig(seg_per_attr=seg, intra_degree=16, n_clusters=32)
+        idx = gmg.build_gmg(v, a, cfg, seed=0)
+        s = Searcher(idx)
+        p = SearchParams(k=10, ef=64)
+        ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
+        qps, _ = common.timed_qps(lambda: s.search(wl.q, wl.lo, wl.hi, p),
+                                  nq)
+        rows.append(dict(bench="cells", S=cfg.n_cells,
+                         recall=round(recall_at_k(ids, tids), 4),
+                         qps=round(qps, 1),
+                         index_bytes=idx.nbytes()["index_bytes"]))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Figure 12: impact of the number of inter-cell edges l."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import gmg
+from repro.core.search import Searcher, ground_truth, recall_at_k
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
+    v, a = common.dataset(ds, n)
+    wl = make_queries(v, a, nq, 2, seed=95)
+    tids, _ = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+    rows = []
+    for l in (1, 2, 4):
+        cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16,
+                        inter_degree=l, n_clusters=32)
+        idx = gmg.build_gmg(v, a, cfg, seed=0)
+        s = Searcher(idx)
+        p = SearchParams(k=10, ef=64)
+        ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
+        qps, _ = common.timed_qps(lambda: s.search(wl.q, wl.lo, wl.hi, p),
+                                  nq)
+        rows.append(dict(bench="intercell", l=l,
+                         recall=round(recall_at_k(ids, tids), 4),
+                         qps=round(qps, 1),
+                         inter_bytes=idx.inter_adj.nbytes))
+    return rows

@@ -1,0 +1,40 @@
+"""Kernel microbench: ref (XLA) path wall-time on CPU + interpret-mode
+validation cost. On TPU the pallas path would time here instead; on CPU
+the ref path *is* the production path, so the numbers are real."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def run(scale: str = "smoke"):
+    rng = np.random.default_rng(0)
+    sizes = [(128, 4096, 128), (256, 16384, 128)] \
+        if scale == "smoke" else [(128, 4096, 128), (256, 65536, 128),
+                                  (512, 65536, 768)]
+    rows = []
+    for B, N, d in sizes:
+        q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+        qps, dt = common.timed_qps(
+            lambda: ops.pairwise_l2(q, v).block_until_ready(), B)
+        flops = 2.0 * B * N * d
+        rows.append(dict(bench="kernels", kernel="pairwise_l2",
+                         B=B, N=N, d=d, ms=round(dt * 1e3, 2),
+                         gflops=round(flops / dt / 1e9, 1)))
+        qps, dt = common.timed_qps(
+            lambda: ops.topk_l2(q, v, 10)[0].block_until_ready(), B)
+        rows.append(dict(bench="kernels", kernel="fused_topk",
+                         B=B, N=N, d=d, ms=round(dt * 1e3, 2),
+                         gflops=round(flops / dt / 1e9, 1)))
+        idx = jnp.asarray(rng.integers(0, N, size=(B, 16)).astype(np.int32))
+        qps, dt = common.timed_qps(
+            lambda: ops.gather_l2(q, v, idx).block_until_ready(), B)
+        rows.append(dict(bench="kernels", kernel="gather_distance",
+                         B=B, N=N, d=d, ms=round(dt * 1e3, 2),
+                         gflops=round(2.0 * B * 16 * d / dt / 1e9, 2)))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Figure 9: total filtered attributes m from 2 to 10 (p=4 indexed;
+the rest are scalar checks during traversal)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import gmg
+from repro.core.search import Searcher, ground_truth, recall_at_k
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_dataset, make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    n, nq = sc["n"], sc["n_queries"]
+    rows = []
+    # dataset with 10 attributes; index partitions the first p=2 (smoke)
+    v, a = make_dataset("sift", n, seed=0, m=10)
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16, n_clusters=32)
+    idx = gmg.build_gmg(v, a, cfg, seed=0)
+    s = Searcher(idx)
+    for m in (2, 4, 6, 8, 10):
+        wl = make_queries(v, a, nq, m, seed=70 + m,
+                          sel_range=(0.3, 1.0))
+        tids, _ = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+        p = SearchParams(k=10, ef=64)
+        ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
+        qps, _ = common.timed_qps(lambda: s.search(wl.q, wl.lo, wl.hi, p),
+                                  nq)
+        rows.append(dict(bench="num_attrs", m=m,
+                         recall=round(recall_at_k(ids, tids), 4),
+                         qps=round(qps, 1),
+                         mean_selectivity=float(np.mean(wl.sel))))
+    return rows

@@ -1,0 +1,71 @@
+"""Paper Figure 7: QPS vs recall across m ∈ {1, 2, 4} filtering
+attributes, Garfield vs GPU-Pre / CAGRA-Post / inline-filter."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.baselines import (inline_filter_search, postfilter_search,
+                                  prefilter_search)
+from repro.core.search import recall_at_k
+from repro.core.types import SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    rows = []
+    for ds in sc["datasets"]:
+        n, nq = sc["n"], sc["n_queries"]
+        v, a = common.dataset(ds, n)
+        idx = common.built_index(ds, n)
+        s = common.searcher_for(idx)
+        flat = common._CACHE.get(("flat", ds, n))
+        if flat is None:
+            from repro.core.baselines import FlatBaseline
+            flat = FlatBaseline.build(v, a, degree=16)
+            common._CACHE[("flat", ds, n)] = flat
+
+        for m in (1, 2, 4):
+            wl = make_queries(v, a, nq, m, seed=40 + m)
+            tids, _ = common.truth(ds, n, wl)
+
+            for ef in (32, 64, 128):
+                p = SearchParams(k=10, ef=ef)
+                ids, _ = s.search(wl.q, wl.lo, wl.hi, p)   # compile warm
+                qps, _ = common.timed_qps(
+                    lambda: s.search(wl.q, wl.lo, wl.hi, p), nq)
+                rows.append(dict(bench="qps_recall", dataset=ds, m=m,
+                                 method="garfield", ef=ef,
+                                 recall=round(recall_at_k(ids, tids), 4),
+                                 qps=round(qps, 1)))
+
+            ids, _ = prefilter_search(flat, wl.q, wl.lo, wl.hi, 10)
+            qps, _ = common.timed_qps(
+                lambda: prefilter_search(flat, wl.q, wl.lo, wl.hi, 10), nq)
+            rows.append(dict(bench="qps_recall", dataset=ds, m=m,
+                             method="gpu_pre", ef=0,
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+
+            for expand in (2, 4):
+                ids, _ = postfilter_search(flat, wl.q, wl.lo, wl.hi, 10,
+                                           expand=expand)
+                qps, _ = common.timed_qps(
+                    lambda: postfilter_search(flat, wl.q, wl.lo, wl.hi, 10,
+                                              expand=expand), nq)
+                rows.append(dict(bench="qps_recall", dataset=ds, m=m,
+                                 method="cagra_post", ef=expand * 10,
+                                 recall=round(recall_at_k(ids, tids), 4),
+                                 qps=round(qps, 1)))
+
+            ids, _ = inline_filter_search(flat, wl.q, wl.lo, wl.hi, 10)
+            qps, _ = common.timed_qps(
+                lambda: inline_filter_search(flat, wl.q, wl.lo, wl.hi, 10),
+                nq)
+            rows.append(dict(bench="qps_recall", dataset=ds, m=m,
+                             method="inline_filter", ef=64,
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Figure 8: fixed range widths 1/64, 1/16, 1/4 across m."""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.baselines import postfilter_search, prefilter_search
+from repro.core.search import recall_at_k
+from repro.core.types import SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
+    v, a = common.dataset(ds, n)
+    idx = common.built_index(ds, n)
+    s = common.searcher_for(idx)
+    from repro.core.baselines import FlatBaseline
+    flat = common._CACHE.setdefault(("flat", ds, n),
+                                    FlatBaseline.build(v, a, degree=16))
+    rows = []
+    for m in (1, 2):
+        for width in (1 / 64, 1 / 16, 1 / 4):
+            wl = make_queries(v, a, nq, m, seed=60, fixed_width=width)
+            tids, _ = common.truth(ds, n, wl)
+            p = SearchParams(k=10, ef=64)
+            ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
+            qps, _ = common.timed_qps(
+                lambda: s.search(wl.q, wl.lo, wl.hi, p), nq)
+            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
+                             method="garfield",
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+            ids, _ = prefilter_search(flat, wl.q, wl.lo, wl.hi, 10)
+            qps, _ = common.timed_qps(
+                lambda: prefilter_search(flat, wl.q, wl.lo, wl.hi, 10), nq)
+            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
+                             method="gpu_pre",
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+            ids, _ = postfilter_search(flat, wl.q, wl.lo, wl.hi, 10)
+            qps, _ = common.timed_qps(
+                lambda: postfilter_search(flat, wl.q, wl.lo, wl.hi, 10), nq)
+            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
+                             method="cagra_post",
+                             recall=round(recall_at_k(ids, tids), 4),
+                             qps=round(qps, 1)))
+    return rows

@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding.
+
+Each bench_* module exposes ``run(scale) -> list[dict]`` rows; run.py
+aggregates to CSV. Scales: "smoke" (CI-size) and "full" (paper-shaped,
+minutes). Rows carry (bench, dataset, config..., metric columns) —
+one bench per paper table/figure, see DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import gmg
+from repro.core.search import Searcher, ground_truth, recall_at_k
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_dataset, make_queries
+
+_CACHE: dict = {}
+
+SCALES = {
+    "smoke": dict(n=8000, n_queries=32, datasets=("sift",)),
+    "full": dict(n=60000, n_queries=128, datasets=("sift", "dblp")),
+}
+
+
+def dataset(name: str, n: int, seed: int = 0):
+    key = ("data", name, n, seed)
+    if key not in _CACHE:
+        _CACHE[key] = make_dataset(name, n, seed=seed)
+    return _CACHE[key]
+
+
+def built_index(name: str, n: int, cfg: GMGConfig | None = None,
+                seed: int = 0):
+    cfg = cfg or GMGConfig(seg_per_attr=(2, 2), intra_degree=16,
+                           n_clusters=32)
+    key = ("index", name, n, cfg.seg_per_attr, cfg.intra_degree,
+           cfg.inter_degree, seed)
+    if key not in _CACHE:
+        v, a = dataset(name, n, seed)
+        _CACHE[key] = gmg.build_gmg(v, a, cfg, seed=seed)
+    return _CACHE[key]
+
+
+def searcher_for(index):
+    key = ("searcher", id(index))
+    if key not in _CACHE:
+        _CACHE[key] = Searcher(index)
+    return _CACHE[key]
+
+
+def truth(name: str, n: int, wl, k: int = 10, seed: int = 0):
+    key = ("truth", name, n, id(wl), k)
+    if key not in _CACHE:
+        v, a = dataset(name, n, seed)
+        _CACHE[key] = ground_truth(v, a, wl.q, wl.lo, wl.hi, k)
+    return _CACHE[key]
+
+
+def timed_qps(fn, n_queries: int, warmup: int = 1, iters: int = 3):
+    """Wall-time QPS of a batched search callable (end-to-end latency,
+    matching the paper's metric)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    dt = (time.perf_counter() - t0) / iters
+    return n_queries / dt, dt
+
+
+def pretty_bytes(b: int) -> str:
+    return f"{b / (1 << 20):.1f}MB"

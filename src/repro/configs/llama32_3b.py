@@ -1,0 +1,24 @@
+"""llama3.2-3b [hf:meta-llama/Llama-3.2-3B].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256, tied embeddings.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+CONFIG = LMConfig(
+    name="llama3.2-3b",
+    n_layers=28, d_model=3072, vocab=128256, d_ff=8192,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=3072, n_heads=24, n_kv_heads=8, d_head=128,
+                    rope_theta=500000.0),
+    tie_embeddings=True,
+)
+
+REDUCED = LMConfig(
+    name="llama3.2-reduced",
+    n_layers=2, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16),
+    tie_embeddings=True,
+)

@@ -1,0 +1,32 @@
+"""llama-3.2-vision-11b [hf:meta-llama/Llama-3.2-11B-Vision].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; every 5th layer
+carries a gated cross-attention sublayer over vision patch embeddings
+(frontend STUB: ctx = precomputed patch embeddings (B, 1024, 4096)).
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+_S = LayerSpec("attn", ffn="dense")
+_X = LayerSpec("attn", ffn="dense", cross_attn=True)
+
+CONFIG = LMConfig(
+    name="llama-3.2-vision-11b",
+    n_layers=40, d_model=4096, vocab=128256, d_ff=14336,
+    pattern=(_S, _S, _S, _S, _X),
+    attn=AttnConfig(d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+                    rope_theta=500000.0),
+    d_ctx=4096, n_ctx_tokens=1024,
+    tie_embeddings=False,
+)
+
+REDUCED = LMConfig(
+    name="llama-vision-reduced",
+    n_layers=5, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense"),) * 4
+    + (LayerSpec("attn", ffn="dense", cross_attn=True),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16),
+    d_ctx=64, n_ctx_tokens=16,
+    tie_embeddings=False,
+)

@@ -1,0 +1,25 @@
+"""mamba2-1.3b [arXiv:2405.21060] — attention-free SSD.
+
+48L d_model=2048 vocab=50280 ssm_state=128, expand=2 (d_inner=4096,
+64 heads of P=64). d_ff=0 (no FFN blocks). O(1) decode state ->
+runs long_500k.
+"""
+
+from repro.models.lm import LayerSpec, LMConfig
+from repro.models.ssm import SSMConfig
+
+CONFIG = LMConfig(
+    name="mamba2-1.3b",
+    n_layers=48, d_model=2048, vocab=50280, d_ff=0,
+    pattern=(LayerSpec("ssm", ffn="none"),),
+    ssm=SSMConfig(d_model=2048, d_state=128, head_dim=64, expand=2),
+    tie_embeddings=True,
+)
+
+REDUCED = LMConfig(
+    name="mamba2-reduced",
+    n_layers=2, d_model=64, vocab=256, d_ff=0,
+    pattern=(LayerSpec("ssm", ffn="none"),),
+    ssm=SSMConfig(d_model=64, d_state=16, head_dim=16, expand=2, chunk=32),
+    tie_embeddings=True,
+)

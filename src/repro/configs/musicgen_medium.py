@@ -1,0 +1,27 @@
+"""musicgen-medium [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048. The EnCodec
+frontend is a STUB: inputs are precomputed frame embeddings (B, T, D)
+(embed_inputs=False); labels are codec token ids.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+CONFIG = LMConfig(
+    name="musicgen-medium",
+    n_layers=48, d_model=1536, vocab=2048, d_ff=6144,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=1536, n_heads=24, n_kv_heads=24, d_head=64),
+    embed_inputs=False,
+    tie_embeddings=False,
+)
+
+REDUCED = LMConfig(
+    name="musicgen-reduced",
+    n_layers=2, d_model=64, vocab=128, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=4, d_head=16),
+    embed_inputs=False,
+    tie_embeddings=False,
+)

@@ -1,0 +1,27 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400/expert vocab=32064,
+MoE 16 experts top-2, every layer MoE.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = LMConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    n_layers=32, d_model=4096, vocab=32064,
+    pattern=(LayerSpec("attn", ffn="moe"),),
+    attn=AttnConfig(d_model=4096, n_heads=32, n_kv_heads=8, d_head=128),
+    moe=MoEConfig(d_model=4096, n_experts=16, top_k=2, d_ff=6400),
+    tie_embeddings=False,
+)
+
+REDUCED = LMConfig(
+    name="phi3.5-moe-reduced",
+    n_layers=2, d_model=64, vocab=256,
+    pattern=(LayerSpec("attn", ffn="moe"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16),
+    moe=MoEConfig(d_model=64, n_experts=4, top_k=2, d_ff=96),
+    tie_embeddings=False,
+)

@@ -1,0 +1,25 @@
+"""qwen1.5-32b [hf:Qwen/Qwen1.5-* family].
+
+64L d_model=5120 40H (MHA: kv=40) d_ff=27392 vocab=152064, QKV bias.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+CONFIG = LMConfig(
+    name="qwen1.5-32b",
+    n_layers=64, d_model=5120, vocab=152064, d_ff=27392,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=5120, n_heads=40, n_kv_heads=40, d_head=128,
+                    qkv_bias=True),
+    tie_embeddings=False,
+)
+
+REDUCED = LMConfig(
+    name="qwen1.5-reduced",
+    n_layers=2, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                    qkv_bias=True),
+    tie_embeddings=False,
+)

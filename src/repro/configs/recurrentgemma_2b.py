@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [arXiv:2402.19427 Griffin].
+
+26L d_model=2560 10H (MQA kv=1, d_head=256) d_ff=7680 vocab=256000.
+Temporal pattern 2 recurrent (RG-LRU) : 1 local attention (window 2048).
+Constant-size recurrent state -> runs long_500k.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+from repro.models.rglru import RGLRUConfig
+
+_R = LayerSpec("rglru", ffn="dense")
+_A = LayerSpec("attn", ffn="dense", window=2048)
+
+CONFIG = LMConfig(
+    name="recurrentgemma-2b",
+    n_layers=26, d_model=2560, vocab=256000, d_ff=7680,
+    pattern=(_R, _R, _A),
+    attn=AttnConfig(d_model=2560, n_heads=10, n_kv_heads=1, d_head=256),
+    rglru=RGLRUConfig(d_model=2560, d_rnn=2560),
+    tie_embeddings=True,
+)
+
+REDUCED = LMConfig(
+    name="recurrentgemma-reduced",
+    n_layers=3, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("rglru", ffn="dense"),
+             LayerSpec("rglru", ffn="dense"),
+             LayerSpec("attn", ffn="dense", window=32)),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=1, d_head=16),
+    rglru=RGLRUConfig(d_model=64, d_rnn=64),
+    tie_embeddings=True,
+)

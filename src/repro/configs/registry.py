@@ -1,0 +1,94 @@
+"""Architecture registry + assigned input shapes (--arch / --shape).
+
+Shapes (LM family; seq_len x global_batch):
+  train_4k     seq 4096,   batch 256   -> train_step
+  prefill_32k  seq 32768,  batch 32    -> serve prefill
+  decode_32k   cache 32768, batch 128  -> serve decode (1 new token)
+  long_500k    cache 524288, batch 1   -> long-context decode
+
+long_500k needs sub-quadratic attention: runs for mamba2 (SSM),
+recurrentgemma (hybrid) and gemma3 (5/6 sliding-window layers); skipped
+for pure full-attention archs (documented in DESIGN.md §Arch-applic.).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = {
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "yi-6b": "repro.configs.yi_6b",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "mamba2-1.3b": "repro.configs.mamba2_13b",
+}
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+_SUBQUADRATIC = {"mamba2-1.3b", "recurrentgemma-2b", "gemma3-4b"}
+
+
+def get_config(arch: str):
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def get_reduced(arch: str):
+    return importlib.import_module(ARCHS[arch]).REDUCED
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    """long_500k only for sub-quadratic archs; no encoder-only archs."""
+    if shape == "long_500k":
+        return arch in _SUBQUADRATIC
+    return True
+
+
+def input_specs(arch: str, shape: str, cfg=None):
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    Returns (kind, dict). For train: tokens/embeds + labels (+ ctx).
+    For prefill: prompt inputs. For decode: one-token inputs (the KV/state
+    caches are built separately — see launch/dryrun.py)."""
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape]
+    B, T = spec["batch"], spec["seq"]
+    sds = jax.ShapeDtypeStruct
+    out = {}
+    if spec["kind"] in ("train", "prefill"):
+        if cfg.embed_inputs:
+            out["tokens"] = sds((B, T), jnp.int32)
+        else:
+            out["embeds"] = sds((B, T, cfg.d_model), cfg.dtype)
+        if spec["kind"] == "train":
+            out["labels"] = sds((B, T), jnp.int32)
+    else:  # decode: one new token against a seq-long cache
+        if cfg.embed_inputs:
+            out["token"] = sds((B, 1), jnp.int32)
+        else:
+            out["token"] = sds((B, 1, cfg.d_model), cfg.dtype)
+    if cfg.d_ctx > 0:
+        out["ctx"] = sds((B, cfg.n_ctx_tokens, cfg.d_ctx), cfg.dtype)
+    return spec["kind"], out
+
+
+def all_cells():
+    """Every (arch, shape) pair in the assignment — 40 total, of which
+    the inapplicable long_500k cells are flagged skip."""
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            cells.append((arch, shape, shape_applicable(arch, shape)))
+    return cells

@@ -1,0 +1,24 @@
+"""yi-6b [arXiv:2403.04652] — llama-arch GQA.
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+
+from repro.models.attention import AttnConfig
+from repro.models.lm import LayerSpec, LMConfig
+
+CONFIG = LMConfig(
+    name="yi-6b",
+    n_layers=32, d_model=4096, vocab=64000, d_ff=11008,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=4096, n_heads=32, n_kv_heads=4, d_head=128,
+                    rope_theta=5000000.0),
+    tie_embeddings=False,
+)
+
+REDUCED = LMConfig(
+    name="yi-reduced",
+    n_layers=2, d_model=64, vocab=256, d_ff=160,
+    pattern=(LayerSpec("attn", ffn="dense"),),
+    attn=AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16),
+    tie_embeddings=False,
+)

@@ -1,0 +1,156 @@
+"""Baseline RFANNS strategies (paper Section 2.2.3 + Section 6.1 methods).
+
+- ``prefilter_search`` (paper's GPU-Pre): exact predicate scan, brute-force
+  distances on survivors. Exact by construction; cost O(n·dim) per batch —
+  the right tool at very low selectivity, a bandwidth disaster at high.
+- ``postfilter_search`` (paper's CAGRA-Post): vanilla graph ANNS over a
+  *global* CAGRA-style graph with an expanded candidate pool, predicate
+  applied to the results only. Fast at selectivity ~1, recall collapses as
+  the filter tightens.
+- ``inline_filter_search``: global graph traversal that navigates through
+  out-of-range nodes but only admits in-range ones to the result pool —
+  the algorithmic core of the iRangeGraph/ACORN query paths (§2.2), here
+  as the third comparison point.
+
+All run on the same kernels as Garfield so the comparison isolates the
+*index + traversal strategy*, matching the paper's experimental framing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as graph_mod
+from repro.core.traversal import global_search
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class FlatBaseline:
+    """Shared state for the baselines: raw data + one global graph."""
+
+    vectors: np.ndarray            # (n, dim) f32
+    attrs: np.ndarray              # (n, m) f32
+    adj: np.ndarray | None = None  # (n, deg) i32 global CAGRA-style graph
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, attrs: np.ndarray,
+              degree: int = 16, with_graph: bool = True,
+              exact_threshold: int = 16384, seed: int = 0):
+        adj = None
+        if with_graph:
+            adj = graph_mod.build_cell_graph(
+                vectors, degree, exact_threshold=exact_threshold, seed=seed)
+        return cls(vectors=np.asarray(vectors, np.float32),
+                   attrs=np.asarray(attrs, np.float32), adj=adj)
+
+    def nbytes(self) -> dict:
+        g = self.adj.nbytes if self.adj is not None else 0
+        return {"graph_bytes": int(g), "vector_bytes": int(self.vectors.nbytes)}
+
+
+# ---------------------------------------------------------------------------
+# GPU-Pre: exact pre-filter + brute-force scan
+# ---------------------------------------------------------------------------
+
+def _predicate_bias(attrs, lo, hi):
+    """(B, n) f32 additive bias: 0 where in-range, +inf where filtered."""
+    ok = (attrs[None] >= lo[:, None, :]) & (attrs[None] <= hi[:, None, :])
+    return jnp.where(ok.all(axis=2), 0.0, jnp.inf).astype(jnp.float32)
+
+
+def prefilter_search(base: FlatBaseline, q: np.ndarray, lo: np.ndarray,
+                     hi: np.ndarray, k: int, chunk: int = 65536):
+    """Exact RFNNS. Streams the dataset in chunks through the fused
+    distance+topk kernel with the predicate folded in as a bias row, then
+    merges chunk winners — the brute-force strategy never builds an index.
+    Returns (ids (B, k) i64, dists (B, k) f32), -1/inf padded."""
+    n = base.vectors.shape[0]
+    B = q.shape[0]
+    qd = jnp.asarray(q)
+    lod, hid = jnp.asarray(lo), jnp.asarray(hi)
+    best_d = jnp.full((B, k), jnp.inf, jnp.float32)
+    best_i = jnp.full((B, k), -1, jnp.int32)
+
+    @jax.jit
+    def fold(best_d, best_i, v, a, offset):
+        bias = _predicate_bias(a, lod, hid)
+        # bias applies per (query, point): fused kernel takes a shared (N,)
+        # row, so compute the matrix path here (chunked => bounded memory).
+        d2 = ops.pairwise_l2(qd, v) + bias
+        vals, idx = jax.lax.top_k(-d2, min(k, v.shape[0]))
+        vals, idx = -vals, idx + offset
+        cd = jnp.concatenate([best_d, vals], axis=1)
+        ci = jnp.concatenate([best_i, idx.astype(jnp.int32)], axis=1)
+        neg, pos = jax.lax.top_k(-cd, k)
+        return -neg, jnp.take_along_axis(ci, pos, axis=1)
+
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        best_d, best_i = fold(best_d, best_i,
+                              jnp.asarray(base.vectors[s:e]),
+                              jnp.asarray(base.attrs[s:e]), s)
+    ids = np.asarray(best_i, np.int64)
+    d = np.asarray(best_d)
+    ids[~np.isfinite(d)] = -1
+    return ids, d
+
+
+# ---------------------------------------------------------------------------
+# CAGRA-Post: vanilla ANNS + post-filter
+# ---------------------------------------------------------------------------
+
+def postfilter_search(base: FlatBaseline, q: np.ndarray, lo: np.ndarray,
+                      hi: np.ndarray, k: int, expand: int = 4,
+                      ef: int = 64, max_iters: int = 256, seed: int = 0):
+    """Vanilla graph ANNS for k' = expand*k candidates, then filter.
+
+    The expansion factor is the paper's "retrieve substantial candidates"
+    knob — the cost post-filtering pays to survive selective predicates."""
+    assert base.adj is not None, "postfilter baseline needs the global graph"
+    B, m = q.shape[0], base.attrs.shape[1]
+    kk = expand * k
+    no_lo = jnp.full((B, m), -jnp.inf, jnp.float32)
+    no_hi = jnp.full((B, m), jnp.inf, jnp.float32)
+    ids, d = global_search(
+        jnp.asarray(base.vectors), jnp.asarray(base.attrs),
+        jnp.asarray(base.adj), jnp.asarray(q), no_lo, no_hi,
+        jax.random.PRNGKey(seed), k=kk, ef=max(ef, kk),
+        entry_width=min(ef, 16), max_iters=max_iters)
+    ids = np.asarray(ids, np.int64)
+    d = np.asarray(d)
+    # post-filter on the host (attrs lookup + range check)
+    out_i = -np.ones((B, k), np.int64)
+    out_d = np.full((B, k), np.inf, np.float32)
+    for b in range(B):
+        sel = ids[b][ids[b] >= 0]
+        if len(sel) == 0:
+            continue
+        ok = ((base.attrs[sel] >= lo[b]) & (base.attrs[sel] <= hi[b])).all(1)
+        keep = sel[ok][:k]
+        out_i[b, :len(keep)] = keep
+        out_d[b, :len(keep)] = d[b][ids[b] >= 0][ok][:k]
+    return out_i, out_d
+
+
+# ---------------------------------------------------------------------------
+# inline filtering on a global graph (iRangeGraph/ACORN-style query path)
+# ---------------------------------------------------------------------------
+
+def inline_filter_search(base: FlatBaseline, q: np.ndarray, lo: np.ndarray,
+                         hi: np.ndarray, k: int, ef: int = 64,
+                         max_iters: int = 256, seed: int = 0):
+    """Greedy traversal that navigates freely but admits only in-range
+    nodes to the result pool (global_search already implements exactly
+    this split between navigation beam and filtered results)."""
+    assert base.adj is not None
+    ids, d = global_search(
+        jnp.asarray(base.vectors), jnp.asarray(base.attrs),
+        jnp.asarray(base.adj), jnp.asarray(q), jnp.asarray(lo),
+        jnp.asarray(hi), jax.random.PRNGKey(seed), k=k, ef=ef,
+        entry_width=min(ef, 16), max_iters=max_iters)
+    return np.asarray(ids, np.int64), np.asarray(d)

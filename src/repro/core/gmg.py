@@ -1,0 +1,122 @@
+"""GMG index construction orchestrator (paper Section 3, Alg. 1).
+
+Pipeline: quantile grid -> per-cell CAGRA-style graphs -> inter-cell top-l
+edges -> cluster histogram for ordering -> int8 resident copy. All arrays
+land in the cell-contiguous internal layout (see core/types.py); ``perm``
+maps back to the caller's original ids.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+
+import numpy as np
+
+from repro.core import grid as grid_mod
+from repro.core import graph as graph_mod
+from repro.core import intercell, ordering, quantize
+from repro.core.types import GMGConfig, GMGIndex
+
+log = logging.getLogger(__name__)
+
+
+def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
+              config: GMGConfig | None = None, seed: int = 0,
+              verbose: bool = False) -> GMGIndex:
+    """Build the full GMG index (Alg. 1). vectors (n, dim) f32,
+    attrs (n, m) with m >= config.p."""
+    config = config or GMGConfig()
+    n, dim = vectors.shape
+    m = attrs.shape[1]
+    if m < config.p:
+        raise ValueError(f"need >= p={config.p} attributes, got {m}")
+    t0 = time.perf_counter()
+
+    # --- Step 1: attribute partitioning (Alg. 1 lines 1-4) ---
+    seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi = \
+        grid_mod.build_grid(attrs.astype(np.float64), config.seg_per_attr)
+    vectors = np.ascontiguousarray(vectors[order], dtype=np.float32)
+    attrs_s = np.ascontiguousarray(attrs[order], dtype=np.float32)
+    cell_of = cell_of[order]
+    perm = order.astype(np.int64)
+    S = config.n_cells
+    t_grid = time.perf_counter()
+
+    # --- Step 2: intra-cell graphs (Alg. 1 lines 6-9) ---
+    intra = -np.ones((n, config.intra_degree), dtype=np.int32)
+    for c in range(S):
+        s, e = int(cell_start[c]), int(cell_start[c + 1])
+        if e <= s:
+            continue
+        adj_local = graph_mod.build_cell_graph(
+            vectors[s:e], config.intra_degree,
+            exact_threshold=config.exact_build_threshold,
+            nn_iters=config.nn_descent_iters, alpha=config.prune_alpha,
+            seed=seed + c)
+        intra[s:e] = np.where(adj_local >= 0, adj_local + s, -1)
+    t_intra = time.perf_counter()
+
+    # --- Step 3: inter-cell edges (Alg. 1 lines 10-12) ---
+    inter = intercell.build_inter_edges(
+        vectors, attrs_s, intra, cell_start, config.inter_degree,
+        ef=config.search_ef, seed=seed)
+    t_inter = time.perf_counter()
+
+    # --- ordering sketch (Section 4.2 offline half) ---
+    centroids = ordering.kmeans(vectors, config.n_clusters,
+                                iters=config.kmeans_iters, seed=seed)
+    hist = ordering.build_histogram(vectors, cell_of, centroids, S)
+    t_order = time.perf_counter()
+
+    # --- per-attribute CDF grid (selectivity estimator for the adaptive
+    # dense path; covers ALL m attributes, not just the p partitioned) ---
+    qs = np.linspace(0.0, 1.0, 1025)
+    attr_quantiles = np.stack(
+        [np.quantile(attrs_s[:, j].astype(np.float64), qs)
+         for j in range(m)]).astype(np.float32)
+
+    # --- quantized resident copy (Section 5.1) ---
+    vq = vscale = None
+    if config.quantize:
+        vq, vscale = quantize.quantize(vectors)
+    t_end = time.perf_counter()
+
+    if verbose:
+        log.info("GMG build n=%d S=%d: grid %.2fs intra %.2fs inter %.2fs "
+                 "order %.2fs quant %.2fs", n, S, t_grid - t0,
+                 t_intra - t_grid, t_inter - t_intra, t_order - t_inter,
+                 t_end - t_order)
+
+    return GMGIndex(
+        config=config, vectors=vectors, attrs=attrs_s, perm=perm,
+        seg_bounds=seg_bounds, cell_of=cell_of,
+        cell_start=np.asarray(cell_start, np.int32),
+        cell_lo=cell_lo.astype(np.float32), cell_hi=cell_hi.astype(np.float32),
+        intra_adj=intra, inter_adj=inter,
+        centroids=centroids.astype(np.float32), hist=hist.astype(np.float32),
+        attr_quantiles=attr_quantiles,
+        vq=vq, vscale=vscale)
+
+
+def build_timings(vectors: np.ndarray, attrs: np.ndarray,
+                  config: GMGConfig | None = None, seed: int = 0) -> dict:
+    """Table-2 style build accounting: wall time per phase + sizes."""
+    config = config or GMGConfig()
+    t0 = time.perf_counter()
+    index = build_gmg(vectors, attrs, config, seed=seed)
+    wall = time.perf_counter() - t0
+    out = {"build_seconds": wall}
+    out.update(index.nbytes())
+    out["n"] = index.n
+    out["n_cells"] = index.n_cells
+    return out
+
+
+def global_adjacency(index: GMGIndex) -> np.ndarray:
+    """Adjacency for the adaptive global path (Alg. 2 lines 5-8): intra
+    edges ++ the flattened inter edges, giving every node degree
+    d + (S-1)*l over the *whole* dataset. Built once, cached by search."""
+    n = index.n
+    inter_flat = index.inter_adj.reshape(n, -1)
+    return np.concatenate([index.intra_adj, inter_flat], axis=1)

@@ -1,0 +1,95 @@
+"""Cardinality-balanced quantile grid (paper Section 3.1, Alg. 1 lines 1-4).
+
+Host-side (numpy): partitioning is a sort over n scalars per attribute —
+the paper also runs this on CPU. The p partitioned attributes each get
+S_i quantile segments; an object's cell is the mixed-radix code of its
+per-attribute segment ids.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def quantile_edges(values: np.ndarray, n_segments: int) -> np.ndarray:
+    """(S_i + 1,) edges with ~equal-cardinality buckets.
+
+    Edges are half-open on the right except the last bucket, which is
+    closed: segment(x) = searchsorted(edges[1:-1], x, side='right').
+    """
+    qs = np.linspace(0.0, 1.0, n_segments + 1)
+    edges = np.quantile(values.astype(np.float64), qs)
+    edges[0], edges[-1] = -np.inf, np.inf   # grid covers the whole line
+    # Duplicate quantiles (heavily skewed attrs) would create empty
+    # segments; nudge them apart so searchsorted stays monotone. Balance
+    # degrades gracefully, correctness does not depend on it.
+    for i in range(1, len(edges) - 1):
+        if edges[i] <= edges[i - 1]:
+            edges[i] = np.nextafter(edges[i - 1], np.inf)
+    return edges.astype(np.float64)
+
+
+def segment_of(values: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Segment id per value given quantile edges."""
+    return np.searchsorted(edges[1:-1], values, side="right").astype(np.int32)
+
+
+def assign_cells(attrs: np.ndarray, seg_bounds: list,
+                 seg_per_attr: Sequence[int]) -> np.ndarray:
+    """Mixed-radix cell id over the p partitioned attributes (attrs[:, :p])."""
+    p = len(seg_per_attr)
+    cell = np.zeros(attrs.shape[0], dtype=np.int64)
+    for i in range(p):
+        seg = segment_of(attrs[:, i], seg_bounds[i])
+        cell = cell * seg_per_attr[i] + seg
+    return cell.astype(np.int32)
+
+
+def build_grid(attrs: np.ndarray, seg_per_attr: Sequence[int]):
+    """Returns (seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi).
+
+    ``order`` sorts objects into cell-contiguous internal layout.
+    cell_lo/cell_hi are the (S, p) grid-box edges used for query-box
+    intersection (Section 4.1 cell selection).
+    """
+    p = len(seg_per_attr)
+    S = int(np.prod(seg_per_attr))
+    seg_bounds = [quantile_edges(attrs[:, i], seg_per_attr[i]) for i in range(p)]
+    cell_of = assign_cells(attrs, seg_bounds, seg_per_attr)
+
+    order = np.argsort(cell_of, kind="stable")
+    counts = np.bincount(cell_of, minlength=S)
+    cell_start = np.zeros(S + 1, dtype=np.int32)
+    np.cumsum(counts, out=cell_start[1:])
+
+    # per-cell boxes from the mixed-radix decomposition
+    cell_lo = np.zeros((S, p), dtype=np.float64)
+    cell_hi = np.zeros((S, p), dtype=np.float64)
+    for c in range(S):
+        rem, code = c, []
+        for i in reversed(range(p)):
+            code.append(rem % seg_per_attr[i])
+            rem //= seg_per_attr[i]
+        code.reverse()
+        for i in range(p):
+            cell_lo[c, i] = seg_bounds[i][code[i]]
+            cell_hi[c, i] = seg_bounds[i][code[i] + 1]
+    return seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi
+
+
+def cells_for_box(cell_lo: np.ndarray, cell_hi: np.ndarray,
+                  lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Query-box -> cell mask (paper Alg. 2 lines 2-4; vectorized).
+
+    lo/hi: (B, m) query ranges (use -inf/+inf for unconstrained attrs);
+    only the first p columns participate in grid intersection. A cell
+    [clo, chi) intersects [l, r] iff l < chi and r >= clo.
+    Returns bool (B, S).
+    """
+    p = cell_lo.shape[1]
+    l = lo[:, None, :p]
+    r = hi[:, None, :p]
+    inter = (l < cell_hi[None]) & (r >= cell_lo[None])
+    return inter.all(axis=2)

@@ -1,0 +1,71 @@
+"""Inter-cell edge construction (paper Section 3.2, step 3).
+
+Every node queries every *other* cell's local graph for its top-l ANN
+(Alg. 1 lines 10-12), batched. We reuse the batched traversal engine with
+a single-cell itinerary and no predicate; tiny cells fall back to exact
+top-l (cheaper than a graph walk).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.traversal import multi_cell_search
+from repro.kernels import ops
+
+
+def build_inter_edges(vectors: np.ndarray, attrs: np.ndarray,
+                      intra_adj: np.ndarray, cell_start: np.ndarray,
+                      l: int, ef: int = 32, chunk: int = 4096,
+                      exact_threshold: int = 512, seed: int = 0,
+                      max_iters: int = 64) -> np.ndarray:
+    """Returns inter_adj (n, S, l) int32 (own-cell column = -1)."""
+    n, dim = vectors.shape
+    S = len(cell_start) - 1
+    m = attrs.shape[1]
+    inter = -np.ones((n, S, l), dtype=np.int32)
+
+    v_dev = jnp.asarray(vectors)
+    a_dev = jnp.asarray(attrs)
+    adj_dev = jnp.asarray(intra_adj)
+    cs_dev = jnp.asarray(cell_start)
+    # no predicate during construction searches
+    no_inter = jnp.zeros((n, S, 1), jnp.int32) - 1
+
+    key = jax.random.PRNGKey(seed)
+    for c in range(S):
+        s, e = int(cell_start[c]), int(cell_start[c + 1])
+        n_c = e - s
+        if n_c == 0:
+            continue
+        for qs in range(0, n, chunk):
+            qe = min(qs + chunk, n)
+            B = qe - qs
+            q = v_dev[qs:qe]
+            if n_c <= exact_threshold:
+                _, idx = ops.topk_l2(q, v_dev[s:e], min(l, n_c))
+                ids = np.asarray(idx)
+                ids = np.where(ids >= 0, ids + s, -1)
+                if ids.shape[1] < l:
+                    ids = np.concatenate(
+                        [ids, -np.ones((B, l - ids.shape[1]), np.int32)], 1)
+            else:
+                lo = jnp.full((B, m), -jnp.inf, jnp.float32)
+                hi = jnp.full((B, m), jnp.inf, jnp.float32)
+                itinerary = jnp.full((B, 1), c, jnp.int32)
+                key, sub = jax.random.split(key)
+                ids_j, _ = multi_cell_search(
+                    v_dev, a_dev, adj_dev, no_inter, cs_dev,
+                    q, lo, hi, itinerary, sub,
+                    k=l, ef=ef, entry_width=min(ef, 16),
+                    entry_random=min(ef, 16), entry_beam_l=1,
+                    max_iters=max_iters, use_inter=False)
+                ids = np.asarray(ids_j)
+            inter[qs:qe, c, :] = ids[:, :l]
+
+        # own-cell column: a node must not point at itself; simplest is to
+        # blank the whole own-cell column (paper: edges to *other* cells).
+        inter[s:e, c, :] = -1
+    return inter

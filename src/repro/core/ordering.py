@@ -1,0 +1,88 @@
+"""Cluster-guided cell ordering (paper Section 4.2, Alg. 3).
+
+Offline: k-means over the whole dataset; a (S, n_clusters) histogram H
+counts each cell's members per cluster — a discrete sketch of where each
+cell's vectors live in embedding space.
+
+Online: query->centroid distances on the MXU (the paper's Tensor-Core
+GEMM), top-m nearest clusters (the paper's register bitonic sort -> our
+fused-topk kernel), then Card(C_i) = sum_m H[C_i, cs] — a (B, S) gather+
+reduce that the paper assigns to warps and we run as one vectorized
+einsum over a one-hot cluster mask (lane-parallel, no divergence analogue
+needed). Cells sort descending by estimated cardinality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def kmeans(vectors: np.ndarray, n_clusters: int, iters: int = 10,
+           seed: int = 0, sample: int = 65536) -> np.ndarray:
+    """Plain Lloyd's on a subsample; returns (n_clusters, dim) centroids."""
+    rng = np.random.default_rng(seed)
+    n = vectors.shape[0]
+    if n > sample:
+        vecs = vectors[rng.choice(n, sample, replace=False)]
+    else:
+        vecs = vectors
+    n_clusters = min(n_clusters, len(vecs))
+    cent = jnp.asarray(vecs[rng.choice(len(vecs), n_clusters, replace=False)])
+    v = jnp.asarray(vecs)
+
+    @jax.jit
+    def step(cent):
+        d = ops.pairwise_l2(v, cent)                  # (n, C)
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, cent.shape[0], dtype=v.dtype)
+        counts = one_hot.sum(axis=0)                  # (C,)
+        sums = one_hot.T @ v                          # (C, dim)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old centroid for empty clusters
+        return jnp.where(counts[:, None] > 0, new, cent)
+
+    for _ in range(iters):
+        cent = step(cent)
+    return np.asarray(cent)
+
+
+def build_histogram(vectors: np.ndarray, cell_of: np.ndarray,
+                    centroids: np.ndarray, n_cells: int,
+                    chunk: int = 16384) -> np.ndarray:
+    """H[cell, cluster] = #vectors of `cell` whose NN centroid is `cluster`."""
+    C = centroids.shape[0]
+    H = np.zeros((n_cells, C), dtype=np.float32)
+    cent = jnp.asarray(centroids)
+    for s in range(0, len(vectors), chunk):
+        v = jnp.asarray(vectors[s:s + chunk])
+        assign = np.asarray(jnp.argmin(ops.pairwise_l2(v, cent), axis=1))
+        np.add.at(H, (cell_of[s:s + chunk], assign), 1.0)
+    return H
+
+
+@functools.partial(jax.jit, static_argnames=("top_m", "T"))
+def order_cells(q, centroids, hist, cell_mask, *, top_m: int, T: int):
+    """Alg. 3, batched. q (B, dim); cell_mask (B, S) bool from cell
+    selection. Returns (cell_order (B, T) int32 -1-padded descending by
+    estimated cardinality, n_sel (B,))."""
+    B, S = cell_mask.shape[0], cell_mask.shape[1]
+    d = ops.pairwise_l2(q, centroids)                 # (B, C) — MXU GEMM
+    top_m = min(top_m, centroids.shape[0])
+    _, top_idx = jax.lax.top_k(-d, top_m)             # (B, m)
+    # Card(C_i) = sum over top clusters of H[C_i, cs]  (Alg. 3 lines 3-5)
+    mask = jax.nn.one_hot(top_idx, centroids.shape[0],
+                          dtype=hist.dtype).sum(axis=1)        # (B, C)
+    card = mask @ hist.T                              # (B, S)
+    # selected cells sort descending by card; unselected sink with -inf
+    score = jnp.where(cell_mask, card, -jnp.inf)
+    order = jnp.argsort(-score, axis=1)[:, :T].astype(jnp.int32)
+    n_sel = cell_mask.sum(axis=1).astype(jnp.int32)
+    ranks = jnp.arange(T, dtype=jnp.int32)[None, :]
+    order = jnp.where(ranks < n_sel[:, None], order, -1)
+    return order, n_sel

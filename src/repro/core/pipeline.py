@@ -1,0 +1,332 @@
+"""Cell-oriented out-of-core execution (paper Section 5).
+
+Memory model (paper Fig. 5, adapted to TPU — DESIGN.md §2):
+
+  host DRAM   : full fp32 vectors, full GMG index, cell metadata
+  device HBM  : int8 quantized vectors + per-row scales (always resident)
+                + a bounded *cell-batch window* of the graph (streamed)
+
+Per query batch:
+  (1) CPU: cell selection -> incidence matrix          (select.py)
+  (2) CPU: greedy batch scheduling, Alg. 5             (scheduler.py)
+  (3) CPU: gather each batch's partial index (intra edges + inter edges
+      *between batch cells*), remapped to batch-local ids
+  (4) async device_put of the partial index (JAX dispatch overlaps the
+      copy of batch t+1 with the compute of batch t — the paper's
+      PCIe/compute double buffering, on the TPU DMA path)
+  (5) device: masked multi-cell traversal over the batch-local graph,
+      distances on the int8 resident vectors
+  (6) candidates flow back; (7) CPU re-ranks survivors with exact fp32
+      and merges into the global per-query pool.
+
+Entry-point propagation across batches follows the paper: each query
+carries its current global candidate pool; when its next cell appears in
+a later batch, the pool's inter-cell edges provide the entries.  Here the
+carried state is the per-query top-ef candidate ids (host-side), re-seeded
+into the device search of the next batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import select as select_mod
+from repro.core import scheduler as sched_mod
+from repro.core.traversal import multi_cell_search_seeded
+from repro.core.types import GMGIndex, SearchParams
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One streamed cell batch, host-side."""
+    cells: list                     # global cell ids in this batch
+    rows: np.ndarray                # global internal ids of batch rows
+    local_start: np.ndarray         # (n_batch_cells + 1,) local CSR
+    intra: np.ndarray               # (n_rows, d) batch-local adjacency
+    inter: np.ndarray               # (n_rows, n_batch_cells, l) batch-local
+    active_queries: np.ndarray      # query ids active in this batch
+    itinerary: np.ndarray           # (n_active, n_batch_cells) local cell
+                                    # order (-1 padded), most-promising first
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _remap_plan(index: GMGIndex, cells: list, incidence: np.ndarray,
+                order_rank: np.ndarray, pad_cells: int,
+                row_quantum: int = 4096) -> BatchPlan:
+    """Gather + remap one batch's partial index (paper step 3).
+
+    Shapes are padded (rows to a quantum, cells to the batch capacity) so
+    every batch lowers to the *same* jitted program — the fixed-shape
+    analogue of the paper's 'bounded and stable' HBM window."""
+    S = index.n_cells
+    starts = index.cell_start
+    sizes = np.diff(starts)
+    n_rows = int(sizes[cells].sum())
+    n_pad = _round_up(max(n_rows, 1), row_quantum)
+
+    # global->local row remap over the batch cells
+    local_start = np.zeros(pad_cells + 1, np.int64)
+    np.cumsum(sizes[cells], out=local_start[1:len(cells) + 1])
+    local_start[len(cells) + 1:] = local_start[len(cells)]  # empty pad cells
+    offset = np.zeros(S, np.int64)             # per-cell local offset delta
+    in_batch = np.zeros(S, bool)
+    rows = np.zeros(n_pad, np.int64)
+    for li, c in enumerate(cells):
+        s, e = int(starts[c]), int(starts[c + 1])
+        rows[local_start[li]:local_start[li + 1]] = np.arange(s, e)
+        offset[c] = local_start[li] - s         # deltas may be negative!
+        in_batch[c] = True
+
+    def remap(ids: np.ndarray) -> np.ndarray:
+        """global internal ids -> batch-local ids (-1 if outside batch)."""
+        safe = np.maximum(ids, 0)
+        cell = index.cell_of[safe]
+        out = np.where((ids >= 0) & in_batch[cell], safe + offset[cell], -1)
+        return out.astype(np.int32)
+
+    l = index.inter_adj.shape[2]
+    intra = -np.ones((n_pad, index.intra_adj.shape[1]), np.int32)
+    inter = -np.ones((n_pad, pad_cells, l), np.int32)
+    real = rows[:n_rows]
+    intra[:n_rows] = remap(index.intra_adj[real])
+    inter[:n_rows, :len(cells)] = remap(index.inter_adj[real][:, cells, :])
+
+    active = np.nonzero(incidence[:, cells].any(axis=1))[0]
+    # per-active-query itinerary over batch-local cells, best rank first
+    itin = np.full((len(active), pad_cells), -1, np.int32)
+    for i, qid in enumerate(active):
+        sel = [li for li, c in enumerate(cells) if incidence[qid, c]]
+        sel.sort(key=lambda li: order_rank[qid, cells[li]])
+        itin[i, :len(sel)] = sel
+    return BatchPlan(cells=list(cells), rows=rows,
+                     local_start=local_start.astype(np.int32),
+                     intra=intra, inter=inter, active_queries=active,
+                     itinerary=itin)
+
+
+@dataclasses.dataclass
+class OutOfCoreEngine:
+    """Streaming searcher. Keeps int8 vectors resident; graph streamed."""
+
+    index: GMGIndex
+    hbm_budget_bytes: Optional[int] = None   # overrides config.batch_cells
+
+    def __post_init__(self):
+        idx = self.index
+        assert idx.vq is not None, "out-of-core mode needs quantize=True"
+        self.vq = jnp.asarray(idx.vq)               # resident (paper §5.1)
+        self.vscale = jnp.asarray(idx.vscale)
+        self.attrs_dev = jnp.asarray(idx.attrs)     # attrs ride along (f32)
+        self.stats: dict = {}
+
+    # -- batch size under an explicit HBM constraint ------------------------
+
+    def cells_per_batch(self) -> int:
+        cfg = self.index.config
+        if self.hbm_budget_bytes is None:
+            return cfg.batch_cells
+        sizes = np.diff(self.index.cell_start)
+        mean_cell = max(int(sizes.mean()), 1)
+        per_cell = mean_cell * (
+            self.index.intra_adj.shape[1] * 4          # intra row
+            + self.index.inter_adj.shape[1] * self.index.inter_adj.shape[2] * 4)
+        return max(1, int(self.hbm_budget_bytes // max(per_cell, 1)))
+
+    # -- the pipeline --------------------------------------------------------
+
+    def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+               params: Optional[SearchParams] = None,
+               use_schedule: bool = True):
+        """Returns (ids (B, k) original ids, dists (B, k) exact fp32)."""
+        params = params or SearchParams()
+        idx = self.index
+        cfg = idx.config
+        k, ef = params.k, params.ef or cfg.search_ef
+        B = q.shape[0]
+        t_start = time.perf_counter()
+
+        # (1) selection + ordering ranks (host)
+        inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
+        rank = self._order_ranks(q, inc)
+
+        # (2) scheduling (Alg. 5) vs naive (ablation Table 3)
+        b = self.cells_per_batch()
+        if use_schedule:
+            batches = sched_mod.schedule_cells(inc, b)
+        else:
+            batches = sched_mod.naive_schedule(inc, b)
+        self.stats = {
+            "n_batches": len(batches),
+            "total_active": sched_mod.total_active(inc, batches),
+            "cells_per_batch": b,
+        }
+
+        # carried per-query candidate pool (global internal ids + dists)
+        pool_ids = np.full((B, ef), -1, np.int32)
+        pool_d = np.full((B, ef), np.inf, np.float32)
+
+        qd = jnp.asarray(q)
+        lod, hid = jnp.asarray(lo), jnp.asarray(hi)
+        key = jax.random.PRNGKey(params.seed)
+
+        # (3)+(4) stage the first batch; inside the loop stage batch t+1
+        # before blocking on batch t's results => JAX's async dispatch
+        # overlaps the H2D copy with device compute (paper Fig. 5(b)).
+        plans = [_remap_plan(idx, cells, inc, rank, pad_cells=b)
+                 for cells in batches]
+        staged = self._stage(plans[0]) if plans else None
+
+        transfer_bytes = 0
+        for t, plan in enumerate(plans):
+            dev = staged
+            transfer_bytes += plan.intra.nbytes + plan.inter.nbytes
+            if t + 1 < len(plans):
+                staged = self._stage(plans[t + 1])   # prefetch next batch
+
+            if len(plan.active_queries) == 0:
+                continue
+            key, sub = jax.random.split(key)
+            got_ids, got_d = self._run_batch(plan, dev, qd, lod, hid,
+                                             pool_ids, pool_d, k, ef, sub)
+            # (7) merge into carried pool (host, cheap). Seeds re-found in
+            # later batches would otherwise duplicate and crowd the pool.
+            act = plan.active_queries
+            merged_ids = np.concatenate([pool_ids[act], got_ids], axis=1)
+            merged_d = np.concatenate([pool_d[act], got_d], axis=1)
+            for r, qid in enumerate(act):
+                ordr = np.argsort(merged_d[r], kind="stable")
+                seen, mi, md = set(), [], []
+                for j in ordr:
+                    i = int(merged_ids[r, j])
+                    if i < 0 or i in seen:
+                        continue
+                    seen.add(i)
+                    mi.append(i)
+                    md.append(merged_d[r, j])
+                    if len(mi) == ef:
+                        break
+                pool_ids[qid, :len(mi)] = mi
+                pool_ids[qid, len(mi):] = -1
+                pool_d[qid, :len(md)] = md
+                pool_d[qid, len(md):] = np.inf
+
+        self.stats["transfer_bytes"] = transfer_bytes
+
+        # CPU exact re-rank of survivors (paper step 7)
+        out_i = np.full((B, k), -1, np.int64)
+        out_d = np.full((B, k), np.inf, np.float32)
+        rerank_n = min(ef, max(k * cfg.rerank_mult, k))
+        for bqi in range(B):
+            cand = pool_ids[bqi][pool_ids[bqi] >= 0][:rerank_n]
+            if len(cand) == 0:
+                continue
+            vecs = idx.vectors[cand]
+            d_exact = ((vecs - q[bqi]) ** 2).sum(axis=1)
+            ok = ((idx.attrs[cand] >= lo[bqi]) &
+                  (idx.attrs[cand] <= hi[bqi])).all(axis=1)
+            d_exact = np.where(ok, d_exact, np.inf)
+            ordr = np.argsort(d_exact)[:k]
+            keep = d_exact[ordr] < np.inf
+            ids = np.where(keep, idx.perm[cand[ordr]], -1)
+            out_i[bqi, :len(ids)] = ids
+            out_d[bqi, :len(ids)] = np.where(keep, d_exact[ordr], np.inf)
+        self.stats["wall_seconds"] = time.perf_counter() - t_start
+        return out_i, out_d
+
+    # -- helpers -------------------------------------------------------------
+
+    def _order_ranks(self, q: np.ndarray, inc: np.ndarray) -> np.ndarray:
+        """(B, S) traversal rank per (query, cell) from the cluster vote
+        (lower = search earlier; untouched cells get a large rank)."""
+        from repro.core.ordering import order_cells
+        idx = self.index
+        S = idx.n_cells
+        order, _ = order_cells(
+            jnp.asarray(q), jnp.asarray(idx.centroids), jnp.asarray(idx.hist),
+            jnp.asarray(inc), top_m=idx.config.top_m_clusters, T=S)
+        order = np.asarray(order)
+        rank = np.full((q.shape[0], S), S + 1, np.int32)
+        for bqi in range(q.shape[0]):
+            sel = order[bqi][order[bqi] >= 0]
+            rank[bqi, sel] = np.arange(len(sel))
+        return rank
+
+    def _stage(self, plan: BatchPlan):
+        """Async H2D staging of one batch's partial index."""
+        return {
+            "intra": jax.device_put(plan.intra),
+            "inter": jax.device_put(plan.inter),
+            "local_start": jax.device_put(plan.local_start),
+            "rows": jax.device_put(plan.rows.astype(np.int32)),
+        }
+
+    def _run_batch(self, plan: BatchPlan, dev, qd, lod, hid,
+                   pool_ids, pool_d, k: int, ef: int, key):
+        """Device traversal of one batch (step 5-6). Returns candidate
+        (global ids, int8 distances) for the active queries."""
+        idx = self.index
+        cfg = idx.config
+        act = plan.active_queries
+        nB = len(act)
+        # pad active set to pow2 to keep jit cache warm
+        padded = 1
+        while padded < nB:
+            padded *= 2
+        sel = np.concatenate([act, np.repeat(act[:1], padded - nB)])
+
+        # seed entries: carried pool's inter edges into batch cells happen
+        # via inter_adj remap below; plus the pool's own members that live
+        # inside this batch (remapped), plus randoms added device-side.
+        seed_global = pool_ids[sel]                       # (padded, ef)
+        cell = idx.cell_of[np.maximum(seed_global, 0)]
+        # local offset per cell (recompute, small); deltas may be negative
+        offset = np.zeros(idx.n_cells, np.int64)
+        in_batch = np.zeros(idx.n_cells, bool)
+        for li, c in enumerate(plan.cells):
+            offset[c] = int(plan.local_start[li]) - int(idx.cell_start[c])
+            in_batch[c] = True
+        seed_local = np.where((seed_global >= 0) & in_batch[cell],
+                              seed_global + offset[cell], -1).astype(np.int32)
+
+        itin = plan.itinerary[
+            np.concatenate([np.arange(nB),
+                            np.zeros(padded - nB, np.int64)])]
+
+        ids_l, d_l = multi_cell_search_seeded(
+            self.vq, self.vscale, self.attrs_dev,
+            dev["intra"], dev["inter"], dev["local_start"], dev["rows"],
+            qd[sel], lod[sel], hid[sel], jnp.asarray(itin),
+            jnp.asarray(seed_local), key,
+            k=max(k, min(ef, 2 * k)), ef=ef,
+            entry_width=cfg.entry_width, entry_random=cfg.entry_random,
+            entry_beam_l=cfg.entry_beam_l,
+            max_iters=cfg.max_iters_per_cell)
+        ids_l = np.asarray(ids_l[:nB])
+        d_l = np.asarray(d_l[:nB])
+        ids_g = np.where(ids_l >= 0, plan.rows[np.maximum(ids_l, 0)], -1)
+        return ids_g.astype(np.int32), d_l
+
+
+def multihost_plan(incidence: np.ndarray, n_hosts: int, batch_size: int):
+    """Garfield at fleet scale (DESIGN.md §5): cells shard round-robin
+    across hosts; each host runs Alg. 5 over its resident cells. Returns
+    (host_of_cell (S,), per-host batch lists, per-host active totals)."""
+    S = incidence.shape[1]
+    host_of = np.arange(S) % n_hosts
+    plans, totals = [], []
+    for h in range(n_hosts):
+        cells = [c for c in range(S)
+                 if host_of[c] == h and incidence[:, c].any()]
+        batches = sched_mod.schedule_cells(incidence, batch_size, cells)
+        plans.append(batches)
+        totals.append(sched_mod.total_active(incidence, batches))
+    return host_of, plans, totals

@@ -1,0 +1,26 @@
+"""Symmetric per-vector int8 scalar quantization (paper Section 5.1).
+
+The out-of-core pipeline keeps only this representation resident in
+accelerator memory; exact fp32 re-ranking happens host-side on survivors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize(v: np.ndarray):
+    """(n, d) f32 -> ((n, d) int8, (n,) f32 scales). x ~= scale * q."""
+    amax = np.abs(v).max(axis=1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(v / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale[:, None]
+
+
+def max_abs_error_bound(scale: np.ndarray, dim: int) -> np.ndarray:
+    """Per-vector worst-case L2 reconstruction error: 0.5*scale per coord."""
+    return 0.5 * scale * np.sqrt(dim)

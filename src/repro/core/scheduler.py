@@ -1,0 +1,62 @@
+"""Cell-oriented batch scheduling (paper Section 5.2, Alg. 5).
+
+Host-side greedy: place each cell into the batch (capacity b) whose active
+query count grows least — minimizing sum_k Active(B_k), the number of live
+per-query traversal states the accelerator must keep resident per batch.
+Ties break toward the currently-least-active batch, exactly as Alg. 5.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def active_queries(incidence: np.ndarray, batch: Sequence[int]) -> int:
+    """Active(B_k) = #queries touching >= 1 cell of the batch."""
+    if len(batch) == 0:
+        return 0
+    return int((incidence[:, list(batch)].any(axis=1)).sum())
+
+
+def schedule_cells(incidence: np.ndarray, batch_size: int,
+                   cells: Sequence[int] | None = None) -> list[list[int]]:
+    """Alg. 5. incidence: (m_queries, n_cells) bool; returns batches of
+    cell ids, each |batch| <= batch_size, covering `cells` (default: every
+    cell touched by at least one query)."""
+    m, n = incidence.shape
+    if cells is None:
+        cells = [c for c in range(n) if incidence[:, c].any()]
+    cells = list(cells)
+    n_batches = max(1, -(-len(cells) // batch_size))
+    batches: list[list[int]] = [[] for _ in range(n_batches)]
+    # incremental active masks per batch: queries already active
+    active_mask = [np.zeros(m, dtype=bool) for _ in range(n_batches)]
+    active_cnt = [0] * n_batches
+
+    for c in cells:
+        col = incidence[:, c]
+        best_k, best_inc = -1, None
+        for k in range(n_batches):
+            if len(batches[k]) >= batch_size:
+                continue
+            inc = int((col & ~active_mask[k]).sum())
+            if (best_inc is None or inc < best_inc or
+                    (inc == best_inc and active_cnt[k] < active_cnt[best_k])):
+                best_k, best_inc = k, inc
+        batches[best_k].append(c)
+        active_mask[best_k] |= col
+        active_cnt[best_k] = int(active_mask[best_k].sum())
+    return [b for b in batches if b]
+
+
+def naive_schedule(incidence: np.ndarray, batch_size: int) -> list[list[int]]:
+    """Original-order dispatch (the paper's Fig. 6(a) strawman)."""
+    cells = [c for c in range(incidence.shape[1]) if incidence[:, c].any()]
+    return [cells[i:i + batch_size] for i in range(0, len(cells), batch_size)]
+
+
+def total_active(incidence: np.ndarray, batches: list[list[int]]) -> int:
+    """The objective of Eq. 3."""
+    return sum(active_queries(incidence, b) for b in batches)

@@ -1,0 +1,246 @@
+"""End-to-end in-core query processing (paper Section 4, Alg. 2).
+
+``Searcher`` owns the device-resident copies of a built GMG index and runs
+the three-stage pipeline per query batch:
+
+  1. cell selection   — vectorized box intersection (select.py)
+  2. cell ordering    — cluster-histogram cardinality vote (ordering.py)
+  3. cell traversal   — sequential search-jump-search (traversal.py)
+
+plus the adaptive global path (Alg. 2 lines 5-8) for lanes whose selected
+cell count exceeds S_thre: those queries skip the itinerary and run one
+greedy traversal over the global graph (intra ++ inter edges), with the
+predicate enforced on the result pool. The split is decided host-side and
+the two sub-batches run as separate fixed-shape programs (pow2-padded so
+jit caches stay warm) — the TPU analogue of the paper's divergence-free
+dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gmg as gmg_mod
+from repro.core import select as select_mod
+from repro.core.ordering import order_cells
+from repro.core.traversal import global_search, multi_cell_search
+from repro.core.types import GMGIndex, SearchParams
+
+
+def _pad_pow2(x: np.ndarray, axis: int = 0):
+    """Pad axis 0 to the next power of two by repeating row 0."""
+    n = x.shape[axis]
+    p = 1
+    while p < n:
+        p *= 2
+    if p == n:
+        return x, n
+    reps = np.repeat(x[:1], p - n, axis=0)
+    return np.concatenate([x, reps], axis=0), n
+
+
+@dataclasses.dataclass
+class Searcher:
+    """Device-resident search context for one built index."""
+
+    index: GMGIndex
+
+    def __post_init__(self):
+        idx = self.index
+        self.vectors = jnp.asarray(idx.vectors)
+        self.attrs = jnp.asarray(idx.attrs)
+        self.intra = jnp.asarray(idx.intra_adj)
+        self.inter = jnp.asarray(idx.inter_adj)
+        self.cell_start = jnp.asarray(idx.cell_start)
+        self.cell_lo = jnp.asarray(idx.cell_lo)
+        self.cell_hi = jnp.asarray(idx.cell_hi)
+        self.centroids = jnp.asarray(idx.centroids)
+        self.hist = jnp.asarray(idx.hist)
+        self.global_adj = jnp.asarray(gmg_mod.global_adjacency(idx))
+
+    # -- device half: one fixed-shape program per (B, knobs) ---------------
+
+    def _traverse(self, q, lo, hi, params: SearchParams, key):
+        cfg = self.index.config
+        ef = params.ef or cfg.search_ef
+        mask = select_mod.select_cells(lo, hi, self.cell_lo, self.cell_hi)
+        T = self.index.n_cells if params.max_cells is None \
+            else min(params.max_cells, self.index.n_cells)
+        if params.use_ordering:
+            order, _ = order_cells(q, self.centroids, self.hist, mask,
+                                   top_m=cfg.top_m_clusters, T=T)
+        else:  # ablation Fig 13(b): grid order
+            S = mask.shape[1]
+            ids = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                   mask.shape)
+            srt = jnp.where(mask, ids, S + 1)
+            order = jnp.sort(srt, axis=1)[:, :T].astype(jnp.int32)
+            order = jnp.where(order <= S - 1, order, -1)
+        return multi_cell_search(
+            self.vectors, self.attrs, self.intra, self.inter,
+            self.cell_start, q, lo, hi, order, key,
+            k=params.k, ef=ef, entry_width=cfg.entry_width,
+            entry_random=cfg.entry_random, entry_beam_l=cfg.entry_beam_l,
+            max_iters=cfg.max_iters_per_cell,
+            use_inter=params.use_inter_edges)
+
+    def _global(self, q, lo, hi, params: SearchParams, key):
+        cfg = self.index.config
+        ef = params.ef or cfg.search_ef
+        return global_search(
+            self.vectors, self.attrs, self.global_adj, q, lo, hi, key,
+            k=params.k, ef=ef, entry_width=cfg.entry_width,
+            max_iters=cfg.max_iters_per_cell * 4)
+
+    def _dense_scan(self, q, lo, hi, inc, k: int):
+        """Exact MXU scan over the selected cells (adaptive low-candidate
+        path). For each cell, the sub-batch of queries selecting it scans
+        the cell's contiguous rows with the predicate folded in as +inf
+        bias; winners merge on the host. Exact within the selected cells.
+        Returns (ids (B, k) internal, d (B, k))."""
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        B = q.shape[0]
+        out_i = np.full((B, k), -1, np.int32)
+        out_d = np.full((B, k), np.inf, np.float32)
+        starts = self.index.cell_start
+
+        @functools.partial(jax.jit, static_argnames=("s", "e", "kk"))
+        def scan_cell(qs, los, his, s: int, e: int, kk: int):
+            vcell = jax.lax.slice_in_dim(self.vectors, s, e)
+            acell = jax.lax.slice_in_dim(self.attrs, s, e)
+            d2 = ops.pairwise_l2(qs, vcell)
+            ok = (acell[None] >= los[:, None, :]) & \
+                 (acell[None] <= his[:, None, :])
+            d2 = jnp.where(ok.all(axis=2), d2, jnp.inf)
+            neg, pos = jax.lax.top_k(-d2, kk)
+            return -neg, pos + s
+
+        for c in range(self.index.n_cells):
+            rows = np.nonzero(inc[:, c])[0]
+            if len(rows) == 0:
+                continue
+            s, e = int(starts[c]), int(starts[c + 1])
+            if e <= s:
+                continue
+            qs, real = _pad_pow2(q[rows])
+            los, _ = _pad_pow2(lo[rows])
+            his, _ = _pad_pow2(hi[rows])
+            kk = min(k, e - s)
+            d_c, i_c = scan_cell(jnp.asarray(qs), jnp.asarray(los),
+                                 jnp.asarray(his), s, e, kk)
+            d_c = np.asarray(d_c[:real])
+            i_c = np.asarray(i_c[:real], np.int32)
+            md = np.concatenate([out_d[rows], d_c], axis=1)
+            mi = np.concatenate([out_i[rows], i_c], axis=1)
+            ordr = np.argsort(md, axis=1)[:, :k]
+            out_d[rows] = np.take_along_axis(md, ordr, axis=1)
+            out_i[rows] = np.take_along_axis(mi, ordr, axis=1)
+        out_i[~np.isfinite(out_d)] = -1
+        return out_i, out_d
+
+    def _estimate_selectivity(self, lo, hi):
+        """(B,) product of per-attribute selectivities from the stored
+        empirical CDF grids (the conjunction-independence estimate)."""
+        qgrid = self.index.attr_quantiles        # (m, n_grid)
+        ng = qgrid.shape[1] - 1
+        est = np.ones(lo.shape[0], np.float64)
+        for j in range(qgrid.shape[0]):
+            cdf_lo = np.searchsorted(qgrid[j], lo[:, j], side="left") / ng
+            cdf_hi = np.searchsorted(qgrid[j], hi[:, j], side="right") / ng
+            est *= np.clip(cdf_hi - cdf_lo, 0.0, 1.0)
+        return est
+
+    # -- host half: adaptive split + id mapping ----------------------------
+
+    def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+               params: Optional[SearchParams] = None):
+        """Returns (ids (B, k) i64 original ids [-1 pad], dists (B, k))."""
+        params = params or SearchParams()
+        q = np.asarray(q, np.float32)
+        lo = np.asarray(lo, np.float32)
+        hi = np.asarray(hi, np.float32)
+        B = q.shape[0]
+        key = jax.random.PRNGKey(params.seed)
+
+        cfg = self.index.config
+        inc = select_mod.incidence_numpy(lo, hi, self.index.cell_lo,
+                                         self.index.cell_hi)
+        sizes = np.diff(self.index.cell_start)
+        cand_rows = inc @ sizes                 # rows inside selected cells
+        if params.adaptive_global:
+            use_global = inc.sum(axis=1) > cfg.s_thre
+        else:
+            use_global = np.zeros(B, bool)
+        # adaptive dense path (Alg. 2 extended; DESIGN.md §2): tiny
+        # candidate sets are cheaper as one exact MXU pass than any walk.
+        use_dense = (cand_rows <= cfg.dense_threshold) \
+            if cfg.dense_threshold else np.zeros(B, bool)
+        # selectivity-aware extension (beyond paper, §Perf G2): a query
+        # whose *conjunction* over all m attributes is estimated to leave
+        # very few in-range rows starves graph traversal — scan instead,
+        # regardless of how many grid cells its partitioned dims span.
+        if cfg.dense_threshold and self.index.attr_quantiles is not None:
+            est = self._estimate_selectivity(lo, hi)
+            est_rows = est * self.index.n
+            use_dense |= ((est_rows <= max(8 * params.k, 64))
+                          & (cand_rows <= 16 * cfg.dense_threshold))
+        use_dense &= cand_rows > 0
+        use_global &= ~use_dense
+
+        out_i = np.full((B, params.k), -1, np.int64)
+        out_d = np.full((B, params.k), np.inf, np.float32)
+
+        dense_rows = np.nonzero(use_dense)[0]
+        if len(dense_rows) > 0:
+            ids, d = self._dense_scan(q[dense_rows], lo[dense_rows],
+                                      hi[dense_rows], inc[dense_rows],
+                                      params.k)
+            orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
+            out_i[dense_rows] = orig
+            out_d[dense_rows] = d
+
+        for flag, fn in ((False, self._traverse), (True, self._global)):
+            sel = np.nonzero((use_global == flag) & ~use_dense)[0]
+            if len(sel) == 0:
+                continue
+            qs, real = _pad_pow2(q[sel])
+            los, _ = _pad_pow2(lo[sel])
+            his, _ = _pad_pow2(hi[sel])
+            ids, d = fn(jnp.asarray(qs), jnp.asarray(los), jnp.asarray(his),
+                        params, key)
+            ids = np.asarray(ids[:real])
+            d = np.asarray(d[:real])
+            orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
+            out_i[sel] = orig
+            out_d[sel] = d
+        return out_i, out_d
+
+
+def ground_truth(vectors: np.ndarray, attrs: np.ndarray, q: np.ndarray,
+                 lo: np.ndarray, hi: np.ndarray, k: int,
+                 chunk: int = 65536):
+    """Exact RFNNS answer set for recall measurement (original ids)."""
+    from repro.core.baselines import FlatBaseline, prefilter_search
+    base = FlatBaseline(vectors=np.asarray(vectors, np.float32),
+                        attrs=np.asarray(attrs, np.float32))
+    return prefilter_search(base, q, lo, hi, k, chunk=chunk)
+
+
+def recall_at_k(result_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean |result ∩ truth| / |truth| over queries (paper's Recall)."""
+    total, hit = 0, 0
+    for r, t in zip(result_ids, true_ids):
+        t = set(int(x) for x in t if x >= 0)
+        if not t:
+            continue
+        r = set(int(x) for x in r if x >= 0)
+        hit += len(r & t)
+        total += len(t)
+    return hit / max(total, 1)

@@ -1,0 +1,56 @@
+"""Cell selection (paper Section 4.1, Alg. 2 lines 2-4).
+
+A query's range box intersects a grid cell iff, per partitioned attribute,
+``lo < cell_hi`` and ``hi >= cell_lo``. The paper evaluates this with one
+GPU thread per cell; on TPU it is a single vectorized (B, S, p) predicate
+over the cell-box tensors — no per-cell control flow at all.
+
+Also provides the query->cell incidence matrix used by the out-of-core
+scheduler (Section 5.2) and the adaptive-path split (|C_Q| vs S_thre).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def select_cells(lo, hi, cell_lo, cell_hi):
+    """lo/hi: (B, m) query ranges; cell_lo/cell_hi: (S, p) grid boxes.
+
+    Only the first p attribute columns participate (the partitioned
+    attributes); the remaining m-p predicates are enforced during
+    traversal. Returns bool (B, S) incidence.
+    """
+    p = cell_lo.shape[1]
+    l = lo[:, None, :p]
+    r = hi[:, None, :p]
+    inter = (l < cell_hi[None]) & (r >= cell_lo[None])
+    return inter.all(axis=2)
+
+
+@jax.jit
+def count_selected(mask):
+    """|C_Q| per query (B,)."""
+    return mask.sum(axis=1).astype(jnp.int32)
+
+
+def incidence_numpy(lo: np.ndarray, hi: np.ndarray, cell_lo: np.ndarray,
+                    cell_hi: np.ndarray) -> np.ndarray:
+    """Host-side incidence for the out-of-core scheduler (bool (B, S))."""
+    p = cell_lo.shape[1]
+    l = lo[:, None, :p]
+    r = hi[:, None, :p]
+    inter = (l < cell_hi[None]) & (r >= cell_lo[None])
+    return inter.all(axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("s_thre",))
+def adaptive_split(mask, *, s_thre: int):
+    """Alg. 2 lines 5-8 split: lanes whose |C_Q| exceeds S_thre take the
+    global-graph path. Returns bool (B,) ``use_global``."""
+    return count_selected(mask) > s_thre

@@ -1,0 +1,357 @@
+"""Batched sequential cell traversal (paper Section 4.3, Alg. 4).
+
+GPU -> TPU mapping (DESIGN.md §2): the paper runs one thread block per
+query with warp-parallel distance evaluation. Here a *batch* of queries is
+one jitted program; each query is a lane of fixed-shape state and every
+step is a vectorized op over the whole batch — masked lanes replace warp
+divergence. One expansion step = one gather-distance kernel call over the
+frontier's neighbor rows (the scalar-prefetch DMA pattern), one predicate
+check, and two top-k merges (navigation beam / in-range result pool).
+
+Differences from Alg. 4, documented:
+- The paper's R (size-k, mixed in/out-of-range) + recCand (in-range
+  evictions) pair is replaced by a navigation beam (size ef, unfiltered)
+  and an in-range result pool (size k). The pool ends up holding exactly
+  top-k of *all visited in-range nodes*, which is a superset-quality
+  equivalent of R∪recCand (Lemma: every in-range node Alg. 4 retains was
+  visited; our pool keeps the k best visited in-range nodes).
+- Cand admission is top-ef merge rather than "closer than furthest in R";
+  with ef >= k this only widens the frontier.
+
+Three entry points share the engine:
+  multi_cell_search         — in-core Alg. 4 on fp32 vectors
+  global_search             — the adaptive high-selectivity path
+  multi_cell_search_seeded  — out-of-core batch variant: int8 resident
+                              vectors, batch-local graph with a
+                              local->global ``rows`` indirection, beam
+                              seeded from the carried candidate pool.
+
+State per query lane:
+  beam_ids/beam_d/expanded  (B, ef)  — navigation frontier, ascending
+  res_ids/res_d             (B, k)   — in-range results, ascending
+  visited                   (B, n)   — scored-marker (bool)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class TraversalState(NamedTuple):
+    beam_ids: jax.Array
+    beam_d: jax.Array
+    expanded: jax.Array
+    res_ids: jax.Array
+    res_d: jax.Array
+    visited: jax.Array
+    key: jax.Array
+
+
+def _dedup_inf(ids, d):
+    """Mask duplicate ids within each row to +inf (keeps first by id-sort)."""
+    order = jnp.argsort(ids, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((ids.shape[0], 1), bool), ids_s[:, 1:] == ids_s[:, :-1]],
+        axis=1)
+    return ids_s, jnp.where(dup, jnp.inf, d_s)
+
+
+def _topk_merge(ids_a, d_a, ids_b, d_b, k, extra_a=None, extra_b=None):
+    """Row-wise best-k of two (already internally deduped) sets."""
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    out_ids = jnp.take_along_axis(ids, pos, axis=1)
+    if extra_a is None:
+        return out_ids, -neg
+    extra = jnp.concatenate([extra_a, extra_b], axis=1)
+    return out_ids, -neg, jnp.take_along_axis(extra, pos, axis=1)
+
+
+def _in_range(attrs_rows, lo, hi):
+    """attrs_rows (B, nb, m) vs lo/hi (B, m) -> bool (B, nb)."""
+    ok = (attrs_rows >= lo[:, None, :]) & (attrs_rows <= hi[:, None, :])
+    return ok.all(axis=2)
+
+
+class _Tables(NamedTuple):
+    """Distance/attribute lookup context.
+
+    gather_d2(q, gids) -> (B, nb) squared distances (+inf for gids < 0);
+    attrs: (n_global, m); rows: optional (n_local,) local->global map
+    (None = ids are already global); packed: bit-packed visited map
+    (uint32 words, 8x smaller than TPU byte-wide bools — the visited map
+    is the dominant per-query state at fleet scale, see EXPERIMENTS.md
+    §Perf garfield iteration).
+    """
+    gather_d2: object
+    attrs: jax.Array
+    rows: jax.Array | None
+    packed: bool = False
+
+
+def _visited_init(B: int, n: int, packed: bool):
+    if packed:
+        return jnp.zeros((B, (n + 31) // 32), jnp.uint32)
+    return jnp.zeros((B, n), bool)
+
+
+def _score(tab: _Tables, lo, hi, q, visited, cand_ids, active):
+    """Distance + predicate + visited bookkeeping for a candidate batch.
+
+    cand_ids are *local* ids (== global when tab.rows is None). Returns
+    (nav_d, res_d, visited'): nav_d has +inf for invalid/visited ids;
+    res_d additionally +inf for out-of-range points.
+    """
+    B = cand_ids.shape[0]
+    safe = jnp.maximum(cand_ids, 0)
+    valid = (cand_ids >= 0) & active[:, None]
+
+    gids = safe if tab.rows is None else tab.rows[safe]
+    d2 = tab.gather_d2(q, jnp.where(valid, gids, -1))
+    rows_b = jnp.arange(B, dtype=jnp.int32)[:, None]
+    if tab.packed:
+        widx = safe >> 5
+        bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+        seen = (visited[rows_b, widx] & bit) != 0
+        nb = cand_ids.shape[1]
+
+        def set_bit(j, vis):
+            w = vis[rows_b[:, 0], widx[:, j]]
+            add = jnp.where(valid[:, j], bit[:, j], jnp.uint32(0))
+            return vis.at[rows_b[:, 0], widx[:, j]].set(w | add)
+        visited = jax.lax.fori_loop(0, nb, set_bit, visited)
+    else:
+        seen = visited[rows_b, safe]
+        visited = visited.at[rows_b, safe].max(valid)
+    nav_d = jnp.where(valid & ~seen, d2, jnp.inf)
+
+    a_rows = tab.attrs[gids]                                # (B, nb, m)
+    ok = _in_range(a_rows, lo, hi)
+    res_d = jnp.where(ok, nav_d, jnp.inf)
+    return nav_d, res_d, visited
+
+
+def _expand_loop(state: TraversalState, q, tab: _Tables, adj, lo, hi,
+                 max_iters: int):
+    """Best-first expansion until every lane's beam is exhausted (Alg. 4
+    lines 4-13), capped at max_iters."""
+    ef = state.beam_ids.shape[1]
+    B = q.shape[0]
+    rows_b = jnp.arange(B, dtype=jnp.int32)[:, None]
+
+    def has_work(st: TraversalState):
+        return jnp.any(~st.expanded & jnp.isfinite(st.beam_d))
+
+    def cond(carry):
+        it, st = carry
+        return (it < max_iters) & has_work(st)
+
+    def body(carry):
+        it, st = carry
+        # 1. nearest unexpanded beam slot per lane
+        cand_d = jnp.where(st.expanded, jnp.inf, st.beam_d)
+        slot = jnp.argmin(cand_d, axis=1)                   # (B,)
+        best_d = jnp.take_along_axis(cand_d, slot[:, None], axis=1)[:, 0]
+        lane_active = jnp.isfinite(best_d)
+        u = jnp.take_along_axis(st.beam_ids, slot[:, None], axis=1)[:, 0]
+
+        # 2. mark expanded
+        expanded = st.expanded.at[rows_b[:, 0], slot].max(lane_active)
+
+        # 3. gather fixed-degree neighbor row (the DMA-chase kernel)
+        nbrs = adj[jnp.maximum(u, 0)]                       # (B, deg)
+        nbrs = jnp.where(((u >= 0) & lane_active)[:, None], nbrs, -1)
+
+        nav_d, res_d, visited = _score(
+            tab, lo, hi, q, st.visited, nbrs, lane_active)
+
+        # 4. merge into navigation beam (carry expanded flags) and results
+        nbrs_s, nav_s = _dedup_inf(nbrs, nav_d)
+        _, res_s = _dedup_inf(nbrs, res_d)
+        new_ids, new_d, new_exp = _topk_merge(
+            st.beam_ids, st.beam_d, nbrs_s, nav_s, ef,
+            expanded, jnp.zeros_like(nbrs_s, dtype=bool))
+        r_ids, r_d = _topk_merge(st.res_ids, st.res_d, nbrs_s, res_s,
+                                 st.res_ids.shape[1])
+        st = TraversalState(new_ids, new_d, new_exp, r_ids, r_d,
+                            visited, st.key)
+        return it + 1, st
+
+    _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+    return state
+
+
+def _seed_beam(state: TraversalState, q, tab: _Tables, lo, hi,
+               cand_ids, active, entry_width: int):
+    """Score entry candidates, reset the beam to the best entry_width of
+    them (paper: 'Cand <- the d nearest nodes in CandEntry'), merge
+    in-range entries into the result pool. Inactive lanes keep state and
+    stay fully expanded."""
+    ef = state.beam_ids.shape[1]
+    B = q.shape[0]
+    nav_d, res_d, visited = _score(
+        tab, lo, hi, q, state.visited, cand_ids, active)
+    ids_s, nav_s = _dedup_inf(cand_ids, nav_d)
+    _, res_s = _dedup_inf(cand_ids, res_d)
+
+    neg, pos = jax.lax.top_k(-nav_s, min(entry_width, nav_s.shape[1]))
+    ent_ids = jnp.take_along_axis(ids_s, pos, axis=1)
+    ent_d = -neg
+    pad = ef - ent_ids.shape[1]
+    if pad > 0:
+        ent_ids = jnp.pad(ent_ids, ((0, 0), (0, pad)), constant_values=-1)
+        ent_d = jnp.pad(ent_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+
+    beam_ids = jnp.where(active[:, None], ent_ids, state.beam_ids)
+    beam_d = jnp.where(active[:, None], ent_d, state.beam_d)
+    expanded = jnp.where(active[:, None], ~jnp.isfinite(ent_d),
+                         jnp.ones((B, ef), bool))
+
+    r_ids, r_d = _topk_merge(state.res_ids, state.res_d, ids_s, res_s,
+                             state.res_ids.shape[1])
+    return TraversalState(beam_ids, beam_d, expanded, r_ids, r_d,
+                          visited, state.key)
+
+
+def _init_state(B: int, n: int, k: int, ef: int, key,
+                packed: bool = False) -> TraversalState:
+    return TraversalState(
+        beam_ids=jnp.full((B, ef), -1, jnp.int32),
+        beam_d=jnp.full((B, ef), jnp.inf, jnp.float32),
+        expanded=jnp.ones((B, ef), bool),
+        res_ids=jnp.full((B, k), -1, jnp.int32),
+        res_d=jnp.full((B, k), jnp.inf, jnp.float32),
+        visited=_visited_init(B, n, packed),
+        key=key,
+    )
+
+
+def _cell_itinerary_loop(state, q, tab, adj, inter_adj, cell_start,
+                         lo, hi, cell_order, *, entry_width, entry_random,
+                         entry_beam_l, max_iters, use_inter):
+    """Shared Alg. 4 outer loop over an ordered cell itinerary."""
+    B = q.shape[0]
+    T = cell_order.shape[1]
+
+    def cell_body(t, state: TraversalState):
+        c = cell_order[:, t]                                 # (B,)
+        active = c >= 0
+        safe_c = jnp.maximum(c, 0)
+        start = cell_start[safe_c]
+        end = cell_start[safe_c + 1]
+        nonempty = end > start
+
+        # --- entry candidates: inter-cell hops + random (Alg. 4 l14-16)
+        ent_key = jax.random.fold_in(state.key, t)
+        n_rand = entry_random if use_inter else entry_width
+        rnd = jax.random.randint(
+            ent_key, (B, n_rand), start[:, None],
+            jnp.maximum(end, start + 1)[:, None]).astype(jnp.int32)
+        rnd = jnp.where((nonempty & active)[:, None], rnd, -1)
+
+        if use_inter:
+            hop_src = state.beam_ids[:, :entry_beam_l]       # (B, L)
+            hop = inter_adj[jnp.maximum(hop_src, 0), safe_c[:, None]]
+            hop = jnp.where((hop_src >= 0)[:, :, None], hop, -1)
+            hop = hop.reshape(B, -1)
+            cand = jnp.concatenate([hop, rnd], axis=1)
+        else:
+            cand = rnd
+        cand = jnp.where(active[:, None], cand, -1)
+
+        state = _seed_beam(state, q, tab, lo, hi, cand,
+                           active & nonempty, entry_width)
+        state = _expand_loop(state, q, tab, adj, lo, hi, max_iters)
+        return state
+
+    return jax.lax.fori_loop(0, T, cell_body, state)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "entry_width", "entry_random",
+                     "entry_beam_l", "max_iters", "use_inter"))
+def multi_cell_search(vectors, attrs, adj, inter_adj, cell_start,
+                      q, lo, hi, cell_order, key, *,
+                      k: int, ef: int, entry_width: int, entry_random: int,
+                      entry_beam_l: int, max_iters: int,
+                      use_inter: bool = True):
+    """Sequential cell-by-cell traversal (Alg. 4), in-core fp32.
+
+    vectors (n, dim) | attrs (n, m) | adj (n, deg) | inter_adj (n, S, l)
+    cell_start (S+1,) | q (B, dim) | lo/hi (B, m)
+    cell_order (B, T) int32: per-lane ordered cell ids, -1 padded.
+    Returns (res_ids (B, k) int32 internal ids [-1 pad], res_d (B, k)).
+    """
+    B, n = q.shape[0], vectors.shape[0]
+    tab = _Tables(
+        gather_d2=lambda qq, gids: ops.gather_l2(qq, vectors, gids),
+        attrs=attrs, rows=None)
+    state = _init_state(B, n, k, ef, key)
+    state = _cell_itinerary_loop(
+        state, q, tab, adj, inter_adj, cell_start, lo, hi, cell_order,
+        entry_width=entry_width, entry_random=entry_random,
+        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=use_inter)
+    return state.res_ids, state.res_d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "entry_width", "entry_random",
+                     "entry_beam_l", "max_iters", "packed_visited"))
+def multi_cell_search_seeded(vq, vscale, attrs, adj, inter_adj, cell_start,
+                             rows, q, lo, hi, cell_order, seed_ids, key, *,
+                             k: int, ef: int, entry_width: int,
+                             entry_random: int, entry_beam_l: int,
+                             max_iters: int, packed_visited: bool = False):
+    """Out-of-core batch variant (paper Section 5.1 step 5).
+
+    Differences from multi_cell_search: distances come from the *resident
+    int8* table (vq (n_glob, dim) i8 + vscale (n_glob,)), graph ids are
+    batch-local with ``rows`` (n_local,) mapping local->global, and the
+    beam starts from ``seed_ids`` (B, n_seed) — the carried global
+    candidate pool remapped into this batch (paper's cross-batch entry
+    propagation). Returns batch-local ids.
+    """
+    B, n_local = q.shape[0], rows.shape[0]
+    tab = _Tables(
+        gather_d2=lambda qq, gids: ops.gather_l2_q(qq, vq, vscale, gids),
+        attrs=attrs, rows=rows, packed=packed_visited)
+    state = _init_state(B, n_local, k, ef, key, packed=packed_visited)
+    # seed from the carried pool (may be empty: all -1)
+    state = _seed_beam(state, q, tab, lo, hi, seed_ids,
+                       jnp.ones((B,), bool), entry_width)
+    state = _cell_itinerary_loop(
+        state, q, tab, adj, inter_adj, cell_start, lo, hi, cell_order,
+        entry_width=entry_width, entry_random=entry_random,
+        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=True)
+    return state.res_ids, state.res_d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "entry_width", "max_iters"))
+def global_search(vectors, attrs, adj, q, lo, hi, key, *,
+                  k: int, ef: int, entry_width: int, max_iters: int):
+    """Adaptive high-selectivity path (Alg. 2 lines 5-8): one greedy
+    traversal over the whole graph (adj = intra ++ flattened inter edges),
+    predicate enforced on the result pool only."""
+    B, n = q.shape[0], vectors.shape[0]
+    tab = _Tables(
+        gather_d2=lambda qq, gids: ops.gather_l2(qq, vectors, gids),
+        attrs=attrs, rows=None)
+    state = _init_state(B, n, k, ef, key)
+    rnd = jax.random.randint(key, (B, entry_width), 0, n).astype(jnp.int32)
+    active = jnp.ones((B,), bool)
+    state = _seed_beam(state, q, tab, lo, hi, rnd, active, entry_width)
+    state = _expand_loop(state, q, tab, adj, lo, hi, max_iters)
+    return state.res_ids, state.res_d

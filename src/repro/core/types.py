@@ -1,0 +1,148 @@
+"""Core datatypes for the GMG index (paper Section 3).
+
+Layout invariant: after build, objects are *reordered so each cell is a
+contiguous id range* (internal ids). This turns every per-cell operation —
+graph slicing, out-of-core streaming, predicate bias construction — into a
+dense slice, which is the whole point of the paper's "static adjacency,
+coalesced access" design and maps 1:1 onto TPU-friendly dense rows.
+``perm`` maps internal -> original ids for returning results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GMGConfig:
+    """Build + search hyperparameters (paper defaults in parens)."""
+
+    # --- partitioning (Section 3.1) ---
+    seg_per_attr: Sequence[int] = (4, 4)   # S_i per partitioned attr; S = prod
+    # p = len(seg_per_attr) most-selective attributes are partitioned;
+    # remaining attributes are filter-only (paper: p <= 4).
+
+    # --- graph (Section 3.1/3.2) ---
+    intra_degree: int = 16                 # d (16; 32 for DBLP/YouTube)
+    inter_degree: int = 2                  # l (2)
+    build_ef: int = 100                    # EF during construction (100)
+    exact_build_threshold: int = 16384     # cells <= this use exact MXU kNN
+    nn_descent_iters: int = 10
+    prune_alpha: float = 1.2               # Vamana-style occlusion prune
+
+    # --- ordering (Section 4.2) ---
+    n_clusters: int = 64                   # k-means clusters for H
+    top_m_clusters: int = 8                # clusters voted per query
+    kmeans_iters: int = 10
+
+    # --- traversal (Section 4.3) ---
+    search_ef: int = 64                    # candidate pool width
+    entry_width: int = 16                  # entries kept per cell hop
+    entry_random: int = 4                  # random entries added per hop
+    entry_beam_l: int = 8                  # L: beam rows expanded via inter
+    max_iters_per_cell: int = 96           # expansion cap per cell
+    s_thre_frac: float = 0.5               # S_thre = frac * S (Section 4.1)
+    dense_threshold: int = 8192            # exact-scan path when the
+    # selected cells hold fewer rows than this (TPU adaptation: below this
+    # size one MXU pass beats any graph walk; see DESIGN.md §2). 0 = off.
+
+    # --- out-of-core (Section 5) ---
+    quantize: bool = True                  # int8 resident vectors
+    batch_cells: int = 4                   # b: cells per streamed batch
+    rerank_mult: int = 2                   # exact re-rank pool = mult * k
+
+    @property
+    def p(self) -> int:
+        return len(self.seg_per_attr)
+
+    @property
+    def n_cells(self) -> int:
+        return int(np.prod(self.seg_per_attr))
+
+    @property
+    def s_thre(self) -> int:
+        return max(1, int(round(self.s_thre_frac * self.n_cells)))
+
+
+@dataclasses.dataclass
+class GMGIndex:
+    """The built index. All arrays are host numpy; device placement is the
+    responsibility of the search path (in-core: everything on device;
+    out-of-core: only quantized vectors + attrs resident, graph streamed).
+    """
+
+    config: GMGConfig
+
+    # data (internal order: cell-contiguous)
+    vectors: np.ndarray          # (n, dim) f32
+    attrs: np.ndarray            # (n, m) f32
+    perm: np.ndarray             # (n,) i64: internal -> original id
+
+    # grid
+    seg_bounds: list             # per partitioned attr: (S_i + 1,) f32 edges
+    cell_of: np.ndarray          # (n,) i32
+    cell_start: np.ndarray       # (S + 1,) i32 CSR offsets
+    cell_lo: np.ndarray          # (S, p) f32 cell box lower edges
+    cell_hi: np.ndarray          # (S, p) f32 cell box upper edges
+
+    # graph
+    intra_adj: np.ndarray        # (n, d) i32 global internal ids, -1 pad
+    inter_adj: np.ndarray        # (n, S, l) i32, own-cell column = -1
+
+    # ordering (Section 4.2)
+    centroids: np.ndarray        # (n_clusters, dim) f32
+    hist: np.ndarray             # (S, n_clusters) f32 counts
+
+    # per-attribute empirical CDF (m, n_grid) — selectivity estimation
+    # for the adaptive dense path (beyond-paper; EXPERIMENTS §Perf G2)
+    attr_quantiles: Optional[np.ndarray] = None
+
+    # quantized resident copy (Section 5.1)
+    vq: Optional[np.ndarray] = None       # (n, dim) int8
+    vscale: Optional[np.ndarray] = None   # (n,) f32
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cell_start) - 1
+
+    def cell_slice(self, c: int) -> slice:
+        return slice(int(self.cell_start[c]), int(self.cell_start[c + 1]))
+
+    def nbytes(self) -> dict:
+        """Index-size accounting mirroring the paper's Table 2 columns."""
+        graph = self.intra_adj.nbytes + self.inter_adj.nbytes
+        order = self.centroids.nbytes + self.hist.nbytes
+        grid = sum(b.nbytes for b in self.seg_bounds) + self.cell_start.nbytes
+        quant = (self.vq.nbytes + self.vscale.nbytes) if self.vq is not None else 0
+        return {
+            "graph_bytes": int(graph),
+            "ordering_bytes": int(order),
+            "grid_bytes": int(grid),
+            "quantized_bytes": int(quant),
+            "index_bytes": int(graph + order + grid),
+            "vector_bytes": int(self.vectors.nbytes),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Per-query-batch knobs (overrides config defaults where sensible)."""
+
+    k: int = 10
+    ef: Optional[int] = None           # None -> config.search_ef
+    max_cells: Optional[int] = None    # cap on traversed cells (None = all)
+    use_ordering: bool = True          # ablation: Fig 13(b)
+    use_inter_edges: bool = True       # ablation: Fig 13(a)
+    adaptive_global: bool = True       # Section 4.1 adaptive path
+    seed: int = 0

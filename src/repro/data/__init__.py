@@ -1,0 +1,2 @@
+from repro.data.datasets import (  # noqa: F401
+    make_dataset, make_queries, DATASETS, Workload)

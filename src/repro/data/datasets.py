@@ -1,0 +1,139 @@
+"""Synthetic datasets + range-query workloads (paper Section 6.1).
+
+The paper's corpora are SIFT/Deep (vectors + *uniform random* synthetic
+attributes) and DBLP/YouTube (real vectors + *skewed* numeric attributes:
+year, counts, durations). At repo scale we synthesize both regimes with
+matched statistics:
+
+- ``uniform``  — i.i.d. Gaussian-mixture vectors (so ANN structure exists;
+                 pure iid Gaussian has no neighbors to find), attributes
+                 U[0, 1).
+- ``skewed``   — same vectors; attributes drawn per-column from the
+                 DBLP/YouTube shapes: discrete years (truncated geometric —
+                 recent years dominate), log-normal counts (views/citations
+                 style heavy tail), correlated-with-cluster column (time
+                 correlates with content drift).
+
+Query ranges follow the paper: per attribute an independent selectivity
+s ~ U[s_min, s_max] (paper: 1%-100%) realized *by empirical quantile*, so
+per-attribute selectivity is exact regardless of skew; fixed-width modes
+(1/64, 1/16, 1/4) reproduce Figure 8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+DATASETS = {
+    # name: (dim, attr regime, #attrs) — scaled-down stand-ins, same shapes
+    "deep":    dict(dim=96,  regime="uniform", m=4),
+    "sift":    dict(dim=128, regime="uniform", m=4),
+    "dblp":    dict(dim=768, regime="skewed",  m=4),
+    "youtube": dict(dim=1024, regime="skewed", m=4),
+}
+
+
+def _mixture_vectors(n: int, dim: int, n_modes: int, rng,
+                     intrinsic_dim: int = 12) -> np.ndarray:
+    """Low-intrinsic-dimension Gaussian mixture embedded in `dim`.
+
+    Real ANN corpora (SIFT, deep descriptors, text embeddings) live on
+    low-ID manifolds (~10-20), which is what makes graph ANNS work; an
+    iid high-dim Gaussian is the degenerate worst case (distance
+    concentration makes all points near-equidistant and graphs
+    non-navigable). We sample a cluster mixture in a latent space and
+    project through a random linear map, plus small ambient noise."""
+    centers = rng.normal(size=(n_modes, intrinsic_dim)).astype(np.float32)
+    assign = rng.integers(0, n_modes, size=n)
+    z = centers[assign] + 0.6 * rng.normal(
+        size=(n, intrinsic_dim)).astype(np.float32)
+    lift = rng.normal(size=(intrinsic_dim, dim)).astype(np.float32)
+    lift /= np.sqrt(intrinsic_dim)
+    v = z @ lift + 0.05 * rng.normal(size=(n, dim)).astype(np.float32)
+    return v.astype(np.float32), assign
+
+
+def _skewed_attrs(n: int, m: int, assign: np.ndarray, rng) -> np.ndarray:
+    """DBLP/YouTube-shaped attribute columns."""
+    cols = []
+    for j in range(m):
+        kind = j % 3
+        if kind == 0:     # year: truncated geometric over ~30 values
+            y = 2025 - np.minimum(rng.geometric(0.15, size=n) - 1, 29)
+            cols.append(y.astype(np.float32))
+        elif kind == 1:   # counts: heavy-tailed log-normal
+            cols.append(np.exp(rng.normal(2.0, 1.5, size=n)).astype(np.float32))
+        else:             # content-correlated: cluster id + noise
+            cols.append((assign + rng.normal(0, 0.5, size=n)).astype(np.float32))
+    return np.stack(cols, axis=1)
+
+
+def make_dataset(name: str, n: int, seed: int = 0,
+                 n_modes: int = 64, m: int | None = None):
+    """Returns (vectors (n, dim) f32, attrs (n, m) f32)."""
+    spec = DATASETS[name]
+    rng = np.random.default_rng(seed)
+    v, assign = _mixture_vectors(n, spec["dim"], n_modes, rng)
+    m = m or spec["m"]
+    if spec["regime"] == "uniform":
+        attrs = rng.uniform(size=(n, m)).astype(np.float32)
+    else:
+        attrs = _skewed_attrs(n, m, assign, rng)
+    return v, attrs
+
+
+@dataclasses.dataclass
+class Workload:
+    q: np.ndarray      # (B, dim) query vectors
+    lo: np.ndarray     # (B, m) range lows  (-inf for unconstrained attrs)
+    hi: np.ndarray     # (B, m) range highs (+inf for unconstrained attrs)
+    sel: np.ndarray    # (B,) product of per-attribute selectivities
+
+
+def make_queries(vectors: np.ndarray, attrs: np.ndarray, n_queries: int,
+                 n_filtered: int, seed: int = 0,
+                 sel_range: tuple[float, float] = (0.01, 1.0),
+                 fixed_width: float | None = None,
+                 attr_subset: Sequence[int] | None = None) -> Workload:
+    """Range-filtered query workload.
+
+    n_filtered: how many attributes carry predicates (paper's m ∈ {1,2,4});
+    fixed_width: if set (e.g. 1/16), every predicate spans exactly that
+    quantile width (Figure 8 mode); otherwise widths ~ U[sel_range].
+    attr_subset: which attribute columns carry predicates (default: the
+    first n_filtered) — Figure 10's partial-attribute mode.
+    """
+    rng = np.random.default_rng(seed + 1)
+    n, dim = vectors.shape
+    m = attrs.shape[1]
+    cols = list(attr_subset) if attr_subset is not None \
+        else list(range(n_filtered))
+    assert len(cols) == n_filtered <= m
+
+    # query vectors: perturbed base points (paper queries come from held-out
+    # files of the same distribution)
+    base = vectors[rng.integers(0, n, size=n_queries)]
+    q = base + rng.normal(0, 0.3, size=base.shape).astype(np.float32)
+
+    lo = np.full((n_queries, m), -np.inf, np.float32)
+    hi = np.full((n_queries, m), np.inf, np.float32)
+    sel = np.ones(n_queries, np.float64)
+    qs = np.linspace(0.0, 1.0, 1025)
+    for j in cols:
+        quant = np.quantile(attrs[:, j].astype(np.float64), qs)
+        if fixed_width is not None:
+            w = np.full(n_queries, fixed_width)
+        else:
+            w = rng.uniform(*sel_range, size=n_queries)
+        start = rng.uniform(0, 1, size=n_queries) * (1 - w)
+        l_idx = np.clip((start * 1024).astype(int), 0, 1024)
+        r_idx = np.clip(((start + w) * 1024).astype(int), 0, 1024)
+        lo[:, j] = quant[l_idx]
+        hi[:, j] = quant[r_idx]
+        # realized per-attribute selectivity (ties can inflate it)
+        sel *= np.maximum((r_idx - l_idx) / 1024.0, 1e-6)
+    return Workload(q=q.astype(np.float32), lo=lo, hi=hi,
+                    sel=sel.astype(np.float32))

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for Garfield's compute hot spots.
+
+Four kernels, each with an explicit-BlockSpec `pl.pallas_call` implementation
+targeting TPU v5e (validated on CPU via ``interpret=True``), a pure-jnp oracle
+in :mod:`repro.kernels.ref`, and a jit'd dispatch wrapper in
+:mod:`repro.kernels.ops`:
+
+- ``pairwise_l2``    — MXU-tiled squared-L2 distance matrix (paper: warp-per-
+                       distance -> systolic matmul ``|q|^2 - 2 q.V^T + |v|^2``).
+- ``fused_topk``     — distance + running bitonic top-k merge, never
+                       materializing the full (B, N) matrix (paper: bitonic
+                       sort in registers -> VMEM compare-exchange network).
+- ``int8_distance``  — symmetric-quantized int8 distance on the int8 MXU path
+                       (paper: quantized resident vectors in HBM).
+- ``gather_distance``— scalar-prefetch row gather + distance (paper: the
+                       traversal's neighbor-expansion inner loop).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.config import get_mode, set_mode  # noqa: F401

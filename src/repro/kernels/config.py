@@ -1,0 +1,55 @@
+"""Kernel dispatch mode.
+
+``auto``   — Pallas (compiled) on TPU, pure-jnp reference on CPU/GPU. This is
+             the production default: the reference path *is* XLA-fused matmul
+             code, so CPU test runs stay fast, while TPU runs hit the Pallas
+             kernels.
+``pallas`` — force Pallas. On non-TPU backends this uses ``interpret=True``,
+             executing the kernel body op-by-op in Python — bit-accurate for
+             validation, slow for large shapes. Kernel tests use this.
+``ref``    — force the jnp oracle everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_MODE = "auto"
+_VALID = ("auto", "pallas", "ref")
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    if mode not in _VALID:
+        raise ValueError(f"kernel mode {mode!r} not in {_VALID}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def use_pallas() -> bool:
+    """Resolve the current mode to a concrete pallas-or-ref decision."""
+    if _MODE == "pallas":
+        return True
+    if _MODE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def interpret() -> bool:
+    """Pallas interpret flag: interpret everywhere except real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@contextlib.contextmanager
+def mode(m: str):
+    prev = get_mode()
+    set_mode(m)
+    try:
+        yield
+    finally:
+        set_mode(prev)

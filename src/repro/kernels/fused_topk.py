@@ -1,0 +1,104 @@
+"""Fused distance + running top-k kernel.
+
+Computes the k nearest points of each query without ever materializing the
+(B, N) distance matrix: the grid walks N in bn-wide tiles (sequential minor
+axis), each step computing a (bq, bn) distance tile on the MXU, bitonic-
+sorting it in VMEM, and merging it into a running (bq, K) best buffer held
+in VMEM scratch. The GPU paper does this with a register-resident bitonic
+network per warp; on TPU the same network is a static sequence of VPU
+permute+select stages (see sort_network.py).
+
+An additive f32 ``bias`` row ((1, N); 0 = valid, +inf = filtered) applies
+the range predicate inside the kernel, so out-of-range points can never
+enter the candidate buffer — this is the kernel-level form of the paper's
+"enforce F during traversal".
+
+Grid/scratch:
+  grid = (B/bq, N/bn), semantics ("parallel", "arbitrary").
+  scratch: run_vals (bq, K) f32, run_idx (bq, K) i32, persisted across the
+  N axis; flushed to the output block on the last N step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import config
+from repro.kernels.sort_network import bitonic_sort, merge_topk, next_pow2
+
+
+def _kernel(q_ref, v_ref, bias_ref, vals_out, idx_out, run_vals, run_idx,
+            *, K: int, bn: int, n_tiles: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        run_vals[...] = jnp.full(run_vals.shape, jnp.inf, jnp.float32)
+        run_idx[...] = jnp.full(run_idx.shape, -1, jnp.int32)
+
+    q = q_ref[...].astype(jnp.float32)                    # (bq, d)
+    v = v_ref[...].astype(jnp.float32)                    # (bn, d)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    vn = jnp.sum(v * v, axis=-1, keepdims=True)
+    cross = jax.lax.dot_general(
+        q, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    d2 = qn - 2.0 * cross + vn.T                          # (bq, bn)
+    d2 = d2 + bias_ref[...].astype(jnp.float32)           # predicate mask
+
+    gidx = j * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    tile_v, tile_i = bitonic_sort(d2, gidx)               # ascending
+    new_v, new_i = merge_topk(run_vals[...], run_idx[...],
+                              tile_v[:, :K], tile_i[:, :K])
+    run_vals[...] = new_v
+    run_idx[...] = new_i
+
+    @pl.when(j == n_tiles - 1)
+    def _flush():
+        vals_out[...] = run_vals[...]
+        idx_out[...] = run_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn"))
+def fused_topk(q, v, bias, k: int, *, bq: int = 128, bn: int = 128):
+    """q: (B, d), v: (N, d), bias: (1, N) f32. B%bq == N%bn == 0, and the
+    padded-k buffer K = next_pow2(k) must satisfy K <= bn.
+    Returns (vals (B, K) f32 ascending, idx (B, K) i32); caller slices [:k].
+    """
+    B, d = q.shape
+    N, _ = v.shape
+    K = next_pow2(max(k, 2))
+    assert B % bq == 0 and N % bn == 0 and K <= bn, (B, N, k, K, bq, bn)
+    n_tiles = N // bn
+    grid = (B // bq, n_tiles)
+    kern = functools.partial(_kernel, K=K, bn=bn, n_tiles=n_tiles)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, K), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, K), jnp.float32),
+            pltpu.VMEM((bq, K), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=config.interpret(),
+    )(q, v, bias)
+    return vals, idx

@@ -1,0 +1,61 @@
+"""Symmetric-int8 quantized distance kernel (out-of-core resident path).
+
+Garfield keeps only scalar-quantized vectors resident in accelerator memory
+(Section 5.1) and re-ranks survivors on the host with full precision. This
+kernel is the resident-side distance: int8 x int8 dot accumulated in int32
+(the MXU's 8-bit path — 4x the bf16 FLOP rate on v5e), dequantized with
+per-row scales on the VPU.
+
+  dist ~= sq^2 |qq|^2 - 2 sq sv (qq.vq^T) + sv^2 |vq|^2
+
+Tiling matches pairwise_l2: grid (B/bq, N/bn); scales ride along as (bq, 1)
+and (bn, 1) f32 blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import config
+
+
+def _kernel(qq_ref, sq_ref, vq_ref, sv_ref, out_ref):
+    qq = qq_ref[...]                                       # (bq, d) int8
+    vq = vq_ref[...]                                       # (bn, d) int8
+    qi = qq.astype(jnp.int32)
+    vi = vq.astype(jnp.int32)
+    qn = jnp.sum(qi * qi, axis=-1, keepdims=True).astype(jnp.float32)
+    vn = jnp.sum(vi * vi, axis=-1, keepdims=True).astype(jnp.float32)
+    cross = jax.lax.dot_general(
+        qq, vq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    sq = sq_ref[...].astype(jnp.float32)                   # (bq, 1)
+    sv = sv_ref[...].astype(jnp.float32)                   # (bn, 1)
+    out_ref[...] = (sq * sq) * qn - 2.0 * (sq * sv.T) * cross + (sv * sv).T * vn.T
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn"))
+def int8_distance(qq, q_scale, vq, v_scale, *, bq: int = 128, bn: int = 128):
+    """qq: (B, d) i8, q_scale: (B, 1) f32, vq: (N, d) i8, v_scale: (N, 1) f32.
+    B % bq == N % bn == 0. Returns (B, N) f32."""
+    B, d = qq.shape
+    N, _ = vq.shape
+    assert B % bq == 0 and N % bn == 0, (B, N, bq, bn)
+    grid = (B // bq, N // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=config.interpret(),
+    )(qq, q_scale, vq, v_scale)

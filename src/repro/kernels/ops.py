@@ -1,0 +1,127 @@
+"""Public jit'd kernel API with padding + pallas/ref dispatch.
+
+Everything above this layer (core/, models/, benchmarks/) calls these four
+functions; the choice between the Pallas kernel and the jnp oracle is made
+by kernels/config.py (Pallas on TPU, oracle-as-XLA elsewhere, both
+overridable for tests).
+
+Padding contract: callers pass arbitrary (B, N, d); this layer pads
+  d -> multiple of 128 with zeros        (exact: zero dims add 0 distance)
+  B -> multiple of bq by repeating row 0 (sliced away)
+  N -> multiple of bn with +inf bias     (can never win a top-k slot)
+and slices results back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import config, ref
+from repro.kernels import pairwise_l2 as _pl2
+from repro.kernels import fused_topk as _ftk
+from repro.kernels import int8_distance as _i8
+from repro.kernels import gather_distance as _gd
+from repro.kernels.sort_network import next_pow2
+
+
+def _pad_to(x, axis: int, mult: int, value=0.0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def _tile_sizes(B: int, N: int):
+    """Shrink tiles for small problems so padding overhead stays sane.
+
+    TPU note: sublane tiling wants bq a multiple of 8 and bn a multiple of
+    128 for f32; we keep bn=128 always (lane width) and only shrink bq.
+    """
+    bq = 128 if B >= 128 else max(8, next_pow2(B))
+    bn = 128
+    return bq, bn
+
+
+def pairwise_l2(q, v):
+    """(B, d) x (N, d) -> (B, N) f32 squared-L2 distance matrix."""
+    if not config.use_pallas():
+        return ref.pairwise_l2(q, v)
+    B, N = q.shape[0], v.shape[0]
+    bq, bn = _tile_sizes(B, N)
+    qp = _pad_to(_pad_to(q, 1, 128), 0, bq)
+    vp = _pad_to(_pad_to(v, 1, 128), 0, bn)
+    out = _pl2.pairwise_l2(qp, vp, bq=bq, bn=bn)
+    return out[:B, :N]
+
+
+def topk_l2(q, v, k: int, bias=None):
+    """Top-k nearest of v for each q row. Returns (vals (B,k), idx (B,k)).
+
+    bias: optional (N,) f32 additive mask row (+inf filters a point).
+    """
+    B, N = q.shape[0], v.shape[0]
+    k_eff = min(k, N)
+    if not config.use_pallas():
+        vals, idx = ref.fused_topk(q, v, k_eff, bias)
+    else:
+        bq, bn = _tile_sizes(B, N)
+        K = next_pow2(max(k_eff, 2))
+        if K > bn:  # running buffer wider than a tile: fall back
+            vals, idx = ref.fused_topk(q, v, k_eff, bias)
+        else:
+            qp = _pad_to(_pad_to(q, 1, 128), 0, bq)
+            vp = _pad_to(_pad_to(v, 1, 128), 0, bn)
+            b = jnp.zeros((N,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+            bp = _pad_to(b[None, :], 1, bn, value=jnp.inf)
+            vals, idx = _ftk.fused_topk(qp, vp, bp, k_eff, bq=bq, bn=bn)
+            vals, idx = vals[:B, :k_eff], idx[:B, :k_eff]
+    if k_eff < k:  # N < k: pad result so callers get static (B, k)
+        pad_v = jnp.full((B, k - k_eff), jnp.inf, vals.dtype)
+        pad_i = jnp.full((B, k - k_eff), -1, idx.dtype)
+        vals = jnp.concatenate([vals, pad_v], axis=1)
+        idx = jnp.concatenate([idx, pad_i], axis=1)
+    return vals, idx
+
+
+def int8_l2(qq, q_scale, vq, v_scale):
+    """Quantized distance matrix. qq (B,d) i8, vq (N,d) i8, scales (B,)/(N,)."""
+    if not config.use_pallas():
+        return ref.int8_distance(qq, q_scale, vq, v_scale)
+    B, N = qq.shape[0], vq.shape[0]
+    bq, bn = _tile_sizes(B, N)
+    qp = _pad_to(_pad_to(qq, 1, 128), 0, bq)
+    vp = _pad_to(_pad_to(vq, 1, 128), 0, bn)
+    sq = _pad_to(q_scale.reshape(-1, 1).astype(jnp.float32), 0, bq)
+    sv = _pad_to(v_scale.reshape(-1, 1).astype(jnp.float32), 0, bn)
+    out = _i8.int8_distance(qp, sq, vp, sv, bq=bq, bn=bn)
+    return out[:B, :N]
+
+
+def gather_l2(q, table, idx):
+    """Per-query gathered-row distances. idx (B, nb) i32; idx<0 -> +inf."""
+    if not config.use_pallas():
+        return ref.gather_distance(q, table, idx)
+    d = q.shape[1]
+    qp = _pad_to(q, 1, 128)
+    tp = _pad_to(table, 1, 128)
+    return _gd.gather_distance(qp, tp, idx.astype(jnp.int32))
+
+
+def gather_l2_q(q, vq, vscale, idx):
+    """Quantized gathered-row distances (out-of-core resident path).
+    q (B, d) f32, vq (N, d) i8, vscale (N,) f32, idx (B, nb) i32."""
+    if not config.use_pallas():
+        return ref.gather_int8_distance(q, vq, vscale, idx)
+    from repro.kernels import gather_int8 as _gi8
+    qp = _pad_to(q, 1, 128)
+    vp = _pad_to(vq, 1, 128)
+    return _gi8.gather_int8_distance(
+        qp, vp, vscale.reshape(-1, 1).astype(jnp.float32),
+        idx.astype(jnp.int32))

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every kernel. These define correctness.
+
+Each function mirrors its Pallas twin's *math* exactly (same decomposition,
+same accumulation dtype) so kernel tests can assert tight allclose, and each
+is also the fast XLA path on non-TPU backends (see kernels/config.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def pairwise_l2(q, v):
+    """Squared L2 distances. q: (B, d), v: (N, d) -> (B, N) float32.
+
+    Same decomposition as the kernel: |q|^2 - 2 q.V^T + |v|^2, f32 accum.
+    """
+    q = q.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)          # (B, 1)
+    vn = jnp.sum(v * v, axis=-1)[None, :]                # (1, N)
+    cross = jax.lax.dot_general(
+        q, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (B, N)
+    return qn - 2.0 * cross + vn
+
+
+def fused_topk(q, v, k: int, bias=None):
+    """Top-k smallest distances. Returns (vals (B,k) f32, idxs (B,k) i32).
+
+    ``bias`` is an optional (N,) f32 additive row (0 for valid, +inf to mask
+    a point out) — how range predicates reach the kernel.
+    """
+    d2 = pairwise_l2(q, v)
+    if bias is not None:
+        d2 = d2 + bias[None, :].astype(jnp.float32)
+    neg_vals, idxs = jax.lax.top_k(-d2, k)
+    return -neg_vals, idxs.astype(jnp.int32)
+
+
+def int8_distance(qq, q_scale, vq, v_scale):
+    """Quantized squared-L2.
+
+    qq: (B, d) int8, q_scale: (B,) f32 — symmetric per-row quantized query
+    vq: (N, d) int8, v_scale: (N,) f32 — symmetric per-row quantized points
+
+    dist ~= sq^2 |qq|^2 - 2 sq sv (qq . vq^T) + sv^2 |vq|^2, with the dot
+    accumulated in int32 (the int8 MXU path).
+    """
+    qi = qq.astype(jnp.int32)
+    vi = vq.astype(jnp.int32)
+    qn = jnp.sum(qi * qi, axis=-1).astype(jnp.float32)       # (B,)
+    vn = jnp.sum(vi * vi, axis=-1).astype(jnp.float32)       # (N,)
+    cross = jax.lax.dot_general(
+        qq, vq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)  # (B, N)
+    sq = q_scale.astype(jnp.float32)[:, None]
+    sv = v_scale.astype(jnp.float32)[None, :]
+    return (sq * sq) * qn[:, None] - 2.0 * (sq * sv) * cross + (sv * sv) * vn[None, :]
+
+
+def gather_distance(q, table, idx):
+    """Distances from each query row to its own gathered rows.
+
+    q: (B, d), table: (N, d), idx: (B, nb) int32 -> (B, nb) f32.
+    Rows with idx < 0 produce +inf (the traversal's "no neighbor" slot).
+    """
+    q = q.astype(jnp.float32)
+    safe = jnp.maximum(idx, 0)
+    rows = table.astype(jnp.float32)[safe]                   # (B, nb, d)
+    diff = rows - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(idx < 0, jnp.float32(jnp.inf), d2)
+
+
+def gather_int8_distance(q, vq, vscale, idx):
+    """Quantized gathered-row distances (out-of-core resident path).
+
+    q: (B, d) f32, vq: (N, d) int8, vscale: (N,) f32, idx: (B, nb) i32.
+    Rows dequantize as scale * int8; idx < 0 -> +inf.
+    """
+    q = q.astype(jnp.float32)
+    safe = jnp.maximum(idx, 0)
+    rows = vq[safe].astype(jnp.float32) * vscale[safe][..., None]
+    diff = rows - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(idx < 0, jnp.float32(jnp.inf), d2)

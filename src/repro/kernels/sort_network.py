@@ -1,0 +1,91 @@
+"""Bitonic compare-exchange networks as jnp ops.
+
+These helpers emit a *static* O(log^2 L) sequence of vectorized
+compare-exchange stages, usable both inside Pallas kernel bodies (VMEM
+arrays) and in plain jnp reference code. This is the TPU adaptation of the
+paper's register-level bitonic sort (Alg. 3, line 2): on a TPU there are no
+warp shuffles, but an L-lane compare-exchange is a single VPU
+permute+select, so the same network maps onto ``jnp.take``/``jnp.where``.
+
+All functions sort *ascending* along the last axis and carry a companion
+int32 payload (indices) through the permutation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _compare_exchange(vals, idxs, jsz: int, ksz: int):
+    """One bitonic stage: partner = lane ^ jsz, direction from lane & ksz.
+
+    Lane indices are built with iota *inside* the traced code (Pallas kernel
+    bodies may not capture array constants), so this helper is usable both
+    in kernels and in plain jnp.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, vals.shape, vals.ndim - 1)
+    partner = jax.lax.bitwise_xor(lane, jnp.int32(jsz))
+    take_min = ((lane & jnp.int32(ksz)) == 0) == (lane < partner)
+
+    pv = jnp.take_along_axis(vals, partner, axis=-1)
+    pi = jnp.take_along_axis(idxs, partner, axis=-1)
+
+    # Tie-stable: on equality keep own value (strict < / > comparisons).
+    want_partner = jnp.where(take_min, pv < vals, pv > vals)
+    new_vals = jnp.where(want_partner, pv, vals)
+    new_idxs = jnp.where(want_partner, pi, idxs)
+    return new_vals, new_idxs
+
+
+def bitonic_sort(vals, idxs):
+    """Full ascending bitonic sort along the last axis (L must be pow2)."""
+    L = vals.shape[-1]
+    assert _is_pow2(L), f"bitonic_sort needs pow2 lanes, got {L}"
+    ksz = 2
+    while ksz <= L:
+        jsz = ksz // 2
+        while jsz >= 1:
+            vals, idxs = _compare_exchange(vals, idxs, jsz, ksz)
+            jsz //= 2
+        ksz *= 2
+    return vals, idxs
+
+
+def bitonic_merge(vals, idxs):
+    """Merge a bitonic sequence (e.g. ascending half ++ descending half)
+    of pow2 length into ascending order — the cheap O(log L) tail of the
+    sort, used for running top-k merges where both halves are pre-sorted."""
+    L = vals.shape[-1]
+    assert _is_pow2(L), f"bitonic_merge needs pow2 lanes, got {L}"
+    jsz = L // 2
+    while jsz >= 1:
+        # ksz=L on the final stage of a sort makes every lane ascending.
+        vals, idxs = _compare_exchange(vals, idxs, jsz, L)
+        jsz //= 2
+    return vals, idxs
+
+
+def merge_topk(run_vals, run_idxs, new_vals, new_idxs):
+    """Merge sorted-ascending running top-K with sorted-ascending new
+    candidates (same width K), returning the ascending best-K of the union.
+
+    Reverses the new half to form a bitonic sequence, then one merge pass.
+    """
+    K = run_vals.shape[-1]
+    assert new_vals.shape[-1] == K
+    cat_v = jnp.concatenate([run_vals, new_vals[..., ::-1]], axis=-1)
+    cat_i = jnp.concatenate([run_idxs, new_idxs[..., ::-1]], axis=-1)
+    merged_v, merged_i = bitonic_merge(cat_v, cat_i)
+    return merged_v[..., :K], merged_i[..., :K]

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build ShapeDtypeStruct
+inputs, resolve shardings from logical axes, ``jit(...).lower().compile()``
+on the production mesh, and record memory/cost/collective-schedule
+analysis for the roofline (launch/roofline.py reads the JSON this writes).
+
+The two XLA_FLAGS lines above MUST precede any jax import: jax locks the
+device count on first backend init. Do not set this flag globally —
+tests/benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train import step as train_step_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the compiled HLO.
+
+    Each line looks like:  %x = f32[..]{..} all-reduce(...), replica_groups=…
+    For tuple-shaped fused collectives, all element shapes count.
+    These are per-*shard* logical bytes — roofline divides by link BW.
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # counted at -start
+        type_part = rhs.split(op)[0]
+        b = _shape_bytes(type_part)
+        out[op]["bytes"] += b
+        out[op]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def sharded_bytes(shapes_tree, shardings_tree, mesh) -> int:
+    """Per-device resident bytes of a (shapes, shardings) tree."""
+    total = 0
+    flat_s = jax.tree.leaves(shapes_tree)
+    flat_h = jax.tree.leaves(
+        shardings_tree, is_leaf=lambda x: hasattr(x, "spec"))
+    for sds, sh in zip(flat_s, flat_h):
+        n = int(np.prod(sds.shape)) if sds.shape else 1
+        shard = sh.num_devices_sharded_over(sds.shape) \
+            if hasattr(sh, "num_devices_sharded_over") else None
+        if shard is None:
+            # compute shard factor from the spec
+            factor = 1
+            for dim, entry in zip(sds.shape,
+                                  tuple(sh.spec) + (None,) * len(sds.shape)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                factor *= int(np.prod([mesh.shape[a] for a in axes]))
+            shard = factor
+        total += (n // max(shard, 1)) * sds.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+_FSDP = False      # set by --fsdp: ZeRO-3 param sharding for huge archs
+_INT8_OPT = False  # set by --int8-opt: 8-bit AdamW moments
+
+
+def _rules_for(shape_name: str):
+    if shape_name == "train_4k":
+        return shd.FSDP_TRAIN_RULES if _FSDP else shd.TRAIN_RULES
+    return shd.DECODE_RULES
+
+
+def _axes_to_shardings(shapes, axes, mesh, rules):
+    return jax.tree.map(
+        lambda sds, ax: shd.sharding_for(sds.shape, ax, mesh, rules),
+        shapes, axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, reduced: bool = False,
+               remat: bool = True, tcfg=None, cfg_override=None):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings,
+    out_shardings, cfg, resident_bytes) for one dry-run cell.
+    cfg_override: roofline's depth variants swap in a modified config."""
+    cfg = cfg_override if cfg_override is not None else (
+        registry.get_reduced(arch) if reduced else registry.get_config(arch))
+    kind, inputs = registry.input_specs(arch, shape_name, cfg)
+    rules = _rules_for(shape_name)
+    spec = registry.SHAPES[shape_name]
+    B = spec["batch"]
+
+    in_batch_shard = {}
+    for k, sds in inputs.items():
+        in_batch_shard[k] = shd.batch_sharding(mesh, sds.shape[0])
+
+    if kind == "train":
+        if tcfg is None:
+            from repro.optim import AdamWConfig
+            tcfg = train_step_mod.TrainConfig(
+                remat=remat, opt=AdamWConfig(int8_moments=_INT8_OPT))
+        fn = train_step_mod.make_train_step(cfg, tcfg)
+        state_sh, state_ax = train_step_mod.state_shapes(cfg, tcfg)
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        p_shard = jax.tree.map(
+            lambda sds, ax: shd.sharding_for(sds.shape, ax, mesh, rules),
+            state_sh["params"], state_ax["params"], is_leaf=is_ax)
+        mu_shard = jax.tree.map(
+            lambda sds, ax: shd.zero1_sharding(sds.shape, ax, mesh, rules),
+            state_sh["opt"]["mu"], state_ax["opt"]["mu"], is_leaf=is_ax)
+        state_shard = {"params": p_shard,
+                       "opt": {"mu": mu_shard,
+                               "count": shd.replicated(mesh)},
+                       "step": shd.replicated(mesh)}
+        in_sh = (state_shard, in_batch_shard)
+        out_sh = (state_shard, None)
+        args = (state_sh, inputs)
+        resident = (sharded_bytes(state_sh["params"], p_shard, mesh)
+                    + sharded_bytes(state_sh["opt"]["mu"], mu_shard, mesh))
+        return fn, args, in_sh, out_sh, cfg, resident
+
+    # serving paths need param + cache shapes
+    specs = lm.lm_specs(cfg)
+    from repro.models.common import param_logical_axes, param_shapes
+    p_shapes = param_shapes(specs)
+    p_axes = param_logical_axes(specs)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    p_shard = jax.tree.map(
+        lambda sds, ax: shd.sharding_for(sds.shape, ax, mesh, rules),
+        p_shapes, p_axes, is_leaf=is_ax)
+
+    max_seq = spec["seq"]
+    cache_sh = jax.eval_shape(
+        lambda: lm.init_caches(cfg, B, max_seq))
+    cache_ax = lm.cache_logical_axes(cfg)
+    c_shard = jax.tree.map(
+        lambda sds, ax: shd.sharding_for(sds.shape, ax, mesh, rules),
+        cache_sh, cache_ax, is_leaf=is_ax)
+    resident = (sharded_bytes(p_shapes, p_shard, mesh)
+                + sharded_bytes(cache_sh, c_shard, mesh))
+
+    if kind == "prefill":
+        fn0 = train_step_mod.make_serve_prefill(cfg, max_seq)
+        def fn(params, batch, caches):
+            return fn0(params, batch, caches)
+        logits_shard = shd.batch_sharding(mesh, B)
+        in_sh = (p_shard, in_batch_shard, c_shard)
+        out_sh = (logits_shard, c_shard)
+        args = (p_shapes, inputs, cache_sh)
+        return fn, args, in_sh, out_sh, cfg, resident
+
+    # decode
+    fn0 = train_step_mod.make_serve_decode(cfg)
+    token = inputs.pop("token")
+    ctx = inputs.pop("ctx", None)
+    logits_shard = shd.batch_sharding(mesh, B)
+    if ctx is not None:
+        def fn(params, token, caches, ctx):
+            return fn0(params, token, caches, ctx=ctx)
+        in_sh = (p_shard, shd.batch_sharding(mesh, B), c_shard,
+                 shd.batch_sharding(mesh, B))
+        args = (p_shapes, token, cache_sh, ctx)
+    else:
+        def fn(params, token, caches):
+            return fn0(params, token, caches)
+        in_sh = (p_shard, shd.batch_sharding(mesh, B), c_shard)
+        args = (p_shapes, token, cache_sh)
+    out_sh = (logits_shard, c_shard)
+    return fn, args, in_sh, out_sh, cfg, resident
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             reduced: bool = False, save: bool = True,
+             remat: bool = True, tag: str = "") -> dict:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi else "16x16",
+           "n_devices": int(np.prod(list(mesh.shape.values())))}
+    if not registry.shape_applicable(arch, shape_name):
+        rec["status"] = "skip"
+        rec["reason"] = "long_500k needs sub-quadratic attention " \
+                        "(documented in DESIGN.md)"
+        return _save(rec, tag) if save else rec
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, cfg, resident = build_cell(
+            arch, shape_name, mesh, reduced=reduced, remat=remat)
+        with mesh, shd.activation_rules(mesh, _rules_for(shape_name)):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["status"] = "ok"
+        rec["lower_seconds"] = round(t1 - t0, 1)
+        rec["compile_seconds"] = round(t2 - t1, 1)
+        rec["resident_bytes_per_device"] = int(resident)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k)) for k in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "transcendentals",
+                         "utilization operand 0 {}", "optimal_seconds")
+                or k.startswith("bytes accessed")}
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        n_params = _count_params(cfg)
+        rec["n_params"] = n_params
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_seconds"] = round(time.time() - t0, 1)
+    return _save(rec, tag) if save else rec
+
+
+def _count_params(cfg) -> int:
+    from repro.models.common import count_params
+    return count_params(lm.lm_specs(cfg))
+
+
+def _save(rec: dict, tag: str = "") -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    choices=["all"] + list(registry.ARCHS))
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(registry.SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--int8-opt", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    global _FSDP, _INT8_OPT
+    _FSDP = args.fsdp
+    _INT8_OPT = args.int8_opt
+
+    archs = list(registry.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(registry.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name, reduced=args.reduced,
+                               remat=not args.no_remat, tag=args.tag)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    fl = rec.get("cost_analysis", {}).get("flops", 0)
+                    cb = rec.get("collectives", {}).get("total_bytes", 0)
+                    extra = (f" flops={fl:.3g} coll={cb / 1e6:.1f}MB"
+                             f" compile={rec['compile_seconds']}s")
+                elif status == "fail":
+                    extra = " " + rec.get("error", "")[:120]
+                print(f"[{status:4s}] {arch} x {shape} x {rec['mesh']}"
+                      f"{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

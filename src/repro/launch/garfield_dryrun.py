@@ -1,0 +1,200 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Garfield-at-scale dry-run: the paper's own technique on the production
+mesh (DESIGN.md §5 'Garfield at scale').
+
+Placement: GMG cells shard round-robin over the `model` axis (each chip
+is resident for S/16 cells: vectors int8 + graph), queries shard over
+(`pod`,) `data`. One serve step, shard_map'd:
+
+  1. every chip runs the sequential cell traversal over ITS resident
+     cells for ITS query shard (the per-host Alg. 5 batch = the resident
+     shard; itinerary masks non-selected cells),
+  2. per-query candidates all-gather over `model` (16 shards x k ids),
+  3. top-k merge -> global answer.
+
+This is the multi-host generalization of the paper's batch model: "batch"
+becomes "resident shard", entry propagation stays intra-shard, and the
+cross-shard merge is one all-gather of k candidates — NOT the index.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.garfield_dryrun [--mesh single]
+      [--n-per-shard 4194304] [--batch 4096] [--tag _opt]
+"""
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = dr.RESULTS_DIR
+
+
+def garfield_step_fn(mesh, *, k: int, ef: int, n_local: int,
+                     s_local: int, dim: int, m_attrs: int,
+                     packed_visited: bool = False):
+    """Builds the shard_map'd serve step. packed_visited: bit-packed
+    (B, n/32) uint32 visited words instead of byte-wide bools — 8x less
+    per-query traversal state (the dominant live memory at fleet scale;
+    §Perf garfield iteration)."""
+    from repro.core import traversal as tv
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def local_search(vq, vscale, attrs, adj, inter, cell_start, rows,
+                     q, lo, hi, order, seed):
+        raw = tv.multi_cell_search_seeded.__wrapped__
+        ids, d = raw(vq, vscale, attrs, adj, inter, cell_start, rows,
+                     q, lo, hi, order, seed,
+                     jax.random.PRNGKey(0),
+                     k=k, ef=ef, entry_width=16, entry_random=4,
+                     entry_beam_l=8, max_iters=96,
+                     packed_visited=packed_visited)
+        # local ids -> global ids via the shard offset
+        shard = jax.lax.axis_index("model")
+        gids = jnp.where(ids >= 0, ids + shard * n_local, -1)
+        # merge across the model axis: (16, B, k) -> top-k
+        all_ids = jax.lax.all_gather(gids, "model")        # (M, B, k)
+        all_d = jax.lax.all_gather(d, "model")
+        M = all_ids.shape[0]
+        B = all_ids.shape[1]
+        flat_i = jnp.transpose(all_ids, (1, 0, 2)).reshape(B, M * k)
+        flat_d = jnp.transpose(all_d, (1, 0, 2)).reshape(B, M * k)
+        neg, pos = jax.lax.top_k(-flat_d, k)
+        out_i = jnp.take_along_axis(flat_i, pos, axis=1)
+        return out_i, -neg
+
+    in_specs = (
+        P("model", None),       # vq         (n_local*M, d) -> local rows
+        P("model"),             # vscale
+        P("model", None),       # attrs
+        P("model", None),       # adj
+        P("model", None, None),  # inter
+        P(None),                # cell_start (replicated, local offsets)
+        P("model"),             # rows (identity map local->local here)
+        P(data_axes, None),     # q
+        P(data_axes, None),     # lo
+        P(data_axes, None),     # hi
+        P(data_axes, None),     # order
+        P(data_axes, None),     # seed
+    )
+    out_specs = (P(data_axes, None), P(data_axes, None))
+
+    fn = jax.shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn
+
+
+def input_structs(mesh, *, n_per_shard: int, batch: int, s_local: int,
+                  dim: int, m_attrs: int, intra_deg: int, inter_l: int,
+                  ef: int):
+    M = mesh.shape["model"]
+    n_total = n_per_shard * M
+    sds = jax.ShapeDtypeStruct
+    return dict(
+        vq=sds((n_total, dim), jnp.int8),
+        vscale=sds((n_total,), jnp.float32),
+        attrs=sds((n_total, m_attrs), jnp.float32),
+        adj=sds((n_total, intra_deg), jnp.int32),
+        inter=sds((n_total, s_local, inter_l), jnp.int32),
+        cell_start=sds((s_local + 1,), jnp.int32),
+        rows=sds((n_total,), jnp.int32),
+        q=sds((batch, dim), jnp.float32),
+        lo=sds((batch, m_attrs), jnp.float32),
+        hi=sds((batch, m_attrs), jnp.float32),
+        order=sds((batch, s_local), jnp.int32),
+        seed=sds((batch, ef), jnp.int32),
+    )
+
+
+def run(mesh_name: str = "single", *, n_per_shard: int = 1 << 22,
+        batch: int = 4096, s_local: int = 1, dim: int = 128,
+        m_attrs: int = 4, k: int = 10, ef: int = 64, intra_deg: int = 16,
+        inter_l: int = 2, save: bool = True, tag: str = "",
+        packed_visited: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rec = {"arch": "garfield", "shape": f"serve_n{n_per_shard}x{batch}q",
+           "mesh": "2x16x16" if mesh_name == "multi" else "16x16",
+           "packed_visited": packed_visited}
+    t0 = time.time()
+    try:
+        fn = garfield_step_fn(mesh, k=k, ef=ef, n_local=n_per_shard,
+                              s_local=s_local, dim=dim, m_attrs=m_attrs,
+                              packed_visited=packed_visited)
+        structs = input_structs(mesh, n_per_shard=n_per_shard, batch=batch,
+                                s_local=s_local, dim=dim, m_attrs=m_attrs,
+                                intra_deg=intra_deg, inter_l=inter_l, ef=ef)
+        with mesh:
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(*structs.values())
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec.update(
+            status="ok",
+            compile_seconds=round(time.time() - t0, 1),
+            cost_analysis={k_: float(v) for k_, v in cost.items()
+                           if k_ in ("flops", "bytes accessed")},
+            collectives=dr.collective_bytes(compiled.as_text()),
+        )
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                kk: int(getattr(mem, kk)) for kk in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes")
+                if hasattr(mem, kk)}
+        except Exception as e:
+            rec["memory_analysis"] = {"error": str(e)}
+        # resident accounting (per model shard)
+        resident = (n_per_shard * (dim + 4 + m_attrs * 4 + intra_deg * 4
+                                   + s_local * inter_l * 4 + 4))
+        rec["resident_bytes_per_device"] = int(resident)
+    except Exception as e:
+        import traceback
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_seconds"] = round(time.time() - t0, 1)
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(
+                RESULTS_DIR,
+                f"garfield_{rec['shape']}_{rec['mesh']}{tag}.json"),
+                "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--n-per-shard", type=int, default=1 << 22)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--packed-visited", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rec = run(args.mesh, n_per_shard=args.n_per_shard, batch=args.batch,
+              tag=args.tag, packed_visited=args.packed_visited)
+    if rec["status"] == "ok":
+        print(f"[ok  ] garfield x {rec['shape']} x {rec['mesh']} "
+              f"flops={rec['cost_analysis'].get('flops', 0):.3g} "
+              f"coll={rec['collectives']['total_bytes'] / 1e6:.1f}MB "
+              f"compile={rec['compile_seconds']}s")
+    else:
+        print(f"[fail] {rec['error']}\n{rec.get('traceback', '')[-800:]}")
+
+
+if __name__ == "__main__":
+    main()

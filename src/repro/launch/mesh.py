@@ -1,0 +1,21 @@
+"""Production meshes. A FUNCTION (not module-level constant) so importing
+never touches jax device state — required for the dry-run's forced
+512-device host platform to initialize first."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:   (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests/examples on CPU)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

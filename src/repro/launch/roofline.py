@@ -1,0 +1,276 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g).
+
+Terms per (arch x shape x mesh), on TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_device / 197e12        [s]
+  memory     = HLO_bytes_per_device / 819e9         [s]
+  collective = collective_bytes_per_device / 50e9   [s]
+
+The compiled per-device HLO gives FLOPs/bytes — but XLA's cost analysis
+counts while-loop bodies ONCE, so scan-over-layers models undercount by
+~n_layers. We therefore use a *differential unrolled* method, exact for
+depth-linear costs:
+
+  f(total) = f(prefix + 1 cycle)                      [base, unrolled]
+           + (n_cycles - 1) * [f(2 cycles) - f(1)]    [per-cycle delta]
+           + [f(1 cycle + remainder) - f(1)]          [remainder delta]
+
+Each variant is a real lower+compile on the production mesh with scans
+fully unrolled (small depth => fast compiles). Collective bytes are
+parsed from each unrolled HLO the same way.
+
+MODEL_FLOPS uses the 6·N·D convention (6·N_active·D for MoE; decode =
+2·N_active·B per token) — the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat recompute + masked-block attention waste + routing overhead.
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.common import count_params
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "roofline")
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: lm.LMConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    total = count_params(lm.lm_specs(cfg))
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * m.d_model * m.d_ff
+    n_moe_layers = sum(1 for s in cfg.layer_list() if s.ffn == "moe")
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: lm.LMConfig, shape_name: str) -> float:
+    """6·N_active·D for training; 2·N_active per generated token for
+    decode; 2·N_active·prompt_tokens for prefill."""
+    spec = registry.SHAPES[shape_name]
+    n_act = active_params(cfg)
+    tokens = spec["batch"] * spec["seq"]
+    if spec["kind"] == "train":
+        return 6.0 * n_act * tokens
+    if spec["kind"] == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * spec["batch"]        # decode: one token per lane
+
+
+def analytic_hbm_bytes(cfg: lm.LMConfig, shape_name: str, chips: int,
+                       remat: bool = True) -> float:
+    """First-principles per-device HBM traffic per step (the credibility
+    check next to the HLO-derived memory term, which on the CPU backend
+    is an unfused upper bound):
+
+    train : params 2x read (fwd+bwd) + grad write/read + AdamW moment
+            r/w (fp32) + activations write+read (x2 with remat recompute)
+    serve : active params read once per token batch + KV/state cache
+            read (+write of the new slot) + activations streamed once.
+    """
+    spec = registry.SHAPES[shape_name]
+    n_total = count_params(lm.lm_specs(cfg))
+    n_act = active_params(cfg)
+    tokens_dev = spec["batch"] * spec["seq"] / chips
+    d = cfg.d_model
+    L = cfg.n_layers
+    p_total_dev = n_total / chips
+    p_act_dev = n_act / chips
+    if spec["kind"] == "train":
+        act_factor = 2.0 if remat else 1.5
+        acts = tokens_dev * d * 2 * L * 8 * act_factor  # ~8 tensors/layer
+        params_traffic = p_act_dev * 2 * 3              # bf16: fwd+bwd+bwd
+        opt = p_total_dev * (4 + 4) * 2 + p_total_dev * 2 * 2 \
+            + p_total_dev * 4                           # m,v r/w + p r/w + g
+        return params_traffic + opt + acts
+    if spec["kind"] == "prefill":
+        acts = tokens_dev * d * 2 * L * 6
+        cache_w = _cache_bytes(cfg, spec) / chips
+        return p_act_dev * 2 + acts + cache_w
+    # decode: one token; params + full cache read dominate
+    cache_rw = _cache_bytes(cfg, spec) / chips
+    acts = spec["batch"] / chips * d * 2 * L * 6
+    return p_act_dev * 2 + cache_rw + acts
+
+
+def _cache_bytes(cfg: lm.LMConfig, spec) -> float:
+    """Global KV/state cache bytes for a serve shape."""
+    import jax
+    cache_sh = jax.eval_shape(
+        lambda: lm.init_caches(cfg, spec["batch"], spec["seq"]))
+    return float(sum(np.prod(x.shape) * x.dtype.itemsize
+                     for x in jax.tree.leaves(cache_sh)))
+
+
+# ---------------------------------------------------------------------------
+# differential unrolled accounting
+# ---------------------------------------------------------------------------
+
+def _variant(cfg: lm.LMConfig, n_cycles: int, remainder: int):
+    n = len(cfg.prefix) + n_cycles * len(cfg.pattern) + remainder
+    return dataclasses.replace(cfg, n_layers=n, unroll=True)
+
+
+def measure_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
+                 cfg=None, tcfg=None):
+    """Differential roofline numbers for one cell. Returns dict."""
+    cfg = cfg or registry.get_config(arch)
+    n_pref, n_pat = len(cfg.prefix), len(cfg.pattern)
+    n_body = cfg.n_layers - n_pref
+    n_cycles, remainder = divmod(n_body, n_pat)
+    assert n_cycles >= 1, (arch, cfg.n_layers)
+
+    base = _lower_variant(arch, shape_name, mesh, _variant(cfg, 1, 0),
+                          remat=remat, tcfg=tcfg)
+    two = _lower_variant(arch, shape_name, mesh, _variant(cfg, 2, 0),
+                         remat=remat, tcfg=tcfg)
+    delta = {k: two[k] - base[k] for k in base}
+    if remainder:
+        rem = _lower_variant(arch, shape_name, mesh,
+                             _variant(cfg, 1, remainder),
+                             remat=remat, tcfg=tcfg)
+        delta_rem = {k: rem[k] - base[k] for k in base}
+    else:
+        delta_rem = {k: 0.0 for k in base}
+
+    total = {k: base[k] + (n_cycles - 1) * delta[k] + delta_rem[k]
+             for k in base}
+    return total
+
+
+def _lower_variant(arch, shape_name, mesh, cfg_variant, *, remat, tcfg):
+    """Lower+compile one unrolled variant; per-device flops/bytes/coll."""
+    from repro.models import attention as attn_mod
+    fn, args, in_sh, out_sh, _, resident = dr.build_cell(
+        arch, shape_name, mesh, reduced=False, remat=remat, tcfg=tcfg,
+        cfg_override=cfg_variant)
+    from repro.dist import sharding as shd_mod
+    attn_mod.UNROLL_SCANS = True
+    try:
+        with mesh, shd_mod.activation_rules(mesh,
+                                            dr._rules_for(shape_name)):
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh).lower(*args).compile()
+    finally:
+        attn_mod.UNROLL_SCANS = False
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = dr.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "ag_bytes": float(coll["all-gather"]["bytes"]),
+        "ar_bytes": float(coll["all-reduce"]["bytes"]),
+        "rs_bytes": float(coll["reduce-scatter"]["bytes"]),
+        "a2a_bytes": float(coll["all-to-all"]["bytes"]),
+        "cp_bytes": float(coll["collective-permute"]["bytes"]),
+    }
+
+
+def roofline_row(arch: str, shape_name: str, mesh_name: str = "single",
+                 *, remat: bool = True, tcfg=None, tag: str = "",
+                 save: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg = registry.get_config(arch)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if mesh_name == "multi" else "16x16"}
+    if not registry.shape_applicable(arch, shape_name):
+        row["status"] = "skip"
+        return row
+    try:
+        tot = measure_cell(arch, shape_name, mesh, remat=remat, tcfg=tcfg)
+        mf = model_flops(cfg, shape_name)
+        t_comp = tot["flops"] / PEAK_FLOPS
+        t_mem = tot["bytes"] / HBM_BW
+        t_mem_analytic = analytic_hbm_bytes(cfg, shape_name, chips,
+                                            remat) / HBM_BW
+        t_coll = tot["coll_bytes"] / LINK_BW
+        dom = max((t_comp, "compute"), (t_mem, "memory"),
+                  (t_coll, "collective"))[1]
+        row.update(
+            status="ok", chips=chips,
+            hlo_flops_per_device=tot["flops"],
+            hlo_bytes_per_device=tot["bytes"],
+            coll_bytes_per_device=tot["coll_bytes"],
+            coll_breakdown={k: tot[k] for k in
+                            ("ag_bytes", "ar_bytes", "rs_bytes",
+                             "a2a_bytes", "cp_bytes")},
+            t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+            t_memory_analytic=t_mem_analytic,
+            bottleneck=dom,
+            bottleneck_analytic=max(
+                (t_comp, "compute"), (t_mem_analytic, "memory"),
+                (t_coll, "collective"))[1],
+            model_flops_global=mf,
+            model_flops_per_device=mf / chips,
+            useful_ratio=(mf / chips) / max(tot["flops"], 1.0),
+            roofline_fraction=(mf / chips / PEAK_FLOPS) /
+            max(t_comp, t_mem, t_coll),
+        )
+    except Exception as e:
+        import traceback
+        row["status"] = "fail"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-1500:]
+    if save:
+        os.makedirs(RESULTS, exist_ok=True)
+        name = f"{arch}_{shape_name}_{row['mesh']}{tag}.json"
+        with open(os.path.join(RESULTS, name), "w") as f:
+            json.dump(row, f, indent=1, default=str)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    choices=["all"] + list(registry.ARCHS))
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(registry.SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    archs = list(registry.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(registry.SHAPES) if args.shape == "all" else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            row = roofline_row(arch, shape, args.mesh,
+                               remat=not args.no_remat, tag=args.tag)
+            if row["status"] == "ok":
+                print(f"[ok  ] {arch} x {shape}: "
+                      f"C={row['t_compute']:.4f}s M={row['t_memory']:.4f}s "
+                      f"X={row['t_collective']:.4f}s -> {row['bottleneck']}"
+                      f" useful={row['useful_ratio']:.2f}"
+                      f" frac={row['roofline_fraction']:.3f}", flush=True)
+            else:
+                print(f"[{row['status']:4s}] {arch} x {shape} "
+                      f"{row.get('error', '')[:120]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Training entry point.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 50 --batch 8 --seq 128 [--ckpt-dir /tmp/ckpt]
+
+Full (non-reduced) configs at production shapes are exercised through the
+dry-run (this host has one CPU device); --reduced trains for real.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro.configs import registry
+from repro.data.tokens import TokenPipeline
+from repro.optim import AdamWConfig
+from repro.train.loop import LoopConfig, run
+from repro.train.step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--int8-moments", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = (registry.get_reduced(args.arch) if args.reduced
+           else registry.get_config(args.arch))
+    if not cfg.embed_inputs:
+        raise SystemExit(f"{args.arch} trains on frontend embeddings; use "
+                         "the dry-run for its production shapes")
+    tcfg = TrainConfig(opt=AdamWConfig(lr=args.lr,
+                                       int8_moments=args.int8_moments),
+                       grad_accum=args.grad_accum,
+                       peak_lr=args.lr, total_steps=args.steps,
+                       remat=not args.reduced)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=5)
+    state, hist = run(cfg, tcfg, loop, pipe)
+    if hist:
+        print(f"final loss: {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model stack: the assigned-architecture workload side of the framework.
+
+Pure-pytree parameter handling (no flax): every module is a pair of
+functions — ``*_specs(cfg) -> {name: ParamSpec}`` describing shapes,
+dtypes, logical sharding axes and initializers, and an ``apply``-style
+function taking the materialized param dict. ``repro.dist.sharding``
+turns logical axes into mesh shardings for pjit / the dry-run.
+"""
+
+from repro.models.common import ParamSpec, init_params, param_shapes  # noqa: F401

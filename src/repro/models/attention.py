@@ -1,0 +1,286 @@
+"""Attention blocks: GQA (MHA/MQA as special cases), sliding-window,
+cross-attention — with a decode-time KV cache.
+
+All functions are pure over param dicts built from ParamSpecs. Shapes:
+  x          (B, T, D)
+  k/v cache  (B, S_max, n_kv, d_head)   (seq-major for clean SP sharding)
+Masks are computed from positions, so prefill/decode share one kernel
+path. Softmax in f32.
+
+Sharding intent (logical axes; see dist/sharding.py):
+  wq (embed, heads*d_head->"q_proj" dim tagged "heads")
+  cache ("batch", "cache_seq", "kv_heads", "head_dim") — long_500k shards
+  "cache_seq" over the data axis (sequence parallelism for decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, apply_rope, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False            # qwen1.5
+    window: Optional[int] = None      # sliding-window layers (gemma3, rg)
+    causal: bool = True
+    softmax_scale: Optional[float] = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+
+def attn_specs(cfg: AttnConfig, dtype=jnp.bfloat16):
+    s = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, cfg.d_head),
+                        ("embed", "heads", "head_dim"), dtype),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, cfg.d_head),
+                        ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, cfg.d_head),
+                        ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": ParamSpec((cfg.n_heads, cfg.d_head, cfg.d_model),
+                        ("heads", "head_dim", "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((cfg.n_heads, cfg.d_head),
+                            ("heads", "head_dim"), dtype, "zeros")
+        s["bk"] = ParamSpec((cfg.n_kv_heads, cfg.d_head),
+                            ("kv_heads", "head_dim"), dtype, "zeros")
+        s["bv"] = ParamSpec((cfg.n_kv_heads, cfg.d_head),
+                            ("kv_heads", "head_dim"), dtype, "zeros")
+    return s
+
+
+def _proj_qkv(params, cfg: AttnConfig, x, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,T,H,dh), k/v (B,S,Hkv,dh) with H = G*Hkv; mask (B,T,S) bool."""
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, dh)
+    logits = jnp.einsum("bthgk,bshk->bhgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgts,bshk->bthgk", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, dh).astype(q.dtype)
+
+
+BLOCKWISE_THRESHOLD = 4096     # direct sdpa below this many q rows
+_BLK_Q = 512
+_BLK_K = 512
+
+# Roofline accounting sets this to unroll the KV scan: XLA cost analysis
+# counts while bodies once, so the production scan form undercounts
+# attention FLOPs by n_kv_blocks (launch/roofline.py).
+UNROLL_SCANS = False
+
+
+def _sdpa_blockwise(q, k, v, q_pos, kv_pos, window, scale,
+                    blk_q: int = _BLK_Q, blk_k: int = _BLK_K):
+    """Memory-efficient attention: lazy (online) softmax over KV blocks,
+    never materializing the (T, S) score matrix. Pure JAX — the LM side
+    needs no Pallas per the scope rules; the O(T*blk) working set is what
+    lets prefill_32k / long-context shapes fit HBM.
+
+    Causality is enforced by per-block masks from positions; fully-masked
+    (future) blocks still execute — a deliberate baseline inefficiency
+    (upper-triangle waste ~2x on causal prefill) that EXPERIMENTS.md §Perf
+    removes in an iteration (diagonal band scheduling).
+    """
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    Tp = ((T + blk_q - 1) // blk_q) * blk_q
+    Sp = ((S + blk_k - 1) // blk_k) * blk_k
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, Tp - T)), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kpos = jnp.pad(kv_pos, ((0, 0), (0, Sp - S)),
+                   constant_values=jnp.iinfo(jnp.int32).max)
+
+    nq, nk = Tp // blk_q, Sp // blk_k
+    qb = qp.reshape(B, nq, blk_q, Hkv, G, dh)
+    qposb = qpos.reshape(B, nq, blk_q)
+    kb = kp.reshape(B, nk, blk_k, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, blk_k, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    kposb = kpos.reshape(B, nk, blk_k).transpose(1, 0, 2)
+
+    def kv_step(carry, inp):
+        m, l, acc = carry                     # (B,nq,bq,Hkv,G) / ... / +dh
+        kj, vj, kpj = inp                     # (B,bk,Hkv,dh), (B,bk)
+        logits = jnp.einsum("bnqhgk,bshk->bnqhgs", qb, kj,
+                            preferred_element_type=jnp.float32) * scale
+        mask = kpj[:, None, None, :] <= qposb[:, :, :, None]
+        if window is not None:
+            mask &= kpj[:, None, None, :] > (qposb[:, :, :, None] - window)
+        logits = jnp.where(mask[:, :, :, None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnqhgs,bshk->bnqhgk", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, blk_q, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, blk_q, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, nq, blk_q, Hkv, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kposb),
+                                  unroll=nk if UNROLL_SCANS else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(B, Tp, H, dh)[:, :T]
+    return out.astype(q.dtype)
+
+
+def _causal_mask(q_pos, kv_pos, window: Optional[int], kv_valid=None):
+    """(B, T, S) bool: kv visible to q. positions (B,T)/(B,S)."""
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if kv_valid is not None:
+        m &= kv_valid[:, None, :]
+    return m
+
+
+def attention(params, cfg: AttnConfig, x, positions,
+              cache: Optional[dict] = None):
+    """Self-attention. Without cache: full (prefill/train). With cache:
+    append this step's K/V at ``cache["index"]`` and attend over the cache
+    (decode). Returns (out (B,T,D), new_cache)."""
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.d_head))
+    q, k, v = _proj_qkv(params, cfg, x, positions)
+
+    if cache is None:
+        if x.shape[1] >= BLOCKWISE_THRESHOLD:
+            out = _sdpa_blockwise(q, k, v, positions, positions,
+                                  cfg.window, scale)
+        else:
+            mask = _causal_mask(positions, positions,
+                                cfg.window if cfg.causal else None)
+            if not cfg.causal:
+                mask = jnp.ones_like(mask)
+            out = _sdpa(q, k, v, mask, scale)
+        new_cache = None
+    else:
+        # Ring-buffer cache: slot = position % S. For full-attention
+        # layers S = max_seq so the ring never wraps; for sliding-window
+        # layers S = window, which is exactly why their long-context
+        # memory stays O(window). ``pos`` tracks each slot's token
+        # position (-1 = empty) so masking is order-independent.
+        idx = cache["index"]                       # scalar i32: write offset
+        T = x.shape[1]
+        B = x.shape[0]
+        S = cache["k"].shape[1]
+        keep = min(T, S)                           # only the tail can matter
+        k_t, v_t = k[:, -keep:], v[:, -keep:]
+        p_t = positions[:, -keep:]
+        slots = p_t % S                            # (B, keep)
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        ck = cache["k"].at[rows, slots].set(k_t)
+        cv = cache["v"].at[rows, slots].set(v_t)
+        # Pin the updated cache to its logical layout on DECODE steps:
+        # left alone, GSPMD may reshard the ring-buffer scatter over seq
+        # and then all-gather the WHOLE cache for attention every step —
+        # §Perf iteration 5 measured 86GB/step of exactly that on
+        # vision-11b decode_32k. On prefill (T>1) the same pin doubles
+        # the bulk-write collectives (iteration 5b), so it's T==1 only.
+        if T == 1:
+            from repro.dist.sharding import constrain
+            cache_axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+            ck = constrain(ck, cache_axes)
+            cv = constrain(cv, cache_axes)
+        cpos = cache["pos"].at[rows, slots].set(p_t)
+        mask = _causal_mask(positions, cpos, cfg.window, cpos >= 0)
+        out = _sdpa(q, ck, cv, mask, scale)
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "index": idx + T}
+
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), new_cache
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache. Sliding-window layers only need window-sized caches
+    (this is what makes gemma3/recurrentgemma long_500k sub-quadratic in
+    memory for 5 of 6 layers)."""
+    S = max_seq if cfg.window is None else min(max_seq, cfg.window)
+    return {
+        "k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.full((batch, S), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: AttnConfig) -> dict:
+    return {
+        "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "pos": ("batch", "cache_seq"),
+        "index": (),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (llama-3.2-vision style image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attn_specs(cfg: AttnConfig, d_ctx: int, dtype=jnp.bfloat16):
+    s = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, cfg.d_head),
+                        ("embed", "heads", "head_dim"), dtype),
+        "wk": ParamSpec((d_ctx, cfg.n_kv_heads, cfg.d_head),
+                        ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": ParamSpec((d_ctx, cfg.n_kv_heads, cfg.d_head),
+                        ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": ParamSpec((cfg.n_heads, cfg.d_head, cfg.d_model),
+                        ("heads", "head_dim", "embed"), dtype),
+        # llama-vision gates cross-attn output through tanh(alpha), zero-init
+        "gate": ParamSpec((), (), jnp.float32, "zeros"),
+    }
+    return s
+
+
+def cross_attention(params, cfg: AttnConfig, x, ctx):
+    """x (B,T,D) attends over ctx (B,N,Dc) (precomputed patch embeddings
+    from the stub frontend). No positional encoding on ctx (learned in the
+    real frontend; stubbed here)."""
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.d_head))
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bnd,dhk->bnhk", ctx, params["wk"])
+    v = jnp.einsum("bnd,dhk->bnhk", ctx, params["wv"])
+    mask = jnp.ones((x.shape[0], x.shape[1], ctx.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, scale)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return jnp.tanh(params["gate"]).astype(y.dtype) * y

@@ -1,0 +1,173 @@
+"""Param-spec machinery + shared layers (RMSNorm, RoPE, embeddings).
+
+ParamSpec carries (shape, dtype, logical_axes, init). Modules build a
+nested dict of specs; ``init_params`` materializes arrays,
+``param_shapes`` gives ShapeDtypeStructs for the dry-run (no allocation),
+and ``repro.dist.sharding.shardings_for`` maps logical axes -> mesh
+shardings. Logical axis names used across the stack:
+
+  "embed"     d_model                 "vocab"    vocabulary
+  "heads"     attention query heads   "kv_heads" KV heads
+  "head_dim"  per-head dim            "mlp"      FFN hidden
+  "experts"   MoE expert count        "layers"   stacked-scan leading axis
+  "ssm_state" SSM state dim           "rnn"      RG-LRU recurrent width
+  (None in a position = replicated on that dim)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical_axes: tuple          # same length as shape; entries str | None
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"         # normal | zeros | ones | embed_normal
+    init_scale: Optional[float] = None   # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            (self.shape, self.logical_axes)
+
+
+def _fan_in(shape: tuple) -> int:
+    return shape[-2] if len(shape) >= 2 else max(shape[-1], 1)
+
+
+def _materialize(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    scale = spec.init_scale
+    if scale is None:
+        scale = 1.0 / math.sqrt(_fan_in(spec.shape))
+    if spec.init == "embed_normal":
+        # 1/sqrt(d_model): keeps tied-head logits O(1) at init
+        scale = 1.0 / math.sqrt(spec.shape[-1])
+    x = jax.random.normal(key, spec.shape, jnp.float32) * scale
+    return x.astype(spec.dtype)
+
+
+def _tree_map_with_key(fn, specs, key):
+    flat, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(flat))
+    return jax.tree.unflatten(treedef, [fn(s, k) for s, k in zip(flat, keys)])
+
+
+def init_params(specs, key):
+    """Materialize a spec tree into a param tree."""
+    return _tree_map_with_key(_materialize, specs, key)
+
+
+def param_shapes(specs):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_logical_axes(specs):
+    """Tree of logical-axis tuples, parallel to the param tree."""
+    return jax.tree.map(
+        lambda s: s.logical_axes, specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs) -> int:
+    flat, _ = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in flat))
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked leading axis (for scan-over-layers params)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.logical_axes,
+                            s.dtype, s.init, s.init_scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# shared layer math (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_specs(vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"embedding": ParamSpec((vocab, d_model), ("vocab", "embed"),
+                                   dtype, "embed_normal")}
+
+
+def embed_lookup(params, tokens):
+    return params["embedding"][tokens]
+
+
+def unembed(params, x):
+    """Tied output head: (..., d) @ (vocab, d)^T in f32 for stable CE."""
+    w = params["embedding"].astype(jnp.float32)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), w, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def dense_specs(d_in: int, d_out: int, ax_in, ax_out, dtype=jnp.bfloat16,
+                bias: bool = False, name: str = "w"):
+    out = {name: ParamSpec((d_in, d_out), (ax_in, ax_out), dtype)}
+    if bias:
+        out[name + "_b"] = ParamSpec((d_out,), (ax_out,), dtype, "zeros")
+    return out
+
+
+def dense(params, x, name: str = "w"):
+    y = jax.lax.dot_general(
+        x, params[name], (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if name + "_b" in params:
+        y = y + params[name + "_b"].astype(y.dtype)
+    return y
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (..., V) f32, labels (...) i32; mean over mask."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,28 @@
+"""Stub modality frontends (per instructions: [audio]/[vlm] archs specify
+the transformer BACKBONE; frontends provide precomputed embeddings).
+
+These produce deterministic random embeddings with the right shapes for
+smoke tests and examples; ``configs.registry.input_specs`` produces the
+matching ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encodec_frames(key, batch: int, n_frames: int, d_model: int,
+                   dtype=jnp.bfloat16):
+    """MusicGen stub: EnCodec latent frames already projected to d_model
+    (the real frontend sums 4 codebook embeddings per frame)."""
+    return (jax.random.normal(key, (batch, n_frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def vision_patches(key, batch: int, n_patches: int, d_ctx: int,
+                   dtype=jnp.bfloat16):
+    """Llama-3.2-Vision stub: ViT patch embeddings after the projector
+    (cross-attention context). n_patches ~ (448/14)^2 = 1024 per tile."""
+    return (jax.random.normal(key, (batch, n_patches, d_ctx), jnp.float32)
+            * 0.02).astype(dtype)

@@ -1,0 +1,394 @@
+"""Unified decoder LM covering all assigned architectures.
+
+A model is a cyclic ``pattern`` of LayerSpecs (plus an optional
+non-cyclic ``prefix``, e.g. deepseek's 3 dense layers). Consecutive
+identical specs are grouped into *runs*; each run's params are stacked on
+a leading "layers" axis and applied with ``lax.scan`` — one compiled body
+per distinct spec regardless of depth (the compile-time lever that makes
+the 512-device dry-run tractable on a single-core host).
+
+Layer kinds: "attn" (GQA, optional sliding window / qkv-bias /
+cross-attn sublayer), "mla" (deepseek), "ssm" (mamba2 SSD), "rglru"
+(recurrentgemma). FFN kinds: "dense" (SwiGLU), "moe", "none".
+
+Inputs are token ids, or precomputed frontend embeddings for the
+[audio]/[vlm] stub frontends (paper scope: backbone only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ParamSpec, dense, embed_lookup, rms_norm,
+                                 softmax_cross_entropy, stack_specs, unembed)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                     # attn | mla | ssm | rglru
+    ffn: str = "dense"            # dense | moe | none
+    window: Optional[int] = None  # sliding-window width for attn layers
+    cross_attn: bool = False      # vision cross-attn sublayer
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_ff: int = 0
+    pattern: tuple = (LayerSpec("attn"),)
+    prefix: tuple = ()
+    # sub-configs (present only where the pattern needs them)
+    attn: Optional[attn_mod.AttnConfig] = None
+    mla: Optional[mla_mod.MLAConfig] = None
+    moe: Optional[moe_mod.MoEConfig] = None
+    ssm: Optional[ssm_mod.SSMConfig] = None
+    rglru: Optional[rglru_mod.RGLRUConfig] = None
+    d_ctx: int = 0                # cross-attn context width (0 = none)
+    n_ctx_tokens: int = 0         # stub frontend tokens (vlm)
+    embed_inputs: bool = True     # False: frontend embeddings are the input
+    tie_embeddings: bool = True
+    mtp_depth: int = 0            # deepseek multi-token prediction heads
+    logit_softcap: float = 0.0    # gemma-style final-logit soft cap
+    dtype: object = jnp.bfloat16
+    remat: bool = False           # activation checkpointing per layer
+    unroll: bool = False          # unroll layer scans (roofline accounting:
+    # XLA cost_analysis counts while bodies ONCE; unrolled graphs count
+    # exactly — see launch/roofline.py's differential method)
+
+    def layer_list(self) -> list:
+        layers = list(self.prefix)
+        i = 0
+        while len(layers) < self.n_layers:
+            layers.append(self.pattern[i % len(self.pattern)])
+            i += 1
+        return layers[:self.n_layers]
+
+    def runs(self) -> list:
+        """[(spec, count), ...] — consecutive identical layer specs."""
+        out = []
+        for spec in self.layer_list():
+            if out and out[-1][0] == spec:
+                out[-1] = (spec, out[-1][1] + 1)
+            else:
+                out.append((spec, 1))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# per-layer specs / apply
+# ---------------------------------------------------------------------------
+
+def _ffn_specs(cfg: LMConfig, spec: LayerSpec, dtype):
+    if spec.ffn == "dense":
+        return {
+            "wi_gate": ParamSpec((cfg.d_model, cfg.d_ff), ("embed", "mlp"),
+                                 dtype),
+            "wi_up": ParamSpec((cfg.d_model, cfg.d_ff), ("embed", "mlp"),
+                               dtype),
+            "wo_ffn": ParamSpec((cfg.d_ff, cfg.d_model), ("mlp", "embed"),
+                                dtype),
+            "norm_ffn": ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros"),
+        }
+    if spec.ffn == "moe":
+        s = {"moe": moe_mod.moe_specs(cfg.moe, dtype)}
+        s["norm_ffn"] = ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros")
+        return s
+    return {}
+
+
+def _layer_specs(cfg: LMConfig, spec: LayerSpec, dtype):
+    s = {"norm_in": ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros")}
+    if spec.kind == "attn":
+        acfg = dataclasses.replace(cfg.attn, window=spec.window)
+        s["attn"] = attn_mod.attn_specs(acfg, dtype)
+        if spec.cross_attn:
+            s["xattn"] = attn_mod.cross_attn_specs(cfg.attn, cfg.d_ctx, dtype)
+            s["norm_x"] = ParamSpec((cfg.d_model,), ("embed",), dtype,
+                                    "zeros")
+    elif spec.kind == "mla":
+        s["mla"] = mla_mod.mla_specs(cfg.mla, dtype)
+    elif spec.kind == "ssm":
+        s["ssm"] = ssm_mod.ssm_specs(cfg.ssm, dtype)
+    elif spec.kind == "rglru":
+        s["rglru"] = rglru_mod.rglru_specs(cfg.rglru, dtype)
+    else:
+        raise ValueError(spec.kind)
+    s.update(_ffn_specs(cfg, spec, dtype))
+    return s
+
+
+def _apply_ffn(cfg: LMConfig, spec: LayerSpec, lp, h):
+    if spec.ffn == "none":
+        return h, jnp.zeros((), jnp.float32)
+    hn = rms_norm(h, lp["norm_ffn"])
+    if spec.ffn == "dense":
+        g = dense(lp, hn, "wi_gate")
+        u = dense(lp, hn, "wi_up")
+        y = (jax.nn.silu(g.astype(jnp.float32)) *
+             u.astype(jnp.float32)).astype(h.dtype)
+        return h + dense({"w": lp["wo_ffn"]}, y, "w"), \
+            jnp.zeros((), jnp.float32)
+    y, aux = moe_mod.moe_ffn(lp["moe"], cfg.moe, hn)
+    return h + y, aux
+
+
+def _apply_layer(cfg: LMConfig, spec: LayerSpec, lp, h, positions,
+                 ctx=None, cache=None):
+    """One decoder layer. Returns (h, new_cache, aux)."""
+    hn = rms_norm(h, lp["norm_in"])
+    if spec.kind == "attn":
+        acfg = dataclasses.replace(cfg.attn, window=spec.window)
+        y, new_cache = attn_mod.attention(lp["attn"], acfg, hn, positions,
+                                          cache)
+        h = h + y
+        if spec.cross_attn:
+            hx = rms_norm(h, lp["norm_x"])
+            h = h + attn_mod.cross_attention(lp["xattn"], cfg.attn, hx, ctx)
+    elif spec.kind == "mla":
+        y, new_cache = mla_mod.mla_attention(lp["mla"], cfg.mla, hn,
+                                             positions, cache)
+        h = h + y
+    elif spec.kind == "ssm":
+        y, new_cache = ssm_mod.ssm_block(lp["ssm"], cfg.ssm, hn, cache)
+        h = h + y
+    elif spec.kind == "rglru":
+        y, new_cache = rglru_mod.rglru_block(lp["rglru"], cfg.rglru, hn,
+                                             cache)
+        h = h + y
+    else:
+        raise ValueError(spec.kind)
+    h, aux = _apply_ffn(cfg, spec, lp, h)
+    return h, new_cache, aux
+
+
+def _layer_cache(cfg: LMConfig, spec: LayerSpec, batch: int, max_seq: int):
+    if spec.kind == "attn":
+        acfg = dataclasses.replace(cfg.attn, window=spec.window)
+        return attn_mod.init_cache(acfg, batch, max_seq, cfg.dtype)
+    if spec.kind == "mla":
+        return mla_mod.init_cache(cfg.mla, batch, max_seq, cfg.dtype)
+    if spec.kind == "ssm":
+        return ssm_mod.init_cache(cfg.ssm, batch, cfg.dtype)
+    if spec.kind == "rglru":
+        return rglru_mod.init_cache(cfg.rglru, batch, cfg.dtype)
+    raise ValueError(spec.kind)
+
+
+def _layer_cache_axes(cfg: LMConfig, spec: LayerSpec):
+    if spec.kind == "attn":
+        acfg = dataclasses.replace(cfg.attn, window=spec.window)
+        return attn_mod.cache_logical_axes(acfg)
+    if spec.kind == "mla":
+        return mla_mod.cache_logical_axes(cfg.mla)
+    if spec.kind == "ssm":
+        return ssm_mod.cache_logical_axes(cfg.ssm)
+    if spec.kind == "rglru":
+        return rglru_mod.cache_logical_axes(cfg.rglru)
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-model specs / forward
+# ---------------------------------------------------------------------------
+
+def lm_specs(cfg: LMConfig):
+    dtype = cfg.dtype
+    s = {
+        "embed": {"embedding": ParamSpec((cfg.vocab, cfg.d_model),
+                                         ("vocab", "embed"), dtype,
+                                         "embed_normal")},
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros"),
+        "runs": [stack_specs(_layer_specs(cfg, spec, dtype), count)
+                 for spec, count in cfg.runs()],
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"), dtype)
+    if cfg.mtp_depth > 0:
+        # deepseek MTP: per-depth projection + one extra layer (same spec
+        # as the cyclic pattern's last layer), embedding shared.
+        spec = cfg.pattern[-1]
+        s["mtp"] = [{
+            "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                              ("embed", None), dtype),
+            "norm_h": ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros"),
+            "norm_e": ParamSpec((cfg.d_model,), ("embed",), dtype, "zeros"),
+            "layer": _layer_specs(cfg, spec, dtype),
+        } for _ in range(cfg.mtp_depth)]
+    return s
+
+
+def _run_scan(cfg: LMConfig, spec: LayerSpec, run_params, h, positions,
+              ctx=None, caches=None):
+    """Apply `count` stacked layers with lax.scan. caches: stacked pytree
+    (leading axis = layer) or None. Returns (h, new_caches, aux_sum)."""
+    if caches is None:
+        def body(carry, lp):
+            hh, aux = carry
+            hh, _, a = _apply_layer(cfg, spec, lp, hh, positions, ctx, None)
+            return (hh, aux + a), None
+        if cfg.remat:
+            policy = jax.checkpoint_policies.save_from_both_policies(
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                jax.checkpoint_policies.save_only_these_names(
+                    "moe_combine"))
+            body = jax.checkpoint(body, policy=policy)
+        n_in_run = jax.tree.leaves(run_params)[0].shape[0]
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                   run_params,
+                                   unroll=n_in_run if cfg.unroll else 1)
+        return h, None, aux
+
+    def body(carry, xs):
+        hh, aux = carry
+        lp, cache = xs
+        hh, new_cache, a = _apply_layer(cfg, spec, lp, hh, positions, ctx,
+                                        cache)
+        return (hh, aux + a), new_cache
+    (h, aux), new_caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), (run_params, caches))
+    return h, new_caches, aux
+
+
+def forward(params, cfg: LMConfig, tokens=None, embeds=None, positions=None,
+            ctx=None, caches=None):
+    """Backbone forward. Returns (hidden (B,T,D), new_caches, aux)."""
+    if cfg.embed_inputs:
+        h = embed_lookup(params["embed"], tokens)
+        if cfg.name.startswith("gemma"):
+            h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    else:
+        h = embeds.astype(cfg.dtype)
+    B, T = h.shape[0], h.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    new_caches = [] if caches is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, (spec, count) in enumerate(cfg.runs()):
+        c = caches[i] if caches is not None else None
+        h, nc, a = _run_scan(cfg, spec, params["runs"][i], h, positions,
+                             ctx, c)
+        aux += a
+        if caches is not None:
+            new_caches.append(nc)
+    h = rms_norm(h, params["final_norm"])
+    return h, new_caches, aux
+
+
+def logits_of(params, cfg: LMConfig, h):
+    if cfg.tie_embeddings:
+        lg = unembed(params["embed"], h)
+    else:
+        lg = jax.lax.dot_general(
+            h.astype(jnp.float32), params["lm_head"].astype(jnp.float32),
+            (((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0:
+        lg = cfg.logit_softcap * jnp.tanh(lg / cfg.logit_softcap)
+    return lg
+
+
+def lm_loss(params, cfg: LMConfig, tokens=None, labels=None, embeds=None,
+            ctx=None, aux_weight: float = 0.01):
+    """Next-token CE (+ MoE aux + MTP losses). labels (B, T) with -1 pad."""
+    h, _, aux = forward(params, cfg, tokens=tokens, embeds=embeds, ctx=ctx)
+    lg = logits_of(params, cfg, h)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    loss = softmax_cross_entropy(lg, safe, mask)
+
+    if cfg.mtp_depth > 0 and tokens is not None:
+        # MTP depth d predicts token t+1+d from h_t combined with the
+        # embedding of token t+d (teacher-forced chain).
+        spec = cfg.pattern[-1]
+        hk = h
+        for d, mp in enumerate(params["mtp"], start=1):
+            emb_next = embed_lookup(params["embed"],
+                                    jnp.roll(tokens, -d, axis=1))
+            mix = jnp.concatenate(
+                [rms_norm(hk, mp["norm_h"]),
+                 rms_norm(emb_next, mp["norm_e"])], axis=-1)
+            hk = jax.lax.dot_general(
+                mix, mp["proj"], (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(h.dtype)
+            hk, _, a2 = _apply_layer(cfg, spec, mp["layer"], hk,
+                                     jnp.broadcast_to(
+                                         jnp.arange(hk.shape[1],
+                                                    dtype=jnp.int32),
+                                         hk.shape[:2]))
+            aux += a2
+            lgd = logits_of(params, cfg, hk)
+            lbl_d = jnp.roll(labels, -d, axis=1)
+            m_d = mask & (jnp.arange(hk.shape[1]) < hk.shape[1] - d)
+            loss += 0.1 * softmax_cross_entropy(lgd, jnp.maximum(lbl_d, 0),
+                                                m_d)
+
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill / decode caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: LMConfig, batch: int, max_seq: int):
+    """Stacked per-run caches (leading axis = layers in run)."""
+    out = []
+    for spec, count in cfg.runs():
+        one = _layer_cache(cfg, spec, batch, max_seq)
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+    return out
+
+
+def cache_logical_axes(cfg: LMConfig):
+    out = []
+    for spec, count in cfg.runs():
+        axes = _layer_cache_axes(cfg, spec)
+        out.append(jax.tree.map(
+            lambda a: ("layers",) + tuple(a), axes,
+            is_leaf=lambda x: isinstance(x, tuple)))
+    return out
+
+
+def prefill(params, cfg: LMConfig, tokens=None, embeds=None, ctx=None,
+            caches=None, max_seq: int = 0):
+    """Run the prompt through the model, filling caches. Returns
+    (last-position logits (B, V), caches)."""
+    B = (tokens if tokens is not None else embeds).shape[0]
+    T = (tokens if tokens is not None else embeds).shape[1]
+    if caches is None:
+        caches = init_caches(cfg, B, max_seq or T)
+    h, caches, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
+                           ctx=ctx, caches=caches)
+    return logits_of(params, cfg, h[:, -1:, :])[:, 0, :], caches
+
+
+def decode_step(params, cfg: LMConfig, token, caches, ctx=None):
+    """One decode step. token (B, 1) i32 (or (B, 1, D) embeds). Returns
+    (logits (B, V), caches)."""
+    B = token.shape[0]
+    # positions for the new token(s): every run tracks "index"; use run 0
+    idx0 = caches[0]["index"][0]
+    T = token.shape[1]
+    positions = idx0 + jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                        (B, T))
+    if cfg.embed_inputs:
+        h, caches, _ = forward(params, cfg, tokens=token,
+                               positions=positions, ctx=ctx, caches=caches)
+    else:
+        h, caches, _ = forward(params, cfg, embeds=token,
+                               positions=positions, ctx=ctx, caches=caches)
+    return logits_of(params, cfg, h[:, -1:, :])[:, 0, :], caches

@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437 §2.1).
+
+Q path:  x -> q_a (q_lora_rank) -> norm -> q_b -> heads×(nope ++ rope)
+KV path: x -> kv_a (kv_lora_rank ++ k_rope shared) -> norm(latent)
+         latent -> kv_b -> heads×(k_nope ++ v)
+
+The decode cache stores only (c_kv latent, k_rope): per token
+kv_lora_rank + rope_dim = 512 + 64 floats versus 128 heads × 2 × 128 for
+plain MHA — the 57x cache compression that makes 32k/500k decode shapes
+feasible; this is the serving-memory stressor among the assigned archs.
+
+Decode recomputes K/V from the cached latent (the paper's "naive"
+formulation, which XLA fuses into two extra GEMMs; the absorbed-weights
+trick is a serving optimization we note in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention
+from repro.models.common import ParamSpec, apply_rope, rms_norm
+
+
+def v_pad_to_qk(v, cfg):
+    """Pad V's head dim up to qk_head_dim so the blockwise kernel's PV
+    matmul shape matches QK (sliced back by the caller)."""
+    pad = cfg.qk_head_dim - cfg.v_head_dim
+    if pad <= 0:
+        return v
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.nope_head_dim + self.rope_head_dim
+
+
+def mla_specs(cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "wq_a": ParamSpec((cfg.d_model, cfg.q_lora_rank),
+                          ("embed", None), dtype),
+        "q_norm": ParamSpec((cfg.q_lora_rank,), (None,), dtype, "zeros"),
+        "wq_b": ParamSpec((cfg.q_lora_rank, cfg.n_heads, cfg.qk_head_dim),
+                          (None, "heads", "head_dim"), dtype),
+        "wkv_a": ParamSpec((cfg.d_model, cfg.kv_lora_rank + cfg.rope_head_dim),
+                           ("embed", None), dtype),
+        "kv_norm": ParamSpec((cfg.kv_lora_rank,), (None,), dtype, "zeros"),
+        "wkv_b": ParamSpec(
+            (cfg.kv_lora_rank, cfg.n_heads,
+             cfg.nope_head_dim + cfg.v_head_dim),
+            (None, "heads", "head_dim"), dtype),
+        "wo": ParamSpec((cfg.n_heads, cfg.v_head_dim, cfg.d_model),
+                        ("heads", "head_dim", "embed"), dtype),
+    }
+
+
+def _project(params, cfg: MLAConfig, x, positions):
+    """Returns (q (B,T,H,qk), c_kv (B,T,r), k_rope (B,T,1,rope))."""
+    q_lat = jnp.einsum("btd,dr->btr", x, params["wq_a"])
+    q_lat = rms_norm(q_lat, params["q_norm"])
+    q = jnp.einsum("btr,rhk->bthk", q_lat, params["wq_b"])
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv_a = jnp.einsum("btd,dr->btr", x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions)   # 1 shared head
+    return q, c_kv, k_rope
+
+
+def _expand_kv(params, cfg: MLAConfig, c_kv):
+    """latent -> (k_nope (B,S,H,nope), v (B,S,H,v))."""
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+    return jnp.split(kv, [cfg.nope_head_dim], axis=-1)
+
+
+def _mla_sdpa(cfg: MLAConfig, q, k_nope, k_rope, v, mask):
+    scale = 1.0 / math.sqrt(cfg.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    logits = jnp.einsum("bthk,bshk->bhts", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bthk,bsuk->bhts", q_rope,
+                         jnp.broadcast_to(
+                             k_rope, k_rope.shape[:2] + (1,) + k_rope.shape[3:]),
+                         preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhts,bshk->bthk", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out
+
+
+def mla_attention(params, cfg: MLAConfig, x, positions,
+                  cache: Optional[dict] = None):
+    """Returns (out (B,T,D), new_cache). Cache holds the *latent* stream."""
+    q, c_kv, k_rope = _project(params, cfg, x, positions)
+    B, T = x.shape[0], x.shape[1]
+
+    if cache is None:
+        k_nope, v = _expand_kv(params, cfg, c_kv)
+        if T >= attention.BLOCKWISE_THRESHOLD:
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    k_rope, k_rope.shape[:2] + (cfg.n_heads,
+                                                cfg.rope_head_dim))],
+                axis=-1)
+            scale = 1.0 / math.sqrt(cfg.qk_head_dim)
+            out = attention._sdpa_blockwise(
+                q, k_full, v_pad_to_qk(v, cfg), positions, positions,
+                None, scale)[..., :cfg.v_head_dim]
+        else:
+            mask = positions[:, None, :] <= positions[:, :, None]
+            out = _mla_sdpa(cfg, q, k_nope, k_rope, v, mask)
+        new_cache = None
+    else:
+        idx = cache["index"]
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, idx, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, idx, axis=1)
+        S = ckv.shape[1]
+        k_nope, v = _expand_kv(params, cfg, ckv)
+        kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = (kv_pos[:, None, :] <= positions[:, :, None]) & \
+               (kv_pos[:, None, :] < idx + T)
+        out = _mla_sdpa(cfg, q, k_nope, ckr, v, mask)
+        new_cache = {"c_kv": ckv, "k_rope": ckr, "index": idx + T}
+
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), new_cache
+
+
+def init_cache(cfg: MLAConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, 1, cfg.rope_head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: MLAConfig) -> dict:
+    return {
+        "c_kv": ("batch", "cache_seq", None),
+        "k_rope": ("batch", "cache_seq", None, None),
+        "index": (),
+    }

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts FFN (phi3.5-moe: 16e top-2; deepseek-v3: 1 shared +
+256 routed top-8 with aux-free sigmoid routing).
+
+Expert-parallel formulation: experts are a leading param axis (logical
+axis "experts" -> mesh "model"), and dispatch is dense one-hot einsum over
+a capacity-bounded buffer — the standard TPU MoE layout (GShard/Switch):
+no dynamic shapes, the all-to-all materializes as einsum contractions that
+GSPMD lowers onto the expert axis.
+
+Routing styles:
+  "softmax_topk"  — softmax over router logits then top-k renormalized
+                    (phi/mixtral style)
+  "sigmoid_topk"  — deepseek-v3: sigmoid affinities + per-expert bias for
+                    aux-free load balance; weights renormalized over top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    n_shared: int = 0              # shared (always-on) experts
+    d_ff_shared: int = 0           # hidden of the fused shared expert
+    routing: str = "softmax_topk"  # or "sigmoid_topk"
+    capacity_factor: float = 1.25
+    router_dtype: object = jnp.float32
+    dispatch_groups: int = 16      # GShard groups (-> data axis); auto-
+    # reduced to the largest power of two dividing the token count
+
+
+def moe_specs(cfg: MoEConfig, dtype=jnp.bfloat16):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s = {
+        "router": ParamSpec((D, E), ("embed", None), jnp.float32,
+                            init_scale=0.02),
+        "wi_gate": ParamSpec((E, D, F), ("experts", "embed", "mlp"), dtype),
+        "wi_up": ParamSpec((E, D, F), ("experts", "embed", "mlp"), dtype),
+        "wo": ParamSpec((E, F, D), ("experts", "mlp", "embed"), dtype),
+    }
+    if cfg.routing == "sigmoid_topk":
+        s["router_bias"] = ParamSpec((E,), (None,), jnp.float32, "zeros")
+    if cfg.n_shared > 0:
+        Fs = cfg.d_ff_shared or cfg.n_shared * F
+        s["shared_wi_gate"] = ParamSpec((D, Fs), ("embed", "mlp"), dtype)
+        s["shared_wi_up"] = ParamSpec((D, Fs), ("embed", "mlp"), dtype)
+        s["shared_wo"] = ParamSpec((Fs, D), ("mlp", "embed"), dtype)
+    return s
+
+
+def _route(params, cfg: MoEConfig, x_flat):
+    """x_flat (N, D) -> (weights (N, k) f32, idx (N, k) i32, aux_loss)."""
+    logits = (x_flat.astype(cfg.router_dtype)
+              @ params["router"].astype(cfg.router_dtype))     # (N, E)
+    if cfg.routing == "sigmoid_topk":
+        affin = jax.nn.sigmoid(logits)
+        biased = affin + params["router_bias"][None, :]
+        _, idx = jax.lax.top_k(biased, cfg.top_k)             # bias picks...
+        w = jnp.take_along_axis(affin, idx, axis=1)           # ...affin pays
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        aux = jnp.zeros((), jnp.float32)                      # aux-free
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        # Switch-style load-balance loss: E * sum_e f_e * p_e
+        me = probs.mean(axis=0)
+        one_hot = jax.nn.one_hot(idx[:, 0], cfg.n_experts, dtype=jnp.float32)
+        ce = one_hot.mean(axis=0)
+        aux = cfg.n_experts * jnp.sum(me * ce)
+    return w.astype(jnp.float32), idx, aux
+
+
+def _capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _n_groups(cfg: MoEConfig, N: int) -> int:
+    """Dispatch groups (GShard-style). Groups map onto the data axis so
+    slot assignment (a cumsum) and the dispatch scatter stay shard-local;
+    the expert einsum then carries a ("batch", "experts") layout that
+    GSPMD turns into the canonical MoE all-to-all instead of replicating
+    the expert GEMMs (the 256x compute blow-up the baseline §Perf row
+    measured)."""
+    g = cfg.dispatch_groups
+    while g > 1 and N % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def _dispatch_group(xg, idxg, wg, C: int, E: int, top_k: int):
+    """One group's dispatch. xg (n, D), idxg/wg (n, k).
+    Returns (disp (E, C, D), e_flat, s_flat, w_masked)."""
+    n, D = xg.shape
+    onehot = jax.nn.one_hot(idxg, E, dtype=jnp.int32)         # (n, k, E)
+    flat = onehot.reshape(n * top_k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=0) - 1) * flat          # (n*k, E)
+    slot = pos_in_e.max(axis=1).reshape(n, top_k)             # (n, k)
+    keep = slot < C
+    w = jnp.where(keep, wg, 0.0)
+    e_flat = idxg.reshape(-1)
+    s_flat = jnp.where(keep, slot, C).reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), top_k)
+    disp = jnp.zeros((E, C, D), xg.dtype)
+    disp = disp.at[e_flat, jnp.minimum(s_flat, C - 1)].add(
+        jnp.where((s_flat < C)[:, None], xg[tok], 0).astype(xg.dtype))
+    return disp, e_flat, s_flat, w
+
+
+def _combine_group(eo, e_flat, s_flat, w, C: int, top_k: int):
+    """eo (E, C, D) -> (n, D) weighted combine.
+
+    The elementwise weighting casts back to eo's dtype immediately: the
+    gather partials cross the model axis (an all-reduce), and an f32
+    promotion here doubles that collective's bytes — §Perf iteration 3
+    measured exactly that before this cast."""
+    out_k = eo[e_flat, jnp.minimum(s_flat, C - 1)]            # (n*k, D)
+    out_k = (out_k.astype(jnp.float32)
+             * w.reshape(-1, 1)).astype(eo.dtype)
+    n = w.shape[0]
+    return out_k.reshape(n, top_k, eo.shape[2]).sum(axis=1)
+
+
+def moe_ffn(params, cfg: MoEConfig, x):
+    """x (B, T, D) -> (out (B, T, D), aux_loss).
+
+    Grouped dense-dispatch EP MoE: tokens split into G groups (logical
+    axis "batch" -> data), experts stay a leading axis (logical
+    "experts" -> model). Slot assignment + scatter vmap over groups
+    (shard-local); the expert SwiGLU runs as (G, E, C, D) einsums whose
+    (data, model) layout yields the all-to-all dispatch schedule."""
+    from repro.dist.sharding import constrain
+    B, T, D = x.shape
+    N = B * T
+    xf = x.reshape(N, D)
+    w, idx, aux = _route(params, cfg, xf)
+    E = cfg.n_experts
+    G = _n_groups(cfg, N)
+    n_g = N // G
+    C = _capacity(cfg, n_g)
+
+    xg = xf.reshape(G, n_g, D)
+    idx_g = idx.reshape(G, n_g, cfg.top_k)
+    w_g = w.reshape(G, n_g, cfg.top_k)
+    disp, e_flat, s_flat, w_m = jax.vmap(
+        lambda xx, ii, ww: _dispatch_group(xx, ii, ww, C, E, cfg.top_k)
+    )(xg, idx_g, w_g)                                          # (G, E, C, D)
+    disp = constrain(disp, ("batch", "experts", None, "embed"))
+
+    # Expert einsums emit the model dtype: with preferred f32 outputs the
+    # *backward cotangents* of disp/h are f32 and the dispatch/combine
+    # cross-shard reductions double in bytes (§Perf iteration 4; on TPU
+    # the MXU still accumulates in f32 internally).
+    g = jnp.einsum("gecd,edf->gecf", disp, params["wi_gate"],
+                   preferred_element_type=x.dtype)
+    u = jnp.einsum("gecd,edf->gecf", disp, params["wi_up"],
+                   preferred_element_type=x.dtype)
+    h = (jax.nn.silu(g.astype(jnp.float32))
+         * u.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, ("batch", "experts", None, "mlp"))
+    eo = jnp.einsum("gecf,efd->gecd", h, params["wo"],
+                    preferred_element_type=x.dtype)
+    eo = constrain(eo, ("batch", "experts", None, "embed"))
+
+    out = jax.vmap(
+        lambda ee, ef, sf, ww: _combine_group(ee, ef, sf, ww, C, cfg.top_k)
+    )(eo, e_flat, s_flat, w_m)                                 # (G, n_g, D)
+    # remat save-point: the combine output's cross-shard all-reduce is the
+    # layer's dominant collective — recomputing it in the backward pass
+    # would double it (see EXPERIMENTS.md §Perf iteration 2).
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out, "moe_combine")
+    out = out.reshape(N, D)
+
+    if cfg.n_shared > 0:
+        gs = xf @ params["shared_wi_gate"]
+        us = xf @ params["shared_wi_up"]
+        out = out + (jax.nn.silu(gs.astype(jnp.float32)) *
+                     us.astype(jnp.float32)).astype(x.dtype) \
+            @ params["shared_wo"]
+    return out.reshape(B, T, D).astype(x.dtype), aux

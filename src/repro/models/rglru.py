@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)            (input gate)
+  a_t = a^(c * r_t)   with a = sigmoid(Lambda),  c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Implemented as an associative scan over T in log-space for a_t
+(TPU-native; the GPU paper uses a custom sequential kernel, the scan is
+the published Griffin-JAX formulation). The block wraps the recurrence in
+the Griffin "recurrent block": linear in -> conv1d(4) -> RG-LRU -> gated
+linear out. Constant-size decode state => runs long_500k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int                    # recurrence width (gemma: ~ d_model)
+    conv_width: int = 4
+    c_mult: float = 8.0
+
+
+def rglru_specs(cfg: RGLRUConfig, dtype=jnp.bfloat16):
+    D, R = cfg.d_model, cfg.d_rnn
+    return {
+        "in_x": ParamSpec((D, R), ("embed", "rnn"), dtype),
+        "in_gate": ParamSpec((D, R), ("embed", "rnn"), dtype),
+        "conv_w": ParamSpec((cfg.conv_width, R), (None, "rnn"), dtype,
+                            init_scale=0.5),
+        "conv_b": ParamSpec((R,), ("rnn",), dtype, "zeros"),
+        "wa": ParamSpec((R, R), ("rnn", None), dtype, init_scale=0.02),
+        "ba": ParamSpec((R,), (None,), jnp.float32, "zeros"),
+        "wx": ParamSpec((R, R), ("rnn", None), dtype, init_scale=0.02),
+        "bx": ParamSpec((R,), (None,), jnp.float32, "zeros"),
+        "lamb": ParamSpec((R,), (None,), jnp.float32, "ones"),
+        "out": ParamSpec((R, D), ("rnn", "embed"), dtype),
+    }
+
+
+def _rglru_scan(x, a_log, gated_x, h0=None):
+    """h_t = exp(a_log_t) h_{t-1} + gated_x_t, associative over T.
+    x unused except shapes; a_log, gated_x (b, T, R) f32."""
+    def combine(left, right):
+        al, xl = left
+        ar, xr = right
+        return al + ar, xr + jnp.exp(ar) * xl
+
+    al = a_log.transpose(1, 0, 2)
+    xl = gated_x.transpose(1, 0, 2)
+    if h0 is not None:
+        xl = xl.at[0].add(jnp.exp(al[0]) * h0)
+    _, h = jax.lax.associative_scan(combine, (al, xl), axis=0)
+    return h.transpose(1, 0, 2)                     # (b, T, R)
+
+
+def rglru_block(params, cfg: RGLRUConfig, x, cache: Optional[dict] = None):
+    """x (b, T, D) -> (y (b, T, D), new_cache {conv, h, index})."""
+    b, T, D = x.shape
+    R, W = cfg.d_rnn, cfg.conv_width
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dr->btr", x, params["in_gate"]).astype(jnp.float32))
+    xr = jnp.einsum("btd,dr->btr", x, params["in_x"])
+
+    # causal conv1d
+    if cache is None:
+        pad = jnp.zeros((b, W - 1, R), xr.dtype)
+        xin = jnp.concatenate([pad, xr], axis=1)
+    else:
+        xin = jnp.concatenate([cache["conv"].astype(xr.dtype), xr], axis=1)
+    new_conv = xin[:, -(W - 1):] if W > 1 else None
+    idxs = jnp.arange(T)[:, None] + jnp.arange(W)[None, :]
+    windows = xin[:, idxs]
+    xr = jnp.einsum("btwr,wr->btr", windows, params["conv_w"]) \
+        + params["conv_b"].astype(xr.dtype)
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid(xf @ params["wx"].astype(jnp.float32) + params["bx"])
+    log_a_base = jax.nn.log_sigmoid(params["lamb"])          # (R,) < 0
+    a_log = cfg.c_mult * r * log_a_base[None, None, :]       # (b, T, R) < 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-6))
+    gated_x = beta * (i * xf)
+
+    h0 = cache["h"] if cache is not None else None
+    h = _rglru_scan(xf, a_log, gated_x, h0)
+    y = (h * gate).astype(x.dtype)
+    out = jnp.einsum("btr,rd->btd", y, params["out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(jnp.bfloat16),
+                     "h": h[:, -1].astype(jnp.float32),
+                     "index": cache["index"] + T}
+    return out, new_cache
+
+
+def init_cache(cfg: RGLRUConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: RGLRUConfig) -> dict:
+    return {"conv": ("batch", None, "rnn"),
+            "h": ("batch", "rnn"), "index": ()}

@@ -1,0 +1,213 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060 §6; "attn-free" assigned arch mamba2-1.3b).
+
+SSD computes y = SSM(A, B, C)(x) for scalar-per-head decay A_t by
+splitting the sequence into chunks: intra-chunk terms are a masked
+matmul (the "quadratic/attention" dual form, MXU-friendly), inter-chunk
+terms propagate a per-chunk state h (the "linear/recurrent" form) through
+an associative scan. This is the TPU-native formulation: all heavy math
+is (chunk x chunk) or (chunk x state) matmuls.
+
+Decode keeps a constant-size recurrent state (B*H, P, S_state) + the conv
+tail — the reason this arch runs long_500k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64             # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    n_groups: int = 1              # B/C shared across heads per group
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_specs(cfg: SSMConfig, dtype=jnp.bfloat16):
+    D, Din, H, S = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    G = cfg.n_groups
+    d_in_proj = 2 * Din + 2 * G * S + H
+    return {
+        "in_proj": ParamSpec((D, d_in_proj), ("embed", "mlp"), dtype),
+        "conv_w": ParamSpec((cfg.conv_width, Din + 2 * G * S),
+                            (None, "mlp"), dtype, init_scale=0.5),
+        "conv_b": ParamSpec((Din + 2 * G * S,), ("mlp",), dtype, "zeros"),
+        "A_log": ParamSpec((H,), ("heads",), jnp.float32, "zeros"),
+        "dt_bias": ParamSpec((H,), ("heads",), jnp.float32, "zeros"),
+        "D_skip": ParamSpec((H,), ("heads",), jnp.float32, "ones"),
+        "norm": ParamSpec((Din,), ("mlp",), dtype, "zeros"),
+        "out_proj": ParamSpec((Din, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD scan. x (b, T, H, P); dt (b, T, H) >=0; A (H,) <0 decay rates;
+    Bm/Cm (b, T, G, S). Returns (y (b, T, H, P), h_last (b, H, P, S))."""
+    b, T, H, P = x.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rep = H // G
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = jnp.repeat(Bm.reshape(b, nc, chunk, G, S), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(b, nc, chunk, G, S), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                  # (b, nc, c, H) <= 0
+    seg = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    total = seg[:, :, -1, :]                           # (b, nc, H)
+
+    # --- intra-chunk (dual quadratic form) ---
+    # L[i,j] = exp(seg_i - seg_j) for i >= j
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]     # (b,nc,c,c,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bnihs,bnjhs->bnijh", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    M = scores * L * dtc[:, :, None, :, :]                 # dt enters via B
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states: h_n = sum_j exp(total - seg_j) * dt_j B_j x_j^T ---
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)     # (b,nc,c,H)
+    w = (decay_to_end * dtc).astype(x.dtype)
+    states = jnp.einsum("bnjh,bnjhs,bnjhp->bnhps", w, Bc, xc,
+                        preferred_element_type=jnp.float32)  # (b,nc,H,P,S)
+
+    # --- inter-chunk recurrence over nc (associative scan) ---
+    decay_chunk = jnp.exp(total)                           # (b, nc, H)
+
+    def combine(a, c):
+        da, ha = a
+        dc, hc = c
+        return da * dc, hc + dc[..., None, None] * ha
+
+    dch = decay_chunk.transpose(1, 0, 2)                   # (nc, b, H)
+    sth = states.transpose(1, 0, 2, 3, 4)                  # (nc, b, H, P, S)
+    _, hcum = jax.lax.associative_scan(combine, (dch, sth), axis=0)
+    # h_prev for chunk n = state after chunks < n (+ carried h0)
+    h_after = hcum.transpose(1, 0, 2, 3, 4)                # (b, nc, H, P, S)
+    zero = jnp.zeros_like(h_after[:, :1])
+    h_prev = jnp.concatenate([zero, h_after[:, :-1]], axis=1)
+    if h0 is not None:
+        # prepend carried state decayed into every chunk
+        cumdec = jnp.exp(jnp.cumsum(
+            jnp.concatenate([jnp.zeros_like(total[:, :1]), total[:, :-1]],
+                            axis=1), axis=1))              # (b, nc, H)
+        h_prev = h_prev + cumdec[..., None, None] * h0[:, None]
+        h_last = h_after[:, -1] + jnp.exp(total.sum(axis=1))[..., None, None] * h0
+    else:
+        h_last = h_after[:, -1]
+
+    # --- inter-chunk output: C_i exp(seg_i) h_prev ---
+    din = jnp.exp(seg).astype(x.dtype)                     # (b, nc, c, H)
+    y_inter = jnp.einsum("bnihs,bnih,bnhps->bnihp",
+                         Cc, din, h_prev.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, T, H, P)
+    return y.astype(x.dtype), h_last.astype(jnp.float32)
+
+
+def ssm_block(params, cfg: SSMConfig, x, cache: Optional[dict] = None):
+    """x (b, T, D) -> (y (b, T, D), new_cache). Cache = {conv, h, index}."""
+    b, T, D = x.shape
+    Din, G, S, H, P = (cfg.d_inner, cfg.n_groups, cfg.d_state,
+                       cfg.n_heads, cfg.head_dim)
+    proj = jnp.einsum("btd,de->bte", x, params["in_proj"])   # (b,T,dproj)
+    z = proj[..., :Din]
+    xBC = proj[..., Din:2 * Din + 2 * G * S]
+    dt_raw = proj[..., 2 * Din + 2 * G * S:]
+
+    # causal depthwise conv over xBC
+    W = cfg.conv_width
+    if cache is None:
+        pad = jnp.zeros((b, W - 1, xBC.shape[-1]), xBC.dtype)
+        xin = jnp.concatenate([pad, xBC], axis=1)
+        new_conv = xin[:, -(W - 1):] if W > 1 else None
+    else:
+        xin = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+        new_conv = xin[:, -(W - 1):] if W > 1 else None
+    idxs = jnp.arange(T)[:, None] + jnp.arange(W)[None, :]
+    windows = xin[:, idxs]                                  # (b, T, W, ch)
+    xBC = jnp.einsum("btwc,wc->btc", windows, params["conv_w"]) \
+        + params["conv_b"]
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+
+    xs = xBC[..., :Din].reshape(b, T, H, P)
+    Bm = xBC[..., Din:Din + G * S].reshape(b, T, G, S)
+    Cm = xBC[..., Din + G * S:].reshape(b, T, G, S)
+    A = -jnp.exp(params["A_log"])                            # (H,) < 0
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                # (b, T, H) > 0
+
+    h0 = cache["h"] if cache is not None else None
+    if T % cfg.chunk == 0 and T > 1:
+        y, h_last = _ssd_chunked(xs, dt, A, Bm, Cm, cfg.chunk, h0)
+    else:
+        # short/decode path: plain scan over T (T=1 at decode)
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp
+            dA = jnp.exp(dtt * A)                            # (b, H)
+            Bh = jnp.repeat(Bt, H // G, axis=1)              # (b, H, S)
+            Ch = jnp.repeat(Ct, H // G, axis=1)
+            upd = jnp.einsum("bh,bhs,bhp->bhps", dtt, Bh, xt.astype(jnp.float32))
+            h = dA[..., None, None] * h + upd
+            yt = jnp.einsum("bhs,bhps->bhp", Ch, h)
+            return h, yt
+        h0v = h0 if h0 is not None else jnp.zeros((b, H, P, S), jnp.float32)
+        xsw = xs.transpose(1, 0, 2, 3)
+        dtw = dt.transpose(1, 0, 2)
+        Bw = Bm.transpose(1, 0, 2, 3).astype(jnp.float32)
+        Cw = Cm.transpose(1, 0, 2, 3).astype(jnp.float32)
+        h_last, ys = jax.lax.scan(step, h0v, (xsw, dtw, Bw, Cw))
+        y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+    y = y + params["D_skip"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(b, T, Din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"])
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(jnp.bfloat16), "h": h_last,
+                     "index": cache["index"] + T}
+    return out, new_cache
+
+
+def init_cache(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.n_groups * cfg.d_state),
+                          dtype),
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                       jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: SSMConfig) -> dict:
+    return {
+        "conv": ("batch", None, "mlp"),
+        "h": ("batch", "heads", None, None),
+        "index": (),
+    }

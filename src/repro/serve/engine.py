@@ -1,0 +1,169 @@
+"""Batched serving engine: continuous batching over a fixed lane count.
+
+The engine owns a decode state of `lanes` sequences. Requests queue up;
+free lanes are prefilled (one jitted prefill per prompt-length bucket)
+and their KV/state caches written into the batched decode cache; every
+engine step decodes ALL lanes in one jitted call (the GPU-paper analogue:
+fixed-shape batched execution, no per-request kernels). Finished lanes
+(EOS or max_tokens) free up and the queue refills them.
+
+This is deliberately the same fixed-lane design the Garfield OOC engine
+uses for queries — both follow the paper's "minimize live per-request
+state, keep shapes static" principle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (T,) i32
+    max_new: int = 32
+    eos: int = -1                    # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params, cfg: lm.LMConfig, lanes: int = 8,
+                 max_seq: int = 512, sampler: str = "greedy",
+                 temperature: float = 1.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.lanes = lanes
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.caches = lm.init_caches(cfg, lanes, max_seq)
+        self.lane_req: list[Optional[Request]] = [None] * lanes
+        self.lane_pos = np.zeros(lanes, np.int32)
+        self.queue: list[Request] = []
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, caches: lm.decode_step(p, cfg, tok, caches))
+        # per-bucket prefill jits (powers of two)
+        self._prefill_cache = {}
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def step(self):
+        """Admit queued requests into free lanes, then one decode step."""
+        self._admit()
+        active = [i for i, r in enumerate(self.lane_req) if r is not None]
+        if not active:
+            return []
+        tok = np.zeros((self.lanes, 1), np.int32)
+        for i in active:
+            r = self.lane_req[i]
+            tok[i, 0] = r.out[-1] if r.out else int(r.prompt[-1])
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(tok), self.caches)
+        nxt = self._sample(logits)
+        finished = []
+        for i in active:
+            r = self.lane_req[i]
+            t = int(nxt[i])
+            r.out.append(t)
+            self.lane_pos[i] += 1
+            if t == r.eos or len(r.out) >= r.max_new \
+                    or self.lane_pos[i] >= self.max_seq - 1:
+                r.done = True
+                finished.append(r)
+                self.lane_req[i] = None
+        self.steps += 1
+        return finished
+
+    def run(self, max_steps: int = 10000):
+        """Drain the queue; returns completed requests."""
+        done = []
+        while (self.queue or any(self.lane_req)) and max_steps > 0:
+            done.extend(self.step())
+            max_steps -= 1
+        return done
+
+    # -- internals ----------------------------------------------------------
+
+    def _sample(self, logits):
+        if self.sampler == "greedy":
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature, axis=-1))
+
+    def _bucket(self, n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens):
+                # single-lane prefill into a fresh cache
+                return lm.prefill(params, cfg, tokens=tokens,
+                                  max_seq=self.max_seq)
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
+
+    def _admit(self):
+        for i in range(self.lanes):
+            if self.lane_req[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            T = len(req.prompt)
+            bucket = self._bucket(T)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - T:] = req.prompt      # left-pad into bucket
+            logits, fresh = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks))
+            # copy lane 0 of fresh cache into lane i of batched cache
+            self.caches = jax.tree.map(
+                lambda big, small: (big.at[:, i].set(small[:, 0])
+                                    if big.ndim >= 2 and
+                                    big.shape[1] == self.lanes
+                                    else big) if hasattr(big, "at") else big,
+                self.caches, fresh)
+            # invalidate the left-pad slots (pos -> -1) so padding KV can
+            # never be attended (RoPE is relative: the offset is harmless)
+            pad = bucket - T
+            if pad > 0:
+                new_caches = []
+                for c in self.caches:
+                    c = dict(c)
+                    if "pos" in c:
+                        c["pos"] = c["pos"].at[:, i, :pad].set(-1)
+                    new_caches.append(c)
+                self.caches = new_caches
+            # note: cache leading axis is (layers_in_run, batch, ...)
+            self.lane_pos[i] = bucket
+            req.out.append(int(np.asarray(jnp.argmax(logits[0]))))
+            self.lane_req[i] = req
+            # indices advance globally; set shared index to max lane pos
+            self.caches = _set_index(self.caches, int(self.lane_pos.max()))
+
+
+def _set_index(caches, value: int):
+    out = []
+    for c in caches:
+        c = dict(c)
+        c["index"] = jnp.full_like(c["index"], value)
+        out.append(c)
+    return out

@@ -1,0 +1,56 @@
+"""RAG bridge: the LM stack ⇄ Garfield (the paper's deployment context).
+
+A deployed Garfield serves range-filtered vector retrieval for a
+generation stack (the paper's motivating RAG/video-search scenarios,
+§1). This module wires the two pillars of this repo together:
+
+  embed   — mean-pooled final hidden state of an LM over the text tokens
+            (the embedding producer),
+  retrieve— Garfield RFANNS with structured predicates (e.g. timestamp
+            range), via the in-core Searcher or the out-of-core engine,
+  answer  — retrieved ids feed the generation prompt (demo-level).
+
+examples/rag_serving.py runs this end-to-end with a reduced LM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import Searcher
+from repro.core.types import SearchParams
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class RagPipeline:
+    params: dict
+    cfg: lm.LMConfig
+    searcher: Searcher
+
+    def __post_init__(self):
+        def embed_fn(params, tokens):
+            h, _, _ = lm.forward(params, self.cfg, tokens=tokens)
+            return h.mean(axis=1)                      # (B, D) mean pool
+        self._embed = jax.jit(embed_fn)
+        dim = self.searcher.index.dim
+        # project LM hidden -> index dim with a fixed random map (stands
+        # in for a trained embedding head; deterministic per run)
+        key = jax.random.PRNGKey(7)
+        self._proj = jax.random.normal(
+            key, (self.cfg.d_model, dim), jnp.float32) / np.sqrt(
+                self.cfg.d_model)
+
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        h = self._embed(self.params, jnp.asarray(tokens))
+        return np.asarray(h.astype(jnp.float32) @ self._proj)
+
+    def retrieve(self, tokens: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                 k: int = 5, params: SearchParams | None = None):
+        q = self.embed(tokens)
+        return self.searcher.search(q, lo, hi,
+                                    params or SearchParams(k=k))

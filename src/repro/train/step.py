@@ -1,0 +1,144 @@
+"""train_step / serve_step factories — the functions the dry-run lowers
+and the training loop runs.
+
+train_step: CE loss (+MoE aux +MTP) -> grads -> AdamW update, with
+per-layer remat (scan body checkpointing), optional grad accumulation
+(scan over microbatches, accumulating in f32), bf16 params / f32 moments.
+
+Shardings are produced by dist.sharding from the models' logical axes;
+GSPMD inserts the collectives (all-reduce over (pod, data) for grads,
+all-gathers around TP) — the dry-run's collective schedule is read from
+the compiled HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import param_logical_axes, param_shapes
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_with_warmup
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    grad_accum: int = 1
+    remat: bool = True
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+
+
+def make_train_step(cfg: lm.LMConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, step}; batch = {tokens|embeds, labels[, ctx]}.
+    """
+    mcfg = dataclasses.replace(cfg, remat=tcfg.remat)
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(
+            params, mcfg,
+            tokens=batch.get("tokens"), labels=batch["labels"],
+            embeds=batch.get("embeds"), ctx=batch.get("ctx"))
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.grad_accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((tcfg.grad_accum,
+                                     x.shape[0] // tcfg.grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / tcfg.grad_accum
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        lr = cosine_with_warmup(state["step"], peak_lr=tcfg.peak_lr,
+                                warmup=tcfg.warmup, total=tcfg.total_steps)
+        new_params, new_opt = adamw_update(params, grads, state["opt"],
+                                           tcfg.opt, lr)
+        metrics = {"loss": loss, "lr": lr,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(g.astype(jnp.float32) ** 2)
+                       for g in jax.tree.leaves(grads)))}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_serve_prefill(cfg: lm.LMConfig, max_seq: int):
+    def prefill_step(params, batch, caches):
+        return lm.prefill(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), ctx=batch.get("ctx"),
+                          caches=caches, max_seq=max_seq)
+    return prefill_step
+
+
+def make_serve_decode(cfg: lm.LMConfig):
+    def decode(params, token, caches, ctx=None):
+        return lm.decode_step(params, cfg, token, caches, ctx=ctx)
+    return decode
+
+
+def init_state(cfg: lm.LMConfig, tcfg: TrainConfig, key):
+    from repro.models.common import init_params
+    params = init_params(lm.lm_specs(cfg), key)
+    return {"params": params, "opt": adamw_init(params, tcfg.opt),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes(cfg: lm.LMConfig, tcfg: TrainConfig):
+    """ShapeDtypeStructs + logical axes for the dry-run (no allocation)."""
+    specs = lm.lm_specs(cfg)
+    p_shapes = param_shapes(specs)
+    p_axes = param_logical_axes(specs)
+
+    def mom_shapes(sds):
+        if tcfg.opt.int8_moments:
+            return {"m": jax.ShapeDtypeStruct(sds.shape, jnp.int8),
+                    "ms": jax.ShapeDtypeStruct((), jnp.float32),
+                    "v": jax.ShapeDtypeStruct(sds.shape, jnp.int8),
+                    "vs": jax.ShapeDtypeStruct((), jnp.float32)}
+        return {"m": jax.ShapeDtypeStruct(sds.shape, jnp.float32),
+                "v": jax.ShapeDtypeStruct(sds.shape, jnp.float32)}
+
+    def mom_axes(ax):
+        if tcfg.opt.int8_moments:
+            return {"m": ax, "ms": (), "v": ax, "vs": ()}
+        return {"m": ax, "v": ax}
+
+    is_ax = lambda x: isinstance(x, tuple)
+    state_sh = {
+        "params": p_shapes,
+        "opt": {"mu": jax.tree.map(mom_shapes, p_shapes),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_ax = {
+        "params": p_axes,
+        "opt": {"mu": jax.tree.map(mom_axes, p_axes, is_leaf=is_ax),
+                "count": ()},
+        "step": (),
+    }
+    return state_sh, state_ax

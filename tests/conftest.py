@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device
+(the dry-run sets its own flag in its own process)."""
+
+import numpy as np
+import pytest
+
+from repro.core import gmg
+from repro.core.types import GMGConfig
+from repro.data import make_dataset, make_queries
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    """(vectors, attrs): 4k points, 64-dim, 4 attrs (uniform regime)."""
+    v, a = make_dataset("deep", 4000, seed=0, m=4)
+    return v, a
+
+
+@pytest.fixture(scope="session")
+def small_index(small_data):
+    v, a = small_data
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=12, n_clusters=16,
+                    build_ef=48, batch_cells=2, dense_threshold=256)
+    return gmg.build_gmg(v, a, cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_queries(small_data):
+    v, a = small_data
+    return make_queries(v, a, 32, 2, seed=3)
+
+
+@pytest.fixture(scope="session")
+def small_truth(small_data, small_queries):
+    from repro.core.search import ground_truth
+    v, a = small_data
+    wl = small_queries
+    ids, d = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+    return ids, d

@@ -1,0 +1,195 @@
+"""Distributed substrate: sharding rules, ZeRO-1, checkpoint commit/
+restore/reshard, straggler detection, gradient compression (error
+feedback), train-loop crash/resume determinism."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.dist.straggler import StragglerMonitor
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_partition_spec_divisibility_fallback():
+    mesh = _mesh11()
+    # model axis size 1 -> always falls back to replication
+    spec = shd.partition_spec((4096, 32), ("embed", "heads"), mesh,
+                              shd.TRAIN_RULES)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_partition_spec_shards_divisible_dims():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # simulate 16-way logic on shapes without a 16-device mesh by checking
+    # the rule resolution path via a fake mesh with repeated axis... the
+    # real 256/512-device checks happen in the dry-run subprocess test.
+    spec = shd.partition_spec((40, 128), ("heads", "head_dim"), mesh,
+                              shd.TRAIN_RULES)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_zero1_sharding_prefers_largest_dim():
+    mesh = _mesh11()
+    s = shd.zero1_sharding((1024, 64), ("embed", None), mesh,
+                           shd.TRAIN_RULES)
+    assert isinstance(s, jax.sharding.NamedSharding)
+
+
+def test_batch_sharding_falls_back_for_odd_batches():
+    mesh = _mesh11()
+    s = shd.batch_sharding(mesh, 7)
+    assert s.spec == jax.sharding.PartitionSpec()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: commit marker, restore, torn write, resume determinism
+# ---------------------------------------------------------------------------
+
+def _state(x=0.0):
+    return {"params": {"w": jnp.full((4, 4), x), "b": jnp.zeros((4,))},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, _state(1.5))
+    got, step = restore_checkpoint(d, _state())
+    assert step == 10
+    np.testing.assert_allclose(np.asarray(got["params"]["w"]), 1.5)
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, _state(1.0))
+    # torn write: step_20 exists but no COMMITTED marker
+    os.makedirs(os.path.join(d, "step_20"))
+    with open(os.path.join(d, "step_20", "shard_0.npz"), "wb") as f:
+        f.write(b"garbage")
+    assert latest_step(d) == 10
+    got, step = restore_checkpoint(d, _state())
+    assert step == 10
+
+
+def test_restore_with_new_sharding(tmp_path):
+    """Elastic reshard path: restore device_puts with provided shardings."""
+    d = str(tmp_path)
+    save_checkpoint(d, 5, _state(2.0))
+    mesh = _mesh11()
+    sh = jax.tree.map(lambda _: shd.replicated(mesh), _state())
+    got, step = restore_checkpoint(d, _state(), shardings=sh)
+    assert step == 5
+    assert got["params"]["w"].sharding.mesh.shape == mesh.shape
+
+
+def test_train_loop_crash_resume_bitexact(tmp_path):
+    """Run A: 6 uninterrupted steps. Run B: crash at 3, resume, finish.
+    Final params must match exactly (deterministic data + committed
+    checkpoints)."""
+    from repro.configs import get_reduced
+    from repro.data.tokens import TokenPipeline
+    from repro.train.loop import LoopConfig, run
+    from repro.train.step import TrainConfig
+
+    cfg = get_reduced("llama3.2-3b")
+    tcfg = TrainConfig(remat=False)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=4, seq=16, seed=1)
+
+    loop_a = LoopConfig(total_steps=6, ckpt_every=2,
+                        ckpt_dir=str(tmp_path / "a"), log_every=0)
+    state_a, _ = run(cfg, tcfg, loop_a, pipe, seed=0)
+
+    loop_b = LoopConfig(total_steps=6, ckpt_every=2,
+                        ckpt_dir=str(tmp_path / "b"), log_every=0)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        run(cfg, tcfg, loop_b, pipe, seed=0, crash_at=3)
+    state_b, _ = run(cfg, tcfg, loop_b, pipe, seed=0)   # resume from ckpt
+
+    fa = jax.tree.leaves(state_a["params"])
+    fb = jax.tree.leaves(state_b["params"])
+    for a, b in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection_with_injected_delay():
+    mon = StragglerMonitor(n_hosts=4, min_steps=3)
+    for step in range(10):
+        for h in range(4):
+            t = 1.0 if h != 2 else 8.0       # host 2 is 8x slower
+            mon.record(h, t + 0.01 * step)
+    assert mon.is_straggler(2)
+    assert not mon.is_straggler(0)
+
+
+def test_straggler_recovers():
+    mon = StragglerMonitor(n_hosts=2, min_steps=2, alpha=0.9)
+    for _ in range(5):
+        mon.record(0, 1.0)
+        mon.record(1, 10.0)
+    assert mon.is_straggler(1)
+    for _ in range(30):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+    assert not mon.is_straggler(1)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (multi-device: subprocess with forced host devices)
+# ---------------------------------------------------------------------------
+
+_COMPRESSION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.dist.compression import compressed_psum
+mesh = jax.make_mesh((4,), ("pod",))
+from jax.sharding import PartitionSpec as P
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+         out_specs=(P("pod"), P("pod")))
+def sync(g, r):
+    out, new_r = compressed_psum(g[0], r[0], "pod")
+    return out[None], new_r[None]
+
+rng = np.random.default_rng(0)
+g_shards = rng.normal(size=(4, 64)).astype(np.float32)
+r = np.zeros((4, 64), np.float32)
+accum_true = np.zeros(64); accum_comp = np.zeros(64)
+for step in range(20):
+    g_shards = rng.normal(size=(4, 64)).astype(np.float32)
+    out, r = sync(jnp.asarray(g_shards), jnp.asarray(r))
+    accum_comp += np.asarray(out)[0]
+    accum_true += g_shards.mean(axis=0)
+err = np.abs(accum_comp - accum_true).max() / (np.abs(accum_true).max() + 1e-9)
+print("REL_ERR", err)
+assert err < 0.05, err
+print("OK")
+"""
+
+
+def test_compressed_psum_error_feedback():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _COMPRESSION_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert "OK" in res.stdout, res.stdout + res.stderr

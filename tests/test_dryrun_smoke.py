@@ -1,0 +1,49 @@
+"""Dry-run machinery smoke (deliverable e, reduced configs, subprocess —
+the 512-device flag must not leak into this test process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch import dryrun
+for mesh in ("single", "multi"):
+    rec = dryrun.run_cell("{arch}", "{shape}", mesh, reduced=True,
+                          save=False)
+    print(json.dumps({{"mesh": mesh, "status": rec["status"],
+                       "err": rec.get("error", "")}}))
+    assert rec["status"] == "ok", rec.get("error")
+print("DONE")
+"""
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("llama3.2-3b", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "decode_32k"),
+    ("mamba2-1.3b", "long_500k"),
+])
+def test_dryrun_reduced_both_meshes(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    code = _SCRIPT.format(arch=arch, shape=shape)
+    res = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert "DONE" in res.stdout, res.stdout[-2000:] + res.stderr[-2000:]
+
+
+def test_production_mesh_shapes():
+    """Mesh factory contract (uses however many devices exist by
+    inspecting the spec only)."""
+    from repro.launch import mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src

@@ -1,0 +1,65 @@
+"""Intra-cell graph construction: exactness, degree bound, connectivity."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import graph
+from repro.core.graph import _UnionFind
+from repro.kernels import ref
+
+
+def _components(adj):
+    n = adj.shape[0]
+    uf = _UnionFind(n)
+    us, vs = np.nonzero(adj >= 0)
+    for u, w in zip(us, adj[us, vs]):
+        uf.union(int(u), int(w))
+    return len({uf.find(i) for i in range(n)})
+
+
+def test_exact_knn_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(300, 24)).astype(np.float32)
+    knn = graph.exact_knn(v, 5)
+    d2 = np.array(ref.pairwise_l2(jnp.asarray(v), jnp.asarray(v)))
+    np.fill_diagonal(d2, np.inf)
+    want = np.argsort(d2, axis=1)[:, :5]
+    # sets match (ties may permute)
+    got_d = np.take_along_axis(d2, knn, axis=1)
+    want_d = np.take_along_axis(d2, want, axis=1)
+    np.testing.assert_allclose(np.sort(got_d, 1), np.sort(want_d, 1),
+                               rtol=1e-5)
+
+
+def test_build_cell_graph_degree_and_connectivity():
+    rng = np.random.default_rng(1)
+    # adversarial: tight, well separated clusters (kNN graph fragments)
+    centers = rng.normal(size=(8, 32)).astype(np.float32) * 10
+    v = (centers[rng.integers(0, 8, 600)]
+         + 0.1 * rng.normal(size=(600, 32)).astype(np.float32))
+    adj = graph.build_cell_graph(v, degree=8, exact_threshold=10000)
+    assert adj.shape == (600, 8)
+    assert (adj < 600).all()
+    assert not (adj == np.arange(600)[:, None]).any(), "self loop"
+    assert _components(adj) == 1, "repair_connectivity must bridge"
+
+
+def test_nn_descent_quality():
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=(500, 16)).astype(np.float32)
+    ids = graph.nn_descent(v, k=10, iters=8)
+    d2 = np.array(ref.pairwise_l2(jnp.asarray(v), jnp.asarray(v)))
+    np.fill_diagonal(d2, np.inf)
+    gt = np.argsort(d2, axis=1)[:, :10]
+    recall = np.mean([len(set(ids[i]) & set(gt[i])) / 10 for i in range(500)])
+    assert recall > 0.85, recall
+
+
+def test_tiny_cells_dont_crash():
+    v = np.random.default_rng(3).normal(size=(1, 8)).astype(np.float32)
+    adj = graph.build_cell_graph(v, degree=4)
+    assert adj.shape == (1, 4)
+    assert (adj == -1).all()
+    v2 = np.random.default_rng(4).normal(size=(3, 8)).astype(np.float32)
+    adj2 = graph.build_cell_graph(v2, degree=4)
+    assert adj2.shape == (3, 4)

@@ -1,0 +1,56 @@
+"""Grid partition invariants (paper Section 3.1) — property-based."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grid
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(2,), (4,), (2, 2),
+                                                   (4, 4), (2, 3, 2)]))
+@settings(max_examples=20, deadline=None)
+def test_partition_disjoint_cover_balanced(seed, seg_per_attr):
+    rng = np.random.default_rng(seed)
+    n, m = 2000, len(seg_per_attr) + 1
+    attrs = rng.normal(size=(n, m))
+    seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi = \
+        grid.build_grid(attrs, seg_per_attr)
+    S = int(np.prod(seg_per_attr))
+    # cover: every object in exactly one cell
+    assert cell_of.shape == (n,)
+    assert (cell_of >= 0).all() and (cell_of < S).all()
+    # CSR offsets consistent
+    counts = np.bincount(cell_of, minlength=S)
+    np.testing.assert_array_equal(np.diff(cell_start), counts)
+    # cardinality balance (continuous attrs -> near-perfect quantiles)
+    assert counts.max() <= int(1.25 * n / S) + len(seg_per_attr) + 1
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cells_for_box_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    n, p = 1000, 2
+    attrs = rng.normal(size=(n, p))
+    seg = (3, 3)
+    seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi = \
+        grid.build_grid(attrs, seg)
+    attrs_s = attrs[order]
+    cell_of_s = cell_of[order]
+    lo = rng.normal(size=(5, p)) - 0.5
+    hi = lo + rng.uniform(0.2, 2.0, size=(5, p))
+    mask = grid.cells_for_box(cell_lo, cell_hi, lo, hi)
+    # any cell holding an in-range object must be selected
+    for b in range(5):
+        ok = ((attrs_s >= lo[b]) & (attrs_s <= hi[b])).all(axis=1)
+        touched = np.unique(cell_of_s[ok])
+        assert mask[b, touched].all(), (touched, np.nonzero(mask[b])[0])
+
+
+def test_skewed_attr_segments_stay_monotone():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([np.zeros(500), rng.normal(size=500)])  # ties
+    edges = grid.quantile_edges(vals, 4)
+    assert (np.diff(edges) > 0).all()
+    seg = grid.segment_of(vals, edges)
+    assert (seg >= 0).all() and (seg <= 3).all()

@@ -1,0 +1,102 @@
+"""Out-of-core pipeline (paper Section 5): recall parity with in-core,
+HBM-bounded batching, schedule effectiveness, quantize bounds."""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import OutOfCoreEngine
+from repro.core.search import Searcher, recall_at_k
+from repro.core.types import SearchParams
+from repro.core import quantize
+
+
+@pytest.fixture(scope="module")
+def engine(small_index):
+    return OutOfCoreEngine(small_index)
+
+
+def test_ooc_recall_matches_incore(engine, small_index, small_queries,
+                                   small_truth):
+    wl = small_queries
+    params = SearchParams(k=10, ef=64)
+    ids, d = engine.search(wl.q, wl.lo, wl.hi, params)
+    rec_ooc = recall_at_k(ids, small_truth[0])
+    ids_ic, _ = Searcher(small_index).search(wl.q, wl.lo, wl.hi, params)
+    rec_ic = recall_at_k(ids_ic, small_truth[0])
+    assert rec_ooc >= rec_ic - 0.05, (rec_ooc, rec_ic)
+    assert engine.stats["n_batches"] >= 2     # actually streamed
+
+
+def test_ooc_results_exact_distances(engine, small_data, small_queries):
+    """Re-rank must return exact fp32 distances and in-range ids."""
+    v, a = small_data
+    wl = small_queries
+    ids, d = engine.search(wl.q, wl.lo, wl.hi, SearchParams(k=5, ef=64))
+    for b in range(len(ids)):
+        got = ids[b][ids[b] >= 0]
+        if len(got) == 0:
+            continue
+        np.testing.assert_allclose(
+            ((v[got] - wl.q[b]) ** 2).sum(1), d[b][:len(got)],
+            rtol=1e-4, atol=1e-3)
+        assert ((a[got] >= wl.lo[b]) & (a[got] <= wl.hi[b])).all()
+
+
+def test_schedule_reduces_active(engine, small_queries):
+    wl = small_queries
+    engine.search(wl.q, wl.lo, wl.hi, SearchParams(k=5), use_schedule=True)
+    act_sched = engine.stats["total_active"]
+    engine.search(wl.q, wl.lo, wl.hi, SearchParams(k=5), use_schedule=False)
+    act_naive = engine.stats["total_active"]
+    assert act_sched <= act_naive
+
+
+def test_hbm_budget_controls_batch(small_index):
+    eng = OutOfCoreEngine(small_index, hbm_budget_bytes=1 << 18)
+    assert 1 <= eng.cells_per_batch() <= small_index.n_cells
+    eng_big = OutOfCoreEngine(small_index, hbm_budget_bytes=1 << 34)
+    assert eng_big.cells_per_batch() >= eng.cells_per_batch()
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(100, 32)).astype(np.float32)
+    q, s = quantize.quantize(v)
+    rec = quantize.dequantize(q, s)
+    err = np.abs(rec - v).max(axis=1)
+    assert (err <= s * 0.5 + 1e-6).all()
+    bound = quantize.max_abs_error_bound(s, 32)
+    assert (np.linalg.norm(rec - v, axis=1) <= bound + 1e-5).all()
+
+
+def test_packed_visited_matches_unpacked(small_index, small_queries):
+    """Bit-packed visited words must not change search results."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import pipeline as pl
+    from repro.core import select as sel
+    from repro.core.traversal import multi_cell_search_seeded
+    idx = small_index
+    wl = small_queries
+    eng = pl.OutOfCoreEngine(idx)
+    inc = sel.incidence_numpy(wl.lo, wl.hi, idx.cell_lo, idx.cell_hi)
+    rank = eng._order_ranks(wl.q, inc)
+    cells = list(range(idx.n_cells))
+    plan = pl._remap_plan(idx, cells, inc, rank, pad_cells=len(cells))
+    dev = eng._stage(plan)
+    B = 8
+    act = plan.active_queries[:B]
+    i_map = {q: i for i, q in enumerate(plan.active_queries)}
+    itin = plan.itinerary[[i_map[q] for q in act]]
+    seed = -np.ones((B, 64), np.int32)
+    args = (eng.vq, eng.vscale, eng.attrs_dev, dev["intra"], dev["inter"],
+            dev["local_start"], dev["rows"],
+            jnp.asarray(wl.q[act]), jnp.asarray(wl.lo[act]),
+            jnp.asarray(wl.hi[act]), jnp.asarray(itin), jnp.asarray(seed),
+            jax.random.PRNGKey(3))
+    kw = dict(k=10, ef=64, entry_width=16, entry_random=4, entry_beam_l=8,
+              max_iters=96)
+    ids_u, d_u = multi_cell_search_seeded(*args, packed_visited=False, **kw)
+    ids_p, d_p = multi_cell_search_seeded(*args, packed_visited=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ids_u), np.asarray(ids_p))
+    np.testing.assert_allclose(np.asarray(d_u), np.asarray(d_p), rtol=1e-6)
