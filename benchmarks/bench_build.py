@@ -13,8 +13,8 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro.api import AttrSchema, Collection
 from repro.core.baselines import FlatBaseline
-from repro.core import gmg
 from repro.core.types import GMGConfig
 
 
@@ -27,11 +27,12 @@ def run(scale: str = "smoke"):
         cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16, n_clusters=32)
 
         t0 = time.perf_counter()
-        idx = gmg.build_gmg(v, a, cfg, seed=0)
+        col = Collection.build(v, a, schema=AttrSchema.generic(a.shape[1]),
+                               config=cfg, seed=0)
         t_gmg = time.perf_counter() - t0
-        nb = idx.nbytes()
-        common._CACHE[("index", ds, n, cfg.seg_per_attr, cfg.intra_degree,
-                       cfg.inter_degree, 0)] = idx
+        nb = col.index.nbytes()
+        common._CACHE[("collection", ds, n, cfg.seg_per_attr,
+                       cfg.intra_degree, cfg.inter_degree, 0)] = col
 
         t0 = time.perf_counter()
         flat = FlatBaseline.build(v, a, degree=16)

@@ -4,6 +4,10 @@ Each bench_* module exposes ``run(scale) -> list[dict]`` rows; run.py
 aggregates to CSV. Scales: "smoke" (CI-size) and "full" (paper-shaped,
 minutes). Rows carry (bench, dataset, config..., metric columns) —
 one bench per paper table/figure, see DESIGN.md §7.
+
+Index construction routes through the public ``repro.api.Collection``
+facade; ``built_index``/``searcher_for`` expose the underlying engine
+objects for ablation benches that poke engine-level knobs directly.
 """
 
 from __future__ import annotations
@@ -12,10 +16,10 @@ import time
 
 import numpy as np
 
-from repro.core import gmg
-from repro.core.search import Searcher, ground_truth, recall_at_k
-from repro.core.types import GMGConfig, SearchParams
-from repro.data import make_dataset, make_queries
+from repro.api import AttrSchema, Collection
+from repro.core.search import Searcher, ground_truth, recall_at_k  # noqa: F401
+from repro.core.types import GMGConfig, SearchParams  # noqa: F401
+from repro.data import make_dataset, make_queries  # noqa: F401
 
 _CACHE: dict = {}
 
@@ -32,19 +36,31 @@ def dataset(name: str, n: int, seed: int = 0):
     return _CACHE[key]
 
 
-def built_index(name: str, n: int, cfg: GMGConfig | None = None,
-                seed: int = 0):
+def built_collection(name: str, n: int, cfg: GMGConfig | None = None,
+                     seed: int = 0) -> Collection:
     cfg = cfg or GMGConfig(seg_per_attr=(2, 2), intra_degree=16,
                            n_clusters=32)
-    key = ("index", name, n, cfg.seg_per_attr, cfg.intra_degree,
+    key = ("collection", name, n, cfg.seg_per_attr, cfg.intra_degree,
            cfg.inter_degree, seed)
     if key not in _CACHE:
         v, a = dataset(name, n, seed)
-        _CACHE[key] = gmg.build_gmg(v, a, cfg, seed=seed)
+        _CACHE[key] = Collection.build(
+            v, a, schema=AttrSchema.generic(a.shape[1]), config=cfg,
+            seed=seed)
     return _CACHE[key]
 
 
-def searcher_for(index):
+def built_index(name: str, n: int, cfg: GMGConfig | None = None,
+                seed: int = 0):
+    """Engine-level view (GMGIndex) of the cached collection."""
+    return built_collection(name, n, cfg, seed).index
+
+
+def searcher_for(index) -> Searcher:
+    """The collection's in-core engine for benches that drive it raw."""
+    for v in _CACHE.values():
+        if isinstance(v, Collection) and v.index is index:
+            return v._searcher()
     key = ("searcher", id(index))
     if key not in _CACHE:
         _CACHE[key] = Searcher(index)

@@ -1,14 +1,13 @@
-"""Out-of-core RFANNS (paper Section 5): int8 vectors resident, graph
-streamed in scheduled cell batches, exact host re-rank.
+"""Out-of-core RFANNS (paper Section 5) through the `Collection` API:
+declare a device-memory budget and the collection dispatches to the
+streaming engine (int8 vectors resident, graph streamed in scheduled
+cell batches, exact host re-rank).
 
     PYTHONPATH=src python examples/out_of_core.py
 """
 
-import numpy as np
-
-from repro.core import gmg
-from repro.core.pipeline import OutOfCoreEngine, multihost_plan
-from repro.core.search import ground_truth, recall_at_k
+from repro.api import AttrSchema, Collection
+from repro.core.pipeline import multihost_plan
 from repro.core.types import GMGConfig, SearchParams
 from repro.core import select as sel
 from repro.data import make_dataset, make_queries
@@ -18,21 +17,33 @@ def main():
     vectors, attrs = make_dataset("sift", 12000, seed=0)
     cfg = GMGConfig(seg_per_attr=(2, 2, 2), intra_degree=16, n_clusters=32,
                     batch_cells=3)
-    index = gmg.build_gmg(vectors, attrs, cfg, seed=0)
+    col = Collection.build(
+        vectors, attrs,
+        schema=AttrSchema(["price", "ts", "views", "duration"]),
+        config=cfg, seed=0)
 
-    # stream under an explicit HBM budget
-    engine = OutOfCoreEngine(index, hbm_budget_bytes=2 << 20)
-    print(f"cells/batch under 2MB graph window: {engine.cells_per_batch()}")
+    # a budget below the in-core footprint forces the streaming engine,
+    # with the leftover (after the int8 residents) as the graph window
+    col.device_budget_bytes = col.out_of_core_resident_bytes() + (512 << 10)
+    plan = col.plan()
+    print(f"in-core needs {plan['in_core_bytes'] / 1e6:.1f}MB; "
+          f"budget {plan['device_budget_bytes'] / 1e6:.1f}MB -> "
+          f"engine={plan['engine']}")
+    print(f"cells/batch under 512KB graph window: "
+          f"{plan['cells_per_batch']}")
 
     wl = make_queries(vectors, attrs, 48, 2, seed=1)
-    ids, dists = engine.search(wl.q, wl.lo, wl.hi, SearchParams(k=10))
-    print("pipeline stats:", {k: v for k, v in engine.stats.items()})
+    res = col.search(wl.q, filters=(wl.lo, wl.hi),
+                     params=SearchParams(k=10))
+    assert res.engine == "out_of_core"
+    print("pipeline stats:", col.last_stats)
 
-    true_ids, _ = ground_truth(vectors, attrs, wl.q, wl.lo, wl.hi, 10)
-    print(f"recall@10 = {recall_at_k(ids, true_ids):.4f}")
+    true_ids = col.ground_truth(wl.q, filters=(wl.lo, wl.hi), k=10)
+    print(f"recall@10 = {res.recall(true_ids):.4f}")
 
     # fleet-scale plan: cells sharded over 4 hosts, Alg. 5 per host
-    inc = sel.incidence_numpy(wl.lo, wl.hi, index.cell_lo, index.cell_hi)
+    idx = col.index
+    inc = sel.incidence_numpy(wl.lo, wl.hi, idx.cell_lo, idx.cell_hi)
     host_of, plans, totals = multihost_plan(inc, n_hosts=4, batch_size=2)
     print(f"multi-host active-query totals per host: {totals}")
 

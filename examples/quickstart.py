@@ -1,40 +1,63 @@
-"""Quickstart: build a GMG index, run multi-attribute range-filtered
-ANN queries, check recall against the exact answer.
+"""Quickstart: the `Collection` API end-to-end — build a range-filtered
+ANN collection with named attributes, query it with composable filter
+expressions, persist it, and check recall against the exact answer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import gmg
-from repro.core.search import Searcher, ground_truth, recall_at_k
-from repro.core.types import GMGConfig, SearchParams
+from repro.api import AttrSchema, Collection, F
+from repro.core.types import GMGConfig
 from repro.data import make_dataset, make_queries
 
 
 def main():
-    print("1. synthesizing 10k vectors x 128d with 4 numeric attributes")
+    print("1. synthesizing 10k vectors x 128d with 4 named attributes")
     vectors, attrs = make_dataset("sift", 10000, seed=0)
+    schema = AttrSchema(["price", "ts", "views", "duration"])
 
-    print("2. building the GMG index (2x2 grid, degree-16 CAGRA cells)")
+    print("2. building the collection (2x2 grid, degree-16 CAGRA cells)")
     cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16, n_clusters=32)
-    index = gmg.build_gmg(vectors, attrs, cfg, seed=0)
-    sizes = index.nbytes()
+    col = Collection.build(vectors, attrs, schema=schema, config=cfg, seed=0)
+    sizes = col.index.nbytes()
     print(f"   index {sizes['index_bytes'] / 1e6:.1f}MB on "
           f"{sizes['vector_bytes'] / 1e6:.1f}MB of vectors "
-          f"({index.n_cells} cells)")
+          f"({col.index.n_cells} cells)")
 
     print("3. querying: 64 queries, range predicates on 2 attributes")
     wl = make_queries(vectors, attrs, 64, 2, seed=1)
-    searcher = Searcher(index)
-    ids, dists = searcher.search(wl.q, wl.lo, wl.hi,
-                                 SearchParams(k=10, ef=64))
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), k=10, ef=64)
+    print(f"   engine={res.engine}, mean valid results "
+          f"{res.valid_counts.mean():.1f}/10")
 
     print("4. exact ground truth + recall")
-    true_ids, _ = ground_truth(vectors, attrs, wl.q, wl.lo, wl.hi, 10)
-    rec = recall_at_k(ids, true_ids)
+    true_ids = col.ground_truth(wl.q, filters=(wl.lo, wl.hi), k=10)
+    rec = res.recall(true_ids)
     print(f"   recall@10 = {rec:.4f}")
     assert rec > 0.9
+
+    print("5. named one-sided filter == hand-built ±inf arrays")
+    t0 = float(np.quantile(attrs[:, 1], 0.5))
+    res_expr = col.search(wl.q, filters=F("ts") >= t0, k=10, ef=64)
+    lo = np.full((64, 4), -np.inf, np.float32)
+    hi = np.full((64, 4), np.inf, np.float32)
+    lo[:, 1] = t0
+    res_raw = col.search(wl.q, filters=(lo, hi), k=10, ef=64)
+    assert np.array_equal(res_expr.ids, res_raw.ids)
+    print("   identical ids for F('ts') >= t0")
+
+    print("6. save -> load -> search round-trip")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "collection.npz")
+        col.save(path)
+        col2 = Collection.load(path)
+        res2 = col2.search(wl.q, filters=F("ts") >= t0, k=10, ef=64)
+    assert np.array_equal(res_expr.ids, res2.ids)
+    print("   identical results after reload")
     print("OK")
 
 

@@ -1,5 +1,6 @@
 """RAG serving: an LM embeds queries, Garfield retrieves range-filtered
-documents, the serving engine generates with batched requests.
+documents through the `Collection` API, the serving engine generates
+with batched requests.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -7,9 +8,8 @@ documents, the serving engine generates with batched requests.
 import numpy as np
 import jax
 
+from repro.api import AttrSchema, Collection, F
 from repro.configs import get_reduced
-from repro.core import gmg
-from repro.core.search import Searcher
 from repro.core.types import GMGConfig
 from repro.data import make_dataset
 from repro.models import lm
@@ -21,29 +21,29 @@ from repro.serve.rag import RagPipeline
 def main():
     print("1. corpus: 8k docs with (year, views) attributes")
     vectors, attrs = make_dataset("dblp", 8000, seed=0, m=2)
-    index = gmg.build_gmg(
-        vectors, attrs,
-        GMGConfig(seg_per_attr=(2, 2), intra_degree=12, n_clusters=16),
+    col = Collection.build(
+        vectors, attrs, schema=AttrSchema(["year", "views"]),
+        config=GMGConfig(seg_per_attr=(2, 2), intra_degree=12,
+                         n_clusters=16),
         seed=0)
 
     print("2. reduced llama3.2 as the embedder/generator")
     cfg = get_reduced("llama3.2-3b")
     params = init_params(lm.lm_specs(cfg), jax.random.PRNGKey(0))
-    rag = RagPipeline(params=params, cfg=cfg, searcher=Searcher(index))
+    rag = RagPipeline(params=params, cfg=cfg, collection=col)
 
     print("3. retrieval with a year-range filter")
     rng = np.random.default_rng(0)
     queries = rng.integers(1, cfg.vocab, size=(4, 12))
-    lo = np.full((4, 2), -np.inf, np.float32)
-    hi = np.full((4, 2), np.inf, np.float32)
-    lo[:, 0] = np.quantile(attrs[:, 0], 0.5)      # recent half only
-    ids, d = rag.retrieve(queries, lo, hi, k=3)
-    print("   retrieved doc ids per query:", ids.tolist())
+    recent = float(np.quantile(attrs[:, 0], 0.5))     # recent half only
+    res = rag.retrieve(queries, filters=F("year") >= recent, k=3)
+    print("   retrieved doc ids per query:", res.ids.tolist())
 
     print("4. batched generation over the retrieved context")
     eng = Engine(params, cfg, lanes=4, max_seq=64)
     for i in range(4):
-        prompt = np.concatenate([queries[i], ids[i][ids[i] >= 0] % cfg.vocab])
+        ids = res.ids[i]
+        prompt = np.concatenate([queries[i], ids[ids >= 0] % cfg.vocab])
         eng.submit(Request(rid=i, prompt=prompt.astype(np.int64),
                            max_new=8))
     done = eng.run()

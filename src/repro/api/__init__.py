@@ -1,0 +1,20 @@
+"""Public user-facing API for the Garfield reproduction.
+
+Everything a vector-database caller needs lives here; the ``repro.core``
+modules (grid build, graph build, searchers, out-of-core streaming) are
+internal layers beneath this facade.
+
+    from repro.api import Collection, AttrSchema, F
+
+    col = Collection.build(vectors, attrs,
+                           schema=AttrSchema(["price", "ts"]))
+    res = col.search(q, filters=F("price").between(10, 50) & (F("ts") >= t0),
+                     k=10)
+    col.save("index.npz")
+    col2 = Collection.load("index.npz")
+"""
+
+from repro.api.schema import AttrSchema  # noqa: F401
+from repro.api.filters import F, FilterExpr, compile_filters  # noqa: F401
+from repro.api.result import QueryResult  # noqa: F401
+from repro.api.collection import Collection  # noqa: F401

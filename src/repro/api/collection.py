@@ -1,0 +1,263 @@
+"""``Collection`` — the index-lifecycle facade (build / search / persist).
+
+One object owns a built GMG index plus its attribute schema and picks the
+execution engine per batch, so callers never touch ``build_gmg``,
+``Searcher`` or ``OutOfCoreEngine`` directly:
+
+  - build     — ``Collection.build(vectors, attrs, schema=..., config=...)``
+  - search    — ``col.search(q, filters=F("price") <= 50, k=10)``; the
+                filter expression (or an explicit ``(lo, hi)`` pair)
+                compiles to the dense batch arrays the kernels expect.
+  - dispatch  — a declared ``device_budget_bytes`` decides between the
+                fully-resident in-core ``Searcher`` (which internally
+                splits lanes across the itinerary / global / adaptive
+                dense paths) and the streaming ``OutOfCoreEngine``; the
+                caller states a budget, not an engine class.
+  - persist   — ``col.save(path)`` / ``Collection.load(path)`` round-trip
+                the entire built index through one ``.npz`` file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping, Optional, Union
+
+import numpy as np
+
+from repro.api.filters import compile_filters
+from repro.api.result import QueryResult
+from repro.api.schema import AttrSchema
+from repro.core import gmg as gmg_mod
+from repro.core.types import GMGConfig, GMGIndex, SearchParams
+
+_FORMAT_VERSION = 1
+
+# GMGIndex array fields persisted 1:1 (seg_bounds, being a list, is
+# handled separately; None-able fields are skipped when absent).
+_INDEX_ARRAYS = ("vectors", "attrs", "perm", "cell_of", "cell_start",
+                 "cell_lo", "cell_hi", "intra_adj", "inter_adj",
+                 "centroids", "hist", "attr_quantiles", "vq", "vscale")
+
+
+@dataclasses.dataclass
+class Collection:
+    """A built, queryable, persistable vector collection."""
+
+    index: GMGIndex
+    schema: AttrSchema
+    device_budget_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        if len(self.schema) != self.index.attrs.shape[1]:
+            raise ValueError(
+                f"schema has {len(self.schema)} attributes but index stores "
+                f"{self.index.attrs.shape[1]}")
+        self._in_core = None        # lazily-built Searcher
+        self._out_of_core = None    # lazily-built OutOfCoreEngine
+        self._out_of_core_budget = None   # budget the streamer was built for
+        self._inv_perm = None       # lazily-built original-order inverse
+        self.last_stats: dict = {}
+
+    # -- lifecycle: build ---------------------------------------------------
+
+    @classmethod
+    def build(cls, vectors: np.ndarray,
+              attrs: Union[np.ndarray, Mapping[str, np.ndarray]],
+              schema: Optional[AttrSchema] = None,
+              config: Optional[GMGConfig] = None, seed: int = 0,
+              device_budget_bytes: Optional[int] = None,
+              verbose: bool = False) -> "Collection":
+        """Build a collection from raw vectors + attributes.
+
+        ``attrs`` is either an (n, m) array (column order = schema order)
+        or a mapping name -> (n,) column; with a mapping the schema is
+        optional and defaults to the mapping's key order.
+        """
+        vectors = np.asarray(vectors, np.float32)
+        if isinstance(attrs, Mapping):
+            if schema is None:
+                schema = AttrSchema(list(attrs.keys()))
+            cols = [np.asarray(attrs[name], np.float32) for name in schema]
+            attr_arr = np.stack(cols, axis=1)
+        else:
+            attr_arr = np.asarray(attrs, np.float32)
+            if schema is None:
+                schema = AttrSchema.generic(attr_arr.shape[1])
+        index = gmg_mod.build_gmg(vectors, attr_arr, config, seed=seed,
+                                  verbose=verbose)
+        return cls(index=index, schema=schema,
+                   device_budget_bytes=device_budget_bytes)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def dim(self) -> int:
+        return self.index.dim
+
+    def in_core_bytes(self) -> int:
+        """Device footprint of the fully-resident in-core engine: fp32
+        vectors + attrs + the graph twice (per-cell adjacency and the
+        concatenated global adjacency) + the ordering sketch."""
+        idx = self.index
+        graph = idx.intra_adj.nbytes + idx.inter_adj.nbytes
+        order = idx.centroids.nbytes + idx.hist.nbytes
+        return (idx.vectors.nbytes + idx.attrs.nbytes + 2 * graph + order)
+
+    def out_of_core_resident_bytes(self) -> int:
+        """Always-resident part of the streaming engine (int8 copy)."""
+        idx = self.index
+        if idx.vq is None:
+            return 0
+        return idx.vq.nbytes + idx.vscale.nbytes + idx.attrs.nbytes
+
+    # -- engine dispatch ----------------------------------------------------
+
+    def _resolve_engine(self, engine: str = "auto") -> str:
+        if engine in ("in_core", "out_of_core"):
+            return engine
+        if engine != "auto":
+            raise ValueError(f"unknown engine {engine!r}")
+        budget = self.device_budget_bytes
+        if budget is None or self.in_core_bytes() <= budget:
+            return "in_core"
+        if self.index.vq is None:
+            raise ValueError(
+                "device budget excludes the in-core engine but the index "
+                "has no quantized copy; rebuild with config.quantize=True")
+        if self.out_of_core_resident_bytes() >= budget:
+            raise ValueError(
+                f"device budget {budget}B cannot hold even the quantized "
+                f"residents ({self.out_of_core_resident_bytes()}B)")
+        return "out_of_core"
+
+    def _searcher(self):
+        if self._in_core is None:
+            from repro.core.search import Searcher
+            self._in_core = Searcher(self.index)
+        return self._in_core
+
+    def _streamer(self):
+        # rebuilt when the declared budget changes (the graph window is
+        # derived from it at construction)
+        if (self._out_of_core is None
+                or self._out_of_core_budget != self.device_budget_bytes):
+            from repro.core.pipeline import OutOfCoreEngine
+            window = None
+            if self.device_budget_bytes is not None:
+                window = max(self.device_budget_bytes
+                             - self.out_of_core_resident_bytes(), 1)
+            self._out_of_core = OutOfCoreEngine(
+                self.index, hbm_budget_bytes=window)
+            self._out_of_core_budget = self.device_budget_bytes
+        return self._out_of_core
+
+    def plan(self, engine: str = "auto") -> dict:
+        """Introspect the dispatch decision under the current budget
+        (no search is run)."""
+        which = self._resolve_engine(engine)
+        info = {"engine": which,
+                "in_core_bytes": self.in_core_bytes(),
+                "device_budget_bytes": self.device_budget_bytes}
+        if which == "out_of_core":
+            info["resident_bytes"] = self.out_of_core_resident_bytes()
+            info["cells_per_batch"] = self._streamer().cells_per_batch()
+        return info
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, q: np.ndarray, filters=None, k: int = 10,
+               ef: Optional[int] = None,
+               params: Optional[SearchParams] = None,
+               engine: str = "auto") -> QueryResult:
+        """Top-k range-filtered search over a query batch.
+
+        ``filters`` is a filter expression (``F("price") <= 50``), an
+        explicit ``(lo, hi)`` array pair, or None. ``params`` overrides
+        (k, ef) wholesale when given.
+        """
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        if params is None:
+            params = SearchParams(k=k, ef=ef)
+        lo, hi = compile_filters(filters, self.schema, q.shape[0])
+        which = self._resolve_engine(engine)
+        self.last_stats = {}          # never report a previous batch's stats
+        if q.shape[0] == 0:
+            return QueryResult.empty(params.k, engine=which)
+        if which == "in_core":
+            ids, d = self._searcher().search(q, lo, hi, params)
+        else:
+            eng = self._streamer()
+            ids, d = eng.search(q, lo, hi, params)
+            self.last_stats = dict(eng.stats)
+        return QueryResult(ids=ids, distances=d, engine=which)
+
+    def ground_truth(self, q: np.ndarray, filters=None,
+                     k: int = 10) -> np.ndarray:
+        """Exact answer ids for recall measurement (brute force)."""
+        from repro.core.search import ground_truth
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        lo, hi = compile_filters(filters, self.schema, q.shape[0])
+        ids, _ = ground_truth(self._original_vectors(),
+                              self._original_attrs(), q, lo, hi, k)
+        return ids
+
+    def _inv(self) -> np.ndarray:
+        """original id -> internal row; cached (index is immutable)."""
+        if self._inv_perm is None:
+            self._inv_perm = np.argsort(self.index.perm)
+        return self._inv_perm
+
+    def _original_vectors(self) -> np.ndarray:
+        return self.index.vectors[self._inv()]
+
+    def _original_attrs(self) -> np.ndarray:
+        return self.index.attrs[self._inv()]
+
+    # -- lifecycle: persist -------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Serialize the built index + schema to one ``.npz`` file."""
+        idx = self.index
+        payload = {}
+        for name in _INDEX_ARRAYS:
+            arr = getattr(idx, name)
+            if arr is not None:
+                payload[name] = np.asarray(arr)
+        for i, b in enumerate(idx.seg_bounds):
+            payload[f"seg_bounds_{i}"] = np.asarray(b)
+        meta = {
+            "format_version": _FORMAT_VERSION,
+            "schema": list(self.schema.names),
+            "config": dataclasses.asdict(idx.config),
+            "n_seg_bounds": len(idx.seg_bounds),
+        }
+        payload["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+        np.savez(path, **payload)
+
+    @classmethod
+    def load(cls, path: str,
+             device_budget_bytes: Optional[int] = None) -> "Collection":
+        """Restore a collection saved by :meth:`save`."""
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
+            if meta["format_version"] > _FORMAT_VERSION:
+                raise ValueError(
+                    f"index file written by a newer format "
+                    f"({meta['format_version']} > {_FORMAT_VERSION})")
+            cfg_d = dict(meta["config"])
+            cfg_d["seg_per_attr"] = tuple(cfg_d["seg_per_attr"])
+            config = GMGConfig(**cfg_d)
+            fields = {"config": config,
+                      "seg_bounds": [z[f"seg_bounds_{i}"]
+                                     for i in range(meta["n_seg_bounds"])]}
+            for name in _INDEX_ARRAYS:
+                fields[name] = z[name] if name in z.files else None
+            index = GMGIndex(**fields)
+        return cls(index=index, schema=AttrSchema(meta["schema"]),
+                   device_budget_bytes=device_budget_bytes)

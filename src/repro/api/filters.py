@@ -1,0 +1,150 @@
+"""Composable range-filter expressions over named attributes.
+
+``F("price").between(10, 50) & (F("ts") >= t0)`` builds a conjunction of
+per-attribute interval constraints. ``compile_filters`` lowers it to the
+dense ``(lo, hi)`` float32 batch arrays the kernels expect: one row per
+query, one column per schema attribute, with ``-inf``/``+inf`` sentinels
+for unconstrained sides — exactly the hand-built arrays callers used to
+write by hand.
+
+Semantics match the device predicate (``attr >= lo & attr <= hi``,
+inclusive on both sides); strict ``<``/``>`` are realized by nudging the
+bound one float32 ulp. Bounds may be scalars (broadcast over the batch)
+or per-query arrays of shape (B,). Disjunction is deliberately absent:
+it cannot lower to one interval box per attribute, and pretending it
+can would silently drop results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.schema import AttrSchema
+
+Bound = Union[float, int, np.ndarray, Sequence[float]]
+
+
+class FilterExpr:
+    """Base class: a conjunction-composable predicate."""
+
+    def __and__(self, other: "FilterExpr") -> "FilterExpr":
+        if not isinstance(other, FilterExpr):
+            return NotImplemented
+        return And(tuple(self._terms()) + tuple(other._terms()))
+
+    def __or__(self, other):
+        raise NotImplementedError(
+            "disjunction does not lower to one (lo, hi) box per attribute; "
+            "run one search per branch and merge the QueryResults")
+
+    def _terms(self):
+        raise NotImplementedError
+
+    def compile(self, schema: AttrSchema, batch_size: int):
+        """Lower to dense (lo, hi) float32 arrays of shape (B, m)."""
+        m = len(schema)
+        lo = np.full((batch_size, m), -np.inf, np.float32)
+        hi = np.full((batch_size, m), np.inf, np.float32)
+        for t in self._terms():
+            j = schema.index(t.name)
+            if t.lo is not None:
+                lo[:, j] = np.maximum(lo[:, j],
+                                      _as_col(t.lo, batch_size, t.name))
+            if t.hi is not None:
+                hi[:, j] = np.minimum(hi[:, j],
+                                      _as_col(t.hi, batch_size, t.name))
+        return lo, hi
+
+
+def _as_col(v: Bound, batch_size: int, name: str) -> np.ndarray:
+    arr = np.asarray(v, np.float32)
+    if arr.ndim == 0:
+        return np.broadcast_to(arr, (batch_size,))
+    if arr.shape != (batch_size,):
+        raise ValueError(
+            f"filter bound for {name!r} has shape {arr.shape}; expected a "
+            f"scalar or per-query shape ({batch_size},)")
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeFilter(FilterExpr):
+    """One attribute's interval constraint; None = unbounded side."""
+
+    name: str
+    lo: Optional[Bound] = None
+    hi: Optional[Bound] = None
+
+    def _terms(self):
+        return (self,)
+
+
+@dataclasses.dataclass(frozen=True)
+class And(FilterExpr):
+    terms: tuple
+
+    def _terms(self):
+        return self.terms
+
+
+def _ulp_up(v: Bound) -> np.ndarray:
+    return np.nextafter(np.asarray(v, np.float32), np.float32(np.inf))
+
+
+def _ulp_down(v: Bound) -> np.ndarray:
+    return np.nextafter(np.asarray(v, np.float32), np.float32(-np.inf))
+
+
+class F:
+    """Field reference: ``F("price")`` starts a filter expression."""
+
+    def __init__(self, name: str):
+        self.name = str(name)
+
+    def between(self, lo: Bound, hi: Bound) -> RangeFilter:
+        """Inclusive interval: lo <= attr <= hi."""
+        return RangeFilter(self.name, lo=lo, hi=hi)
+
+    def __ge__(self, v: Bound) -> RangeFilter:
+        return RangeFilter(self.name, lo=v)
+
+    def __le__(self, v: Bound) -> RangeFilter:
+        return RangeFilter(self.name, hi=v)
+
+    def __gt__(self, v: Bound) -> RangeFilter:
+        return RangeFilter(self.name, lo=_ulp_up(v))
+
+    def __lt__(self, v: Bound) -> RangeFilter:
+        return RangeFilter(self.name, hi=_ulp_down(v))
+
+    def __eq__(self, v) -> RangeFilter:           # type: ignore[override]
+        return RangeFilter(self.name, lo=v, hi=v)
+
+    def __hash__(self):
+        return hash(("F", self.name))
+
+
+def compile_filters(filters, schema: AttrSchema, batch_size: int):
+    """Normalize any accepted filter form to dense (lo, hi) arrays.
+
+    Accepts a FilterExpr, an explicit ``(lo, hi)`` array pair (passed
+    through, validated), or None (unconstrained).
+    """
+    m = len(schema)
+    if filters is None:
+        return (np.full((batch_size, m), -np.inf, np.float32),
+                np.full((batch_size, m), np.inf, np.float32))
+    if isinstance(filters, FilterExpr):
+        return filters.compile(schema, batch_size)
+    if isinstance(filters, (tuple, list)) and len(filters) == 2:
+        lo = np.asarray(filters[0], np.float32)
+        hi = np.asarray(filters[1], np.float32)
+        if lo.shape != (batch_size, m) or hi.shape != (batch_size, m):
+            raise ValueError(
+                f"explicit (lo, hi) must each be shape ({batch_size}, {m}); "
+                f"got {lo.shape} and {hi.shape}")
+        return lo, hi
+    raise TypeError(f"unsupported filters object: {type(filters).__name__}")

@@ -1,0 +1,47 @@
+"""Search result container returned by ``Collection.search``."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+# eq=False: a generated __eq__ would compare ndarray fields elementwise
+# and raise on bool() — identity comparison is the only sane default
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryResult:
+    """Batched top-k answer. Rows are padded with id -1 / distance +inf
+    when a query's predicate admits fewer than k points."""
+
+    ids: np.ndarray          # (B, k) i64 original ids, -1 pad
+    distances: np.ndarray    # (B, k) f32 squared L2, +inf pad
+    engine: str = "in_core"  # which execution path served the batch
+
+    @classmethod
+    def empty(cls, k: int, engine: str = "in_core") -> "QueryResult":
+        return cls(ids=np.zeros((0, k), np.int64),
+                   distances=np.zeros((0, k), np.float32), engine=engine)
+
+    def __len__(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def valid_counts(self) -> np.ndarray:
+        """(B,) number of real (non-pad) results per query."""
+        return (self.ids >= 0).sum(axis=1)
+
+    def recall(self, true_ids: np.ndarray) -> float:
+        """Recall against exact ground-truth ids (paper's metric)."""
+        from repro.core.search import recall_at_k
+        return recall_at_k(self.ids, true_ids)
+
+    def __iter__(self):
+        """Yield (ids, distances) per query, pads trimmed."""
+        for b in range(len(self)):
+            keep = self.ids[b] >= 0
+            yield self.ids[b][keep], self.distances[b][keep]

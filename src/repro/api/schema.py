@@ -1,0 +1,47 @@
+"""Named-attribute schema for a collection.
+
+The kernels only ever see dense positional ``(lo, hi)`` arrays; the schema
+is the thin naming layer that lets callers write ``F("price") <= 50``
+instead of remembering which column is which. It also fixes the column
+order used when attributes arrive as a mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class AttrSchema:
+    """Ordered attribute names; position = column in the (n, m) array."""
+
+    names: tuple
+
+    def __init__(self, names: Sequence[str]):
+        names = tuple(str(n) for n in names)
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate attribute names: {names}")
+        object.__setattr__(self, "names", names)
+
+    @classmethod
+    def generic(cls, m: int) -> "AttrSchema":
+        """Positional fallback: attr0..attr{m-1}."""
+        return cls([f"attr{j}" for j in range(m)])
+
+    def index(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(
+                f"unknown attribute {name!r}; schema has {list(self.names)}"
+            ) from None
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.names
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names)

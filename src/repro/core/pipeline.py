@@ -1,5 +1,11 @@
 """Cell-oriented out-of-core execution (paper Section 5).
 
+Internal layer: the public entry point is ``repro.api.Collection``, which
+selects this streaming engine automatically when the declared
+``device_budget_bytes`` cannot hold the fully-resident in-core searcher
+(the remaining budget becomes the streamed graph window). Instantiate
+``OutOfCoreEngine`` directly only for engine-level ablations.
+
 Memory model (paper Fig. 5, adapted to TPU — DESIGN.md §2):
 
   host DRAM   : full fp32 vectors, full GMG index, cell metadata
@@ -152,6 +158,12 @@ class OutOfCoreEngine:
         cfg = idx.config
         k, ef = params.k, params.ef or cfg.search_ef
         B = q.shape[0]
+        if B == 0:
+            self.stats = {"n_batches": 0, "total_active": 0,
+                          "cells_per_batch": self.cells_per_batch(),
+                          "transfer_bytes": 0, "wall_seconds": 0.0}
+            return (np.zeros((0, k), np.int64),
+                    np.zeros((0, k), np.float32))
         t_start = time.perf_counter()
 
         # (1) selection + ordering ranks (host)

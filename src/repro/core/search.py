@@ -1,5 +1,12 @@
 """End-to-end in-core query processing (paper Section 4, Alg. 2).
 
+Internal layer: the public entry point is ``repro.api.Collection``, which
+owns the index lifecycle (build/search/save/load), compiles named-attribute
+filter expressions down to the dense ``(lo, hi)`` arrays consumed here,
+and dispatches between this in-core engine and the out-of-core pipeline
+from a declared device-memory budget. Use ``Searcher`` directly only for
+engine-level ablations.
+
 ``Searcher`` owns the device-resident copies of a built GMG index and runs
 the three-stage pipeline per query batch:
 
@@ -36,6 +43,9 @@ from repro.core.types import GMGIndex, SearchParams
 def _pad_pow2(x: np.ndarray, axis: int = 0):
     """Pad axis 0 to the next power of two by repeating row 0."""
     n = x.shape[axis]
+    if n == 0:
+        raise ValueError(
+            "cannot pad an empty batch (callers must early-return on B=0)")
     p = 1
     while p < n:
         p *= 2
@@ -167,6 +177,9 @@ class Searcher:
         lo = np.asarray(lo, np.float32)
         hi = np.asarray(hi, np.float32)
         B = q.shape[0]
+        if B == 0:
+            return (np.zeros((0, params.k), np.int64),
+                    np.zeros((0, params.k), np.float32))
         key = jax.random.PRNGKey(params.seed)
 
         cfg = self.index.config
@@ -213,8 +226,11 @@ class Searcher:
             qs, real = _pad_pow2(q[sel])
             los, _ = _pad_pow2(lo[sel])
             his, _ = _pad_pow2(hi[sel])
+            # independent entry randomization per sub-batch: sharing one
+            # key would correlate the itinerary and global walks
+            key, sub = jax.random.split(key)
             ids, d = fn(jnp.asarray(qs), jnp.asarray(los), jnp.asarray(his),
-                        params, key)
+                        params, sub)
             ids = np.asarray(ids[:real])
             d = np.asarray(d[:real])
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)

@@ -1,0 +1,4 @@
+"""Distributed substrate. Currently provides ``sharding`` (logical-axis
+-> mesh placement rules used by the models, serving engine and dry-run).
+``straggler`` / ``compression`` are referenced by the train loop and
+tests but not yet restored — see ROADMAP open items."""

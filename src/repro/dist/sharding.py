@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (GSPMD placement for the LM stack).
+
+Params and activations carry *logical* axis names (see
+``repro.models.common``); a rules table maps each name to mesh axes.
+Placement never changes values — every helper falls back to replication
+when a mesh axis is absent, has size 1, or does not divide the array
+dimension — so a single-device run lowers to the unsharded program.
+
+``constrain`` is the activation-pinning hook used inside model code. It
+is a no-op unless the caller entered ``activation_rules(mesh, rules)``,
+which is how the dry-run/roofline paths opt in while tests and CPU
+serving run the exact same model code unpinned.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+# mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi.
+# Batch-like logical axes spread over every non-model axis; contracting /
+# head-like param axes go to "model"; FSDP adds "embed" over the data
+# axes (ZeRO-3 style).
+_BATCH_AXES = ("pod", "data")
+
+TRAIN_RULES = {
+    "batch": _BATCH_AXES,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+}
+
+FSDP_TRAIN_RULES = dict(TRAIN_RULES, embed=_BATCH_AXES)
+
+DECODE_RULES = {
+    "batch": _BATCH_AXES,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+}
+
+
+def _mesh_axes(entry, mesh) -> tuple:
+    """Normalize a rule entry to the tuple of axes present in the mesh."""
+    if entry is None:
+        return ()
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _axes_size(axes: tuple, mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def partition_spec(shape, logical_axes, mesh, rules) -> PartitionSpec:
+    """Resolve one array's logical axes to a PartitionSpec.
+
+    A dim shards only if its mesh axes exist, their combined size
+    exceeds 1, divides the dim, and none of them is already used by an
+    earlier dim (GSPMD forbids reuse); otherwise it replicates."""
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical_axes):
+        axes = _mesh_axes(rules.get(name), mesh) if name else ()
+        size = _axes_size(axes, mesh)
+        if (size > 1 and dim % size == 0
+                and not any(a in used for a in axes)):
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def sharding_for(shape, logical_axes, mesh, rules) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(shape, logical_axes, mesh,
+                                              rules))
+
+
+def shardings_for(shapes_tree, axes_tree, mesh, rules):
+    """Tree-map ``sharding_for`` over matching (shapes, logical-axes)
+    trees (leaves of ``axes_tree`` are tuples of str | None)."""
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda sds, ax: sharding_for(sds.shape, ax, mesh, rules),
+        shapes_tree, axes_tree, is_leaf=is_ax)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_sharding(mesh, batch_size: int) -> NamedSharding:
+    """Shard dim 0 over the non-model axes when they divide the batch;
+    replicate otherwise (odd batches must still run, just slower)."""
+    axes = _mesh_axes(_BATCH_AXES, mesh)
+    size = _axes_size(axes, mesh)
+    if size > 1 and batch_size % size == 0:
+        return NamedSharding(
+            mesh, PartitionSpec(axes[0] if len(axes) == 1 else axes))
+    return replicated(mesh)
+
+
+def zero1_sharding(shape, logical_axes, mesh, rules) -> NamedSharding:
+    """ZeRO-1 optimizer-moment placement: the param's own rule-derived
+    spec, plus the largest still-replicated dim sharded over the data
+    axes — moments never need gathering inside the step, so the extra
+    split is free bandwidth-wise."""
+    spec = partition_spec(shape, logical_axes, mesh, rules)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    data_axes = tuple(a for a in _mesh_axes(_BATCH_AXES, mesh)
+                      if a not in used)
+    size = _axes_size(data_axes, mesh)
+    if size > 1:
+        # largest replicated, divisible dim first
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if entries[i] is None and shape[i] % size == 0:
+                entries[i] = (data_axes[0] if len(data_axes) == 1
+                              else data_axes)
+                break
+    return NamedSharding(mesh, PartitionSpec(*entries))
+
+
+# -- activation pinning (opt-in context) ------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, rules):
+    """Enable ``constrain`` with this (mesh, rules) for the enclosed
+    lowering/compile; nests, restores on exit."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def constrain(x, logical_axes):
+    """Pin an activation to its logical layout. Outside an
+    ``activation_rules`` context this is the identity, so model code can
+    call it unconditionally (CPU tests, single-device serving)."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    sh = sharding_for(x.shape, tuple(logical_axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,58 @@
+"""Straggler detection + step watchdog (host-side, dependency-free).
+
+A host is a straggler when its EWMA step time exceeds a multiple of the
+fleet median EWMA. Detection is relative, so uniform slowdowns (bigger
+batch, compiler change) never alarm; recovery is automatic as the EWMA
+decays back toward the fleet.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+class StragglerMonitor:
+    """Per-host EWMA of step wall time vs. the fleet median."""
+
+    def __init__(self, n_hosts: int, min_steps: int = 5,
+                 alpha: float = 0.3, ratio: float = 2.0):
+        self.n_hosts = n_hosts
+        self.min_steps = min_steps      # EWMA warm-up before judging
+        self.alpha = alpha              # EWMA weight of the new sample
+        self.ratio = ratio              # alarm at ratio x fleet median
+        self._ewma = [None] * n_hosts
+        self._count = [0] * n_hosts
+
+    def record(self, host: int, seconds: float) -> None:
+        prev = self._ewma[host]
+        self._ewma[host] = seconds if prev is None else (
+            self.alpha * seconds + (1.0 - self.alpha) * prev)
+        self._count[host] += 1
+
+    def is_straggler(self, host: int) -> bool:
+        if self._count[host] < self.min_steps or self._ewma[host] is None:
+            return False
+        seen = sorted(e for e in self._ewma if e is not None)
+        if not seen:
+            return False
+        median = seen[(len(seen) - 1) // 2]   # lower median: with 2
+        # hosts the comparison must be against the faster one
+        return self._ewma[host] > self.ratio * max(median, 1e-9)
+
+
+class StepWatchdog:
+    """Wall-clock timer for one step: ``start()`` then ``expired()``.
+    timeout None/0 disables (never expires)."""
+
+    def __init__(self, timeout_s: Optional[float] = None):
+        self.timeout_s = timeout_s
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def expired(self) -> bool:
+        if not self.timeout_s or self._t0 is None:
+            return False
+        return (time.perf_counter() - self._t0) > self.timeout_s

@@ -31,6 +31,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import config
 from repro.kernels.sort_network import bitonic_sort, merge_topk, next_pow2
 
+# renamed across jax versions (TPUCompilerParams pre-0.5)
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(q_ref, v_ref, bias_ref, vals_out, idx_out, run_vals, run_idx,
             *, K: int, bn: int, n_tiles: int):
@@ -70,6 +74,10 @@ def fused_topk(q, v, bias, k: int, *, bq: int = 128, bn: int = 128):
     padded-k buffer K = next_pow2(k) must satisfy K <= bn.
     Returns (vals (B, K) f32 ascending, idx (B, K) i32); caller slices [:k].
     """
+    if _CompilerParams is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax version")
     B, d = q.shape
     N, _ = v.shape
     K = next_pow2(max(k, 2))
@@ -97,7 +105,7 @@ def fused_topk(q, v, bias, k: int, *, bq: int = 128, bn: int = 128):
             pltpu.VMEM((bq, K), jnp.float32),
             pltpu.VMEM((bq, K), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=config.interpret(),
     )(q, v, bias)

@@ -7,7 +7,8 @@ generation stack (the paper's motivating RAG/video-search scenarios,
   embed   — mean-pooled final hidden state of an LM over the text tokens
             (the embedding producer),
   retrieve— Garfield RFANNS with structured predicates (e.g. timestamp
-            range), via the in-core Searcher or the out-of-core engine,
+            range) against a ``repro.api.Collection``, which picks the
+            in-core or out-of-core engine from its device budget,
   answer  — retrieved ids feed the generation prompt (demo-level).
 
 examples/rag_serving.py runs this end-to-end with a reduced LM.
@@ -21,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.search import Searcher
+from repro.api.collection import Collection
+from repro.api.result import QueryResult
 from repro.core.types import SearchParams
 from repro.models import lm
 
@@ -30,14 +32,14 @@ from repro.models import lm
 class RagPipeline:
     params: dict
     cfg: lm.LMConfig
-    searcher: Searcher
+    collection: Collection
 
     def __post_init__(self):
         def embed_fn(params, tokens):
             h, _, _ = lm.forward(params, self.cfg, tokens=tokens)
             return h.mean(axis=1)                      # (B, D) mean pool
         self._embed = jax.jit(embed_fn)
-        dim = self.searcher.index.dim
+        dim = self.collection.dim
         # project LM hidden -> index dim with a fixed random map (stands
         # in for a trained embedding head; deterministic per run)
         key = jax.random.PRNGKey(7)
@@ -49,8 +51,11 @@ class RagPipeline:
         h = self._embed(self.params, jnp.asarray(tokens))
         return np.asarray(h.astype(jnp.float32) @ self._proj)
 
-    def retrieve(self, tokens: np.ndarray, lo: np.ndarray, hi: np.ndarray,
-                 k: int = 5, params: SearchParams | None = None):
+    def retrieve(self, tokens: np.ndarray, filters=None, k: int = 5,
+                 params: SearchParams | None = None) -> QueryResult:
+        """Embed the token batch and run filtered retrieval. ``filters``
+        is anything ``Collection.search`` accepts: a filter expression
+        (``F("ts") >= t0``), an explicit ``(lo, hi)`` pair, or None."""
         q = self.embed(tokens)
-        return self.searcher.search(q, lo, hi,
-                                    params or SearchParams(k=k))
+        return self.collection.search(q, filters=filters, k=k,
+                                      params=params)

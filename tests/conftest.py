@@ -4,7 +4,7 @@
 import numpy as np
 import pytest
 
-from repro.core import gmg
+from repro.api import AttrSchema, Collection
 from repro.core.types import GMGConfig
 from repro.data import make_dataset, make_queries
 
@@ -17,11 +17,20 @@ def small_data():
 
 
 @pytest.fixture(scope="session")
-def small_index(small_data):
+def small_collection(small_data):
+    """Built through the public Collection facade (named attributes)."""
     v, a = small_data
     cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=12, n_clusters=16,
                     build_ef=48, batch_cells=2, dense_threshold=256)
-    return gmg.build_gmg(v, a, cfg, seed=0)
+    return Collection.build(
+        v, a, schema=AttrSchema(["price", "ts", "views", "duration"]),
+        config=cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_collection):
+    """Engine-level view for tests that drive internals directly."""
+    return small_collection.index
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,53 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+CI installs real hypothesis (shrinking, example database, coverage-guided
+generation); this fallback just re-runs each property ``max_examples``
+times with fixed-seed pseudorandom draws so the properties still execute
+in minimal containers. Only the subset used by this repo's tests is
+provided: ``given``, ``settings(max_examples=, deadline=)``,
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+st = _Strategies()
+
+
+def given(*strats):
+    def deco(f):
+        max_examples = getattr(f, "_max_examples", 10)
+
+        def runner():          # zero-arg: pytest must not see f's params
+            rng = np.random.default_rng(0)
+            for _ in range(max_examples):
+                f(*(s.draw(rng) for s in strats))
+        runner.__name__ = f.__name__
+        runner.__doc__ = f.__doc__
+        return runner
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_):
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+    return deco

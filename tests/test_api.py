@@ -1,0 +1,234 @@
+"""Public `repro.api` surface: schema, filter compilation, Collection
+lifecycle (search / engine dispatch / persist), QueryResult invariants."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import AttrSchema, Collection, F, QueryResult
+from repro.api.filters import compile_filters
+from repro.core.types import SearchParams
+
+
+SCHEMA = AttrSchema(["price", "ts", "views", "duration"])
+
+
+# -- schema -----------------------------------------------------------------
+
+def test_schema_basics():
+    assert len(SCHEMA) == 4
+    assert SCHEMA.index("ts") == 1
+    assert "views" in SCHEMA and "bogus" not in SCHEMA
+    assert AttrSchema.generic(2).names == ("attr0", "attr1")
+    with pytest.raises(KeyError):
+        SCHEMA.index("bogus")
+    with pytest.raises(ValueError):
+        AttrSchema(["a", "a"])
+
+
+# -- filter expression compilation ------------------------------------------
+
+def test_compile_between_and_one_sided():
+    lo, hi = (F("price").between(10, 50)).compile(SCHEMA, 3)
+    assert lo.shape == hi.shape == (3, 4)
+    assert (lo[:, 0] == 10).all() and (hi[:, 0] == 50).all()
+    # untouched attributes stay unbounded
+    assert np.isneginf(lo[:, 1:]).all() and np.isposinf(hi[:, 1:]).all()
+
+    lo, hi = (F("ts") >= 7.0).compile(SCHEMA, 2)
+    assert (lo[:, 1] == 7.0).all() and np.isposinf(hi[:, 1]).all()
+    lo, hi = (F("ts") <= 7.0).compile(SCHEMA, 2)
+    assert np.isneginf(lo[:, 1]).all() and (hi[:, 1] == 7.0).all()
+
+
+def test_compile_strict_and_eq():
+    lo, _ = (F("views") > 1.0).compile(SCHEMA, 1)
+    assert lo[0, 2] > 1.0                      # one ulp above
+    assert lo[0, 2] == np.nextafter(np.float32(1.0), np.float32(np.inf))
+    _, hi = (F("views") < 1.0).compile(SCHEMA, 1)
+    assert hi[0, 2] < 1.0
+    lo, hi = (F("duration") == 3.0).compile(SCHEMA, 1)
+    assert lo[0, 3] == hi[0, 3] == 3.0
+
+
+def test_compile_conjunction_intersects_same_attr():
+    expr = (F("price") >= 2) & (F("price") <= 9) & (F("price") >= 5)
+    lo, hi = expr.compile(SCHEMA, 2)
+    assert (lo[:, 0] == 5).all() and (hi[:, 0] == 9).all()
+
+
+def test_compile_per_query_bounds_and_shape_errors():
+    t0 = np.array([1.0, 2.0, 3.0], np.float32)
+    lo, _ = (F("ts") >= t0).compile(SCHEMA, 3)
+    np.testing.assert_array_equal(lo[:, 1], t0)
+    with pytest.raises(ValueError):
+        (F("ts") >= t0).compile(SCHEMA, 4)     # batch mismatch
+    with pytest.raises(KeyError):
+        (F("bogus") >= 0).compile(SCHEMA, 1)
+    with pytest.raises(NotImplementedError):
+        (F("ts") >= 0) | (F("price") <= 1)
+
+
+def test_compile_filters_normalization():
+    lo, hi = compile_filters(None, SCHEMA, 2)
+    assert np.isneginf(lo).all() and np.isposinf(hi).all()
+    lo2, hi2 = compile_filters((lo, hi), SCHEMA, 2)
+    np.testing.assert_array_equal(lo, lo2)
+    with pytest.raises(ValueError):
+        compile_filters((lo[:1], hi), SCHEMA, 2)
+    with pytest.raises(TypeError):
+        compile_filters("price < 3", SCHEMA, 1)
+
+
+# -- Collection: search + equivalence ---------------------------------------
+
+def test_one_sided_filter_matches_hand_built(small_collection, small_data,
+                                             small_queries):
+    """Acceptance: F("ts") >= t0 == the hand-built ±inf (lo, hi) arrays."""
+    v, a = small_data
+    t0 = float(np.quantile(a[:, 1], 0.5))
+    q = small_queries.q[:16]
+    res_expr = small_collection.search(q, filters=F("ts") >= t0, k=10)
+    B, m = 16, a.shape[1]
+    lo = np.full((B, m), -np.inf, np.float32)
+    hi = np.full((B, m), np.inf, np.float32)
+    lo[:, 1] = t0
+    res_raw = small_collection.search(q, filters=(lo, hi), k=10)
+    np.testing.assert_array_equal(res_expr.ids, res_raw.ids)
+    np.testing.assert_allclose(res_expr.distances, res_raw.distances)
+
+
+def test_partial_attribute_filter_recall(small_collection, small_data):
+    """Predicate on one non-leading attribute through the expression
+    layer reaches the same recall as the raw-array path."""
+    from repro.data import make_queries
+    v, a = small_data
+    wl = make_queries(v, a, 16, 1, seed=21, attr_subset=[1])
+    res = small_collection.search(
+        wl.q, filters=F("ts").between(wl.lo[:, 1], wl.hi[:, 1]), k=10)
+    truth = small_collection.ground_truth(wl.q, filters=(wl.lo, wl.hi),
+                                          k=10)
+    assert res.recall(truth) >= 0.85
+
+
+def test_search_deterministic_given_seed(small_collection, small_queries):
+    wl = small_queries
+    r1 = small_collection.search(wl.q, filters=(wl.lo, wl.hi),
+                                 params=SearchParams(k=10, seed=4))
+    r2 = small_collection.search(wl.q, filters=(wl.lo, wl.hi),
+                                 params=SearchParams(k=10, seed=4))
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+
+
+def test_empty_batch_returns_empty_result(small_collection):
+    res = small_collection.search(
+        np.zeros((0, small_collection.dim), np.float32), k=7)
+    assert isinstance(res, QueryResult) and len(res) == 0
+    assert res.ids.shape == (0, 7) and res.distances.shape == (0, 7)
+
+
+def test_query_result_helpers(small_collection, small_queries):
+    wl = small_queries
+    res = small_collection.search(wl.q, filters=(wl.lo, wl.hi), k=10)
+    assert len(res) == len(wl.q) and res.k == 10
+    assert (res.valid_counts == (res.ids >= 0).sum(axis=1)).all()
+    for ids_b, d_b in res:
+        assert (ids_b >= 0).all() and np.isfinite(d_b).all()
+
+
+def test_build_from_attr_mapping(small_data):
+    v, a = small_data
+    col = Collection.build(
+        v[:512], {"price": a[:512, 0], "ts": a[:512, 1]},
+        seed=0)
+    assert col.schema.names == ("price", "ts")
+    res = col.search(v[:4], filters=F("price") >= 0.0, k=3)
+    assert res.ids.shape == (4, 3)
+
+
+# -- engine dispatch --------------------------------------------------------
+
+def test_dispatch_by_device_budget(small_collection, small_queries,
+                                   small_truth):
+    wl = small_queries
+    col = small_collection
+    assert col.plan()["engine"] == "in_core"
+    budget = col.out_of_core_resident_bytes() + (1 << 20)
+    assert budget < col.in_core_bytes()
+    ooc = Collection(index=col.index, schema=col.schema,
+                     device_budget_bytes=budget)
+    assert ooc.plan()["engine"] == "out_of_core"
+    res = ooc.search(wl.q, filters=(wl.lo, wl.hi),
+                     params=SearchParams(k=10, ef=64))
+    assert res.engine == "out_of_core"
+    assert ooc.last_stats["n_batches"] >= 1
+    assert res.recall(small_truth[0]) >= 0.8
+    # explicit override wins over the budget, and stats never carry over
+    res_ic = ooc.search(wl.q[:4], filters=(wl.lo[:4], wl.hi[:4]),
+                        k=10, engine="in_core")
+    assert res_ic.engine == "in_core"
+    assert ooc.last_stats == {}
+    # a budget change rebuilds the streamer with the new graph window
+    first = ooc._streamer()
+    ooc.device_budget_bytes = budget * 2
+    assert ooc._streamer() is not first
+
+
+def test_dispatch_budget_too_small_raises(small_collection):
+    col = Collection(index=small_collection.index,
+                     schema=small_collection.schema,
+                     device_budget_bytes=16)
+    with pytest.raises(ValueError):
+        col.search(np.zeros((1, col.dim), np.float32), k=1)
+
+
+# -- persistence ------------------------------------------------------------
+
+def test_save_load_roundtrip_identical(small_collection, small_queries,
+                                       tmp_path):
+    wl = small_queries
+    path = os.path.join(tmp_path, "col.npz")
+    small_collection.save(path)
+    col2 = Collection.load(path)
+    assert col2.schema.names == small_collection.schema.names
+    assert col2.index.config == small_collection.index.config
+    r1 = small_collection.search(wl.q, filters=(wl.lo, wl.hi), k=10)
+    r2 = col2.search(wl.q, filters=(wl.lo, wl.hi), k=10)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_allclose(r1.distances, r2.distances)
+
+
+# -- selectivity estimator --------------------------------------------------
+
+def test_estimate_selectivity_matches_empirical(small_collection,
+                                                small_data):
+    """CDF-product estimate vs. the true in-range fraction: uniform
+    independent attributes, so the conjunction-independence assumption
+    holds and the estimate should track closely."""
+    from repro.data import make_queries
+    v, a = small_data
+    s = small_collection._searcher()
+    wl = make_queries(v, a, 48, 2, seed=11)
+    est = s._estimate_selectivity(wl.lo, wl.hi)
+    emp = np.stack([((a >= wl.lo[b]) & (a <= wl.hi[b])).all(axis=1).mean()
+                    for b in range(len(wl.q))])
+    assert est.shape == (48,)
+    assert np.abs(est - emp).mean() < 0.02
+    assert np.abs(est - emp).max() < 0.08
+
+
+def test_estimate_selectivity_one_sided_and_open(small_collection,
+                                                 small_data):
+    v, a = small_data
+    s = small_collection._searcher()
+    B, m = 8, a.shape[1]
+    lo = np.full((B, m), -np.inf, np.float32)
+    hi = np.full((B, m), np.inf, np.float32)
+    est = s._estimate_selectivity(lo, hi)
+    np.testing.assert_allclose(est, 1.0, atol=1e-6)   # fully open box
+    t0 = float(np.quantile(a[:, 1], 0.75))
+    lo[:, 1] = t0                                      # top quartile of ts
+    est = s._estimate_selectivity(lo, hi)
+    emp = (a[:, 1] >= t0).mean()
+    assert np.abs(est - emp).max() < 0.05

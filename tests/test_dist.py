@@ -162,8 +162,11 @@ from functools import partial
 from repro.dist.compression import compressed_psum
 mesh = jax.make_mesh((4,), ("pod",))
 from jax.sharding import PartitionSpec as P
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:            # pre-0.5 jax keeps it in experimental
+    from jax.experimental.shard_map import shard_map
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+@partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
          out_specs=(P("pod"), P("pod")))
 def sync(g, r):
     out, new_r = compressed_psum(g[0], r[0], "pod")

@@ -1,7 +1,10 @@
 """Grid partition invariants (paper Section 3.1) — property-based."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # minimal container: deterministic fallback
+    from prop_fallback import given, settings, st
 
 from repro.core import grid
 

@@ -9,7 +9,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # minimal container: deterministic fallback
+    from prop_fallback import given, settings, st
 
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.models import attention as attn_mod

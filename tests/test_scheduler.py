@@ -1,7 +1,10 @@
 """Cell scheduling (paper Alg. 5) properties + the paper's own example."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # minimal container: deterministic fallback
+    from prop_fallback import given, settings, st
 
 from repro.core import scheduler
 

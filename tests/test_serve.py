@@ -44,25 +44,21 @@ def test_engine_greedy_deterministic(small_lm):
     assert gen() == gen()
 
 
-def test_rag_pipeline_end_to_end(small_lm, small_index):
+def test_rag_pipeline_end_to_end(small_lm, small_collection):
+    from repro.api import F
     from repro.serve.rag import RagPipeline
-    from repro.core.search import Searcher
     params, cfg = small_lm
-    rag = RagPipeline(params=params, cfg=cfg, searcher=Searcher(small_index))
+    rag = RagPipeline(params=params, cfg=cfg, collection=small_collection)
     rng = np.random.default_rng(2)
     tokens = rng.integers(1, cfg.vocab, size=(3, 12))
-    m = small_index.attrs.shape[1]
-    lo = np.full((3, m), -np.inf, np.float32)
-    hi = np.full((3, m), np.inf, np.float32)
-    lo[:, 0] = np.quantile(small_index.attrs[:, 0], 0.2)
-    hi[:, 0] = np.quantile(small_index.attrs[:, 0], 0.8)
-    ids, d = rag.retrieve(tokens, lo, hi, k=5)
-    assert ids.shape == (3, 5)
-    valid = ids >= 0
-    assert valid.any()
+    attrs = small_collection.index.attrs
+    lo0 = float(np.quantile(attrs[:, 0], 0.2))
+    hi0 = float(np.quantile(attrs[:, 0], 0.8))
+    res = rag.retrieve(tokens, filters=F("price").between(lo0, hi0), k=5)
+    assert res.ids.shape == (3, 5)
+    assert (res.valid_counts > 0).any()
     # retrieved docs satisfy the range predicate
-    inv = np.argsort(small_index.perm)
-    for b in range(3):
-        got = ids[b][ids[b] >= 0]
-        a = small_index.attrs[inv[got]]
-        assert ((a >= lo[b]) & (a <= hi[b])).all()
+    inv = np.argsort(small_collection.index.perm)
+    for got, _ in res:
+        a = attrs[inv[got]][:, 0]
+        assert ((a >= lo0) & (a <= hi0)).all()
