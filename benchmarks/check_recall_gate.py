@@ -1,0 +1,118 @@
+"""CI recall gate: smoke-bench recall vs. the committed baseline.
+
+Reads the per-bench JSON written by ``python -m benchmarks.run --scale
+smoke`` (results/bench/*.json), extracts the tracked recall metrics —
+Garfield's QPS/recall sweep rows and the disjunctive box-batched rows —
+and exits non-zero if any drops more than ``tolerance`` below its value
+in benchmarks/baselines/smoke_recall.json, or if a tracked metric
+disappeared entirely (a silently-skipped bench must not pass the gate).
+
+After an *intentional* quality change, regenerate the baseline with::
+
+    PYTHONPATH=src python -m benchmarks.run --scale smoke
+    PYTHONPATH=src python -m benchmarks.check_recall_gate --write-baseline
+
+and commit the updated baseline file alongside the change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_RESULTS = os.path.join(_REPO, "results", "bench")
+DEFAULT_BASELINE = os.path.join(_REPO, "benchmarks", "baselines",
+                                "smoke_recall.json")
+DEFAULT_TOLERANCE = 0.03   # CPU-jax jitter headroom across versions/runners
+
+
+def _load_rows(results_dir: str, bench: str):
+    path = os.path.join(results_dir, f"{bench}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("status") != "ok":
+        return []   # errored bench: its metrics go "missing" -> gate fails
+    return data.get("rows", [])
+
+
+def tracked_metrics(results_dir: str) -> dict:
+    """key -> recall for every row the gate watches.
+
+    Rows with recall == 0 are skipped as degenerate: at smoke scale some
+    workloads (e.g. m=4 conjunctions) leave empty ground-truth sets and
+    score 0/1 regardless of search quality, so a 0.0 floor could never
+    fail and would only pretend to guard anything.
+    """
+    out = {}
+    for r in _load_rows(results_dir, "bench_qps_recall"):
+        if r.get("method") == "garfield" and float(r.get("recall", 0)) > 0:
+            key = f"qps_recall:{r['dataset']}:m={r['m']}:ef={r['ef']}"
+            out[key] = float(r["recall"])
+    for r in _load_rows(results_dir, "bench_disjunction"):
+        if (r.get("method") == "box_batched"
+                and float(r.get("recall", 0)) > 0):
+            key = f"disjunction:{r['dataset']}:branches={r['n_branches']}"
+            out[key] = float(r["recall"])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=DEFAULT_RESULTS,
+                    help="directory holding the per-bench JSON files")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current results as the new baseline")
+    args = ap.parse_args(argv)
+
+    got = tracked_metrics(args.results)
+    if not got:
+        print(f"recall gate: no tracked bench results under {args.results} "
+              "(run `python -m benchmarks.run --scale smoke` first)")
+        return 1
+
+    if args.write_baseline:
+        payload = {"tolerance": DEFAULT_TOLERANCE,
+                   "metrics": {k: got[k] for k in sorted(got)}}
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"recall gate: wrote {len(got)} metrics to {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    tol = float(base.get("tolerance", DEFAULT_TOLERANCE))
+    failures, missing = [], []
+    for key, floor in sorted(base["metrics"].items()):
+        if key not in got:
+            missing.append(key)
+            continue
+        status = "FAIL" if got[key] < floor - tol else "ok"
+        print(f"  [{status}] {key}: {got[key]:.4f} "
+              f"(baseline {floor:.4f}, tolerance {tol})")
+        if status == "FAIL":
+            failures.append(key)
+    for key in sorted(set(got) - set(base["metrics"])):
+        print(f"  [new]  {key}: {got[key]:.4f} (not in baseline yet)")
+
+    if missing:
+        print(f"recall gate: {len(missing)} tracked metric(s) missing from "
+              f"results: {missing}")
+    if failures:
+        print(f"recall gate: FAIL — {len(failures)} metric(s) regressed "
+              f"below baseline - {tol}: {failures}")
+    if missing or failures:
+        return 1
+    print(f"recall gate: OK ({len(got)} metrics within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

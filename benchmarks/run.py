@@ -3,7 +3,10 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale smoke|full]
                                                [--only bench_build,...]
 
-Prints one CSV block per bench to stdout (and results/bench/<name>.csv).
+Prints one CSV block per bench to stdout and writes both
+results/bench/<name>.csv and results/bench/<name>.json (the JSON carries
+rows + status + timing and is what CI uploads as an artifact and feeds
+to benchmarks.check_recall_gate).
 """
 
 from __future__ import annotations
@@ -12,6 +15,7 @@ import argparse
 import csv
 import importlib
 import io
+import json
 import os
 import sys
 import time
@@ -26,10 +30,18 @@ BENCHES = [
     "bench_intercell",      # Figure 12
     "bench_ablation",       # Figure 13
     "bench_outofcore",      # Figure 14 + Table 3
+    "bench_disjunction",    # box-batched DNF planner vs per-box loop
     "bench_kernels",        # kernel microbench
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def _jsonable(o):
+    """Benches occasionally leak numpy scalars/arrays into rows."""
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    return str(o)
 
 
 def rows_to_csv(rows) -> str:
@@ -73,6 +85,10 @@ def main() -> None:
         print(csv_text)
         with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
             f.write(csv_text)
+        payload = {"bench": name, "scale": args.scale, "status": status,
+                   "elapsed_seconds": round(dt, 2), "rows": rows}
+        with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+            json.dump(payload, f, indent=2, default=_jsonable)
         sys.stdout.flush()
 
 

@@ -10,11 +10,15 @@ internal layers beneath this facade.
                            schema=AttrSchema(["price", "ts"]))
     res = col.search(q, filters=F("price").between(10, 50) & (F("ts") >= t0),
                      k=10)
+    # filters compose with | too; the planner box-batches the union
+    res = col.search(q, filters=(F("price") < 10) | (F("price") > 90), k=10)
     col.save("index.npz")
     col2 = Collection.load("index.npz")
 """
 
 from repro.api.schema import AttrSchema  # noqa: F401
-from repro.api.filters import F, FilterExpr, compile_filters  # noqa: F401
+from repro.api.filters import (  # noqa: F401
+    F, FilterExpr, compile_dnf, compile_filters)
+from repro.api.planner import QueryPlan, plan_queries  # noqa: F401
 from repro.api.result import QueryResult  # noqa: F401
 from repro.api.collection import Collection  # noqa: F401

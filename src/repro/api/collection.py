@@ -8,6 +8,9 @@ execution engine per batch, so callers never touch ``build_gmg``,
   - search    — ``col.search(q, filters=F("price") <= 50, k=10)``; the
                 filter expression (or an explicit ``(lo, hi)`` pair)
                 compiles to the dense batch arrays the kernels expect.
+                Filters compose with ``&`` *and* ``|``: disjunctions are
+                planned (repro.api.planner) into one box-batched engine
+                pass plus a segment-aware top-k merge.
   - dispatch  — a declared ``device_budget_bytes`` decides between the
                 fully-resident in-core ``Searcher`` (which internally
                 splits lanes across the itinerary / global / adaptive
@@ -25,7 +28,7 @@ from typing import Mapping, Optional, Union
 
 import numpy as np
 
-from repro.api.filters import compile_filters
+from repro.api.planner import plan_queries
 from repro.api.result import QueryResult
 from repro.api.schema import AttrSchema
 from repro.core import gmg as gmg_mod
@@ -176,34 +179,77 @@ class Collection:
                engine: str = "auto") -> QueryResult:
         """Top-k range-filtered search over a query batch.
 
-        ``filters`` is a filter expression (``F("price") <= 50``), an
-        explicit ``(lo, hi)`` array pair, or None. ``params`` overrides
-        (k, ef) wholesale when given.
+        ``filters`` is a filter expression (``F("price") <= 50``,
+        and/or-composable: ``(F("price") < 10) | (F("price") > 90)``),
+        an explicit ``(lo, hi)`` array pair, or None. ``params``
+        overrides (k, ef) wholesale when given.
+
+        Disjunctive filters go through the query planner: the whole
+        batch's DNF boxes flatten into one widened engine pass (query
+        vectors replicated per box) and a segment-aware top-k merge
+        folds per-box candidates back to one row per query — never a
+        per-box Python loop over the engine.
         """
         q = np.atleast_2d(np.asarray(q, np.float32))
         if params is None:
             params = SearchParams(k=k, ef=ef)
-        lo, hi = compile_filters(filters, self.schema, q.shape[0])
         which = self._resolve_engine(engine)
         self.last_stats = {}          # never report a previous batch's stats
-        if q.shape[0] == 0:
+        B = q.shape[0]
+        # plan before the empty-batch return so invalid filters (unknown
+        # attribute, bad shapes, DNF blowup) raise regardless of B
+        plan = plan_queries(filters, self.schema, B)
+        if B == 0:
             return QueryResult.empty(params.k, engine=which)
+        if plan.trivial:
+            if which == "in_core":
+                ids, d = self._searcher().search(q, plan.lo, plan.hi, params)
+            else:
+                eng = self._streamer()
+                ids, d = eng.search(q, plan.lo, plan.hi, params)
+                self.last_stats = dict(eng.stats)
+            return QueryResult(ids=ids, distances=d, engine=which)
+        # box-batched disjunctive pass
+        self.last_stats["planner"] = dict(plan.stats)
+        if plan.n_boxes == 0:         # every branch of every query is empty
+            return QueryResult(
+                ids=np.full((B, params.k), -1, np.int64),
+                distances=np.full((B, params.k), np.inf, np.float32),
+                engine=which)
+        qx = q[plan.qmap]
         if which == "in_core":
-            ids, d = self._searcher().search(q, lo, hi, params)
+            ids, d = self._searcher().search(qx, plan.lo, plan.hi, params,
+                                             qmap=plan.qmap, n_queries=B)
         else:
             eng = self._streamer()
-            ids, d = eng.search(q, lo, hi, params)
-            self.last_stats = dict(eng.stats)
+            ids, d = eng.search(qx, plan.lo, plan.hi, params,
+                                qmap=plan.qmap, n_queries=B)
+            self.last_stats.update(eng.stats)
         return QueryResult(ids=ids, distances=d, engine=which)
 
     def ground_truth(self, q: np.ndarray, filters=None,
                      k: int = 10) -> np.ndarray:
-        """Exact answer ids for recall measurement (brute force)."""
-        from repro.core.search import ground_truth
+        """Exact answer ids for recall measurement (brute force).
+
+        Disjunctive filters are served exactly as well: brute force per
+        canonical box, folded with the same segment-aware merge the
+        approximate path uses.
+        """
+        from repro.core.search import ground_truth, merge_segment_topk
         q = np.atleast_2d(np.asarray(q, np.float32))
-        lo, hi = compile_filters(filters, self.schema, q.shape[0])
-        ids, _ = ground_truth(self._original_vectors(),
-                              self._original_attrs(), q, lo, hi, k)
+        B = q.shape[0]
+        plan = plan_queries(filters, self.schema, B)
+        if plan.trivial:
+            ids, _ = ground_truth(self._original_vectors(),
+                                  self._original_attrs(), q,
+                                  plan.lo, plan.hi, k)
+            return ids
+        if plan.n_boxes == 0:
+            return np.full((B, k), -1, np.int64)
+        ids, d = ground_truth(self._original_vectors(),
+                              self._original_attrs(), q[plan.qmap],
+                              plan.lo, plan.hi, k)
+        ids, _ = merge_segment_topk(ids, d, plan.qmap, B, k)
         return ids
 
     def _inv(self) -> np.ndarray:

@@ -1,23 +1,30 @@
 """Composable range-filter expressions over named attributes.
 
 ``F("price").between(10, 50) & (F("ts") >= t0)`` builds a conjunction of
-per-attribute interval constraints. ``compile_filters`` lowers it to the
+per-attribute interval constraints; ``|`` composes disjunctions, so the
+filter language is closed under and/or:
+
+    (F("price") < 10) | (F("price") > 90)
+    ((F("ts") >= t0) | (F("ts") <= t1)) & (F("views") > 100)
+
+Conjunctive expressions lower (``compile``/``compile_filters``) to the
 dense ``(lo, hi)`` float32 batch arrays the kernels expect: one row per
 query, one column per schema attribute, with ``-inf``/``+inf`` sentinels
-for unconstrained sides — exactly the hand-built arrays callers used to
-write by hand.
+for unconstrained sides. Arbitrary and/or trees lower (``compile_dnf``)
+to disjunctive normal form — a *stack* of such boxes, one slab per DNF
+conjunction — which ``repro.api.planner`` canonicalizes and flattens
+into one box-batched engine pass.
 
 Semantics match the device predicate (``attr >= lo & attr <= hi``,
 inclusive on both sides); strict ``<``/``>`` are realized by nudging the
 bound one float32 ulp. Bounds may be scalars (broadcast over the batch)
-or per-query arrays of shape (B,). Disjunction is deliberately absent:
-it cannot lower to one interval box per attribute, and pretending it
-can would silently drop results.
+or per-query arrays of shape (B,).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -26,37 +33,71 @@ from repro.api.schema import AttrSchema
 
 Bound = Union[float, int, np.ndarray, Sequence[float]]
 
+# Cap on the DNF expansion: and-over-or distribution is multiplicative,
+# and a plan past this size means the caller should restructure the
+# predicate (or the planner's flattening would swamp the device batch).
+MAX_DNF_CONJUNCTIONS = 128
+
 
 class FilterExpr:
-    """Base class: a conjunction-composable predicate."""
+    """Base class: an and/or-composable range predicate."""
 
     def __and__(self, other: "FilterExpr") -> "FilterExpr":
         if not isinstance(other, FilterExpr):
             return NotImplemented
-        return And(tuple(self._terms()) + tuple(other._terms()))
+        return And(_flatten(And, (self, other)))
 
-    def __or__(self, other):
-        raise NotImplementedError(
-            "disjunction does not lower to one (lo, hi) box per attribute; "
-            "run one search per branch and merge the QueryResults")
+    def __or__(self, other: "FilterExpr") -> "FilterExpr":
+        if not isinstance(other, FilterExpr):
+            return NotImplemented
+        return Or(_flatten(Or, (self, other)))
 
-    def _terms(self):
+    def dnf(self):
+        """Disjunctive normal form: a tuple of conjunctions, each a
+        tuple of :class:`RangeFilter` leaves."""
         raise NotImplementedError
 
     def compile(self, schema: AttrSchema, batch_size: int):
-        """Lower to dense (lo, hi) float32 arrays of shape (B, m)."""
-        m = len(schema)
-        lo = np.full((batch_size, m), -np.inf, np.float32)
-        hi = np.full((batch_size, m), np.inf, np.float32)
-        for t in self._terms():
-            j = schema.index(t.name)
-            if t.lo is not None:
-                lo[:, j] = np.maximum(lo[:, j],
-                                      _as_col(t.lo, batch_size, t.name))
-            if t.hi is not None:
-                hi[:, j] = np.minimum(hi[:, j],
-                                      _as_col(t.hi, batch_size, t.name))
-        return lo, hi
+        """Lower to one dense (lo, hi) box pair of shape (B, m).
+
+        Only defined for conjunctive expressions; a disjunction cannot
+        lower to one box per attribute (use ``compile_dnf`` — the
+        ``Collection`` search path routes through it automatically).
+        """
+        conjs = self.dnf()
+        if len(conjs) != 1:
+            raise ValueError(
+                f"disjunctive filter ({len(conjs)} DNF branches) cannot "
+                "lower to one (lo, hi) box per attribute; compile_dnf / "
+                "repro.api.planner handle it (Collection.search does this "
+                "automatically)")
+        return compile_conjunction(conjs[0], schema, batch_size)
+
+
+def _flatten(node_cls, children):
+    """Associativity: fold nested same-type nodes into one n-ary node."""
+    out = []
+    for c in children:
+        if isinstance(c, node_cls):
+            out.extend(c.children)
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def compile_conjunction(terms, schema: AttrSchema, batch_size: int):
+    """One conjunction of RangeFilters -> dense (lo, hi) of shape (B, m),
+    intersecting repeated constraints on the same attribute."""
+    m = len(schema)
+    lo = np.full((batch_size, m), -np.inf, np.float32)
+    hi = np.full((batch_size, m), np.inf, np.float32)
+    for t in terms:
+        j = schema.index(t.name)
+        if t.lo is not None:
+            lo[:, j] = np.maximum(lo[:, j], _as_col(t.lo, batch_size, t.name))
+        if t.hi is not None:
+            hi[:, j] = np.minimum(hi[:, j], _as_col(t.hi, batch_size, t.name))
+    return lo, hi
 
 
 def _as_col(v: Bound, batch_size: int, name: str) -> np.ndarray:
@@ -78,16 +119,39 @@ class RangeFilter(FilterExpr):
     lo: Optional[Bound] = None
     hi: Optional[Bound] = None
 
-    def _terms(self):
-        return (self,)
+    def dnf(self):
+        return ((self,),)
 
 
 @dataclasses.dataclass(frozen=True)
 class And(FilterExpr):
-    terms: tuple
+    children: tuple
 
-    def _terms(self):
-        return self.terms
+    def dnf(self):
+        child_dnfs = [c.dnf() for c in self.children]
+        total = 1
+        for d in child_dnfs:
+            total *= len(d)
+        if total > MAX_DNF_CONJUNCTIONS:
+            raise ValueError(
+                f"filter expands to {total} DNF conjunctions "
+                f"(cap {MAX_DNF_CONJUNCTIONS}); restructure the predicate")
+        return tuple(tuple(itertools.chain.from_iterable(combo))
+                     for combo in itertools.product(*child_dnfs))
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(FilterExpr):
+    children: tuple
+
+    def dnf(self):
+        out = tuple(itertools.chain.from_iterable(
+            c.dnf() for c in self.children))
+        if len(out) > MAX_DNF_CONJUNCTIONS:
+            raise ValueError(
+                f"filter expands to {len(out)} DNF conjunctions "
+                f"(cap {MAX_DNF_CONJUNCTIONS}); restructure the predicate")
+        return out
 
 
 def _ulp_up(v: Bound) -> np.ndarray:
@@ -128,10 +192,11 @@ class F:
 
 
 def compile_filters(filters, schema: AttrSchema, batch_size: int):
-    """Normalize any accepted filter form to dense (lo, hi) arrays.
+    """Normalize any accepted *conjunctive* filter form to dense (lo, hi).
 
     Accepts a FilterExpr, an explicit ``(lo, hi)`` array pair (passed
-    through, validated), or None (unconstrained).
+    through, validated), or None (unconstrained). Disjunctive
+    expressions raise — route those through ``compile_dnf``.
     """
     m = len(schema)
     if filters is None:
@@ -147,4 +212,22 @@ def compile_filters(filters, schema: AttrSchema, batch_size: int):
                 f"explicit (lo, hi) must each be shape ({batch_size}, {m}); "
                 f"got {lo.shape} and {hi.shape}")
         return lo, hi
+    raise TypeError(f"unsupported filters object: {type(filters).__name__}")
+
+
+def compile_dnf(filters, schema: AttrSchema, batch_size: int):
+    """Lower any accepted filter form to a DNF box stack.
+
+    Returns ``(lo, hi)`` float32 arrays of shape (n_boxes, B, m): one
+    (B, m) slab per DNF conjunction. Conjunctive forms (None, explicit
+    arrays, and-only expressions) yield n_boxes = 1.
+    """
+    if filters is None or isinstance(filters, (tuple, list)):
+        lo, hi = compile_filters(filters, schema, batch_size)
+        return lo[None], hi[None]
+    if isinstance(filters, FilterExpr):
+        slabs = [compile_conjunction(c, schema, batch_size)
+                 for c in filters.dnf()]
+        return (np.stack([s[0] for s in slabs]),
+                np.stack([s[1] for s in slabs]))
     raise TypeError(f"unsupported filters object: {type(filters).__name__}")

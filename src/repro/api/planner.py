@@ -1,0 +1,166 @@
+"""Query planner: disjunctive filters -> one box-batched engine pass.
+
+``F(...)`` expressions are closed under ``&``/``|`` and compile to
+disjunctive normal form — per query, a union of dense ``(lo, hi)``
+boxes (``repro.api.filters.compile_dnf``). This module turns that union
+into something the engines can serve in a *single* device pass:
+
+1. **Canonicalize** each query's box set (:func:`canonicalize_boxes`):
+   prune empty boxes (``lo > hi`` on any attribute), drop duplicates and
+   boxes contained in another, and merge boxes that differ on exactly
+   one attribute whose intervals overlap or are adjacent (adjacency at
+   one float32 ulp — the same granularity strict bounds are encoded
+   with, so ``price < 10 | price >= 10`` collapses to unbounded).
+2. **Flatten** all boxes across all queries in the batch
+   (:func:`plan_queries`): query vectors are replicated per box and a
+   ``qmap`` row->original-query segment map rides along, so cell
+   selection, ordering and traversal run once over the widened batch —
+   no per-box Python loop over ``Searcher.search``.
+3. **Merge** per-box top-k candidates back into per-query results with
+   the segment-aware, id-deduplicating fold
+   (``repro.core.search.merge_segment_topk``), which both engines apply
+   when handed a ``qmap``.
+
+Conjunctive filters (including explicit ``(lo, hi)`` arrays and None)
+produce a *trivial* plan — one box per query, identity ``qmap`` — which
+``Collection.search`` serves on the unwidened fast path, byte-identical
+to the pre-planner behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.api.filters import (FilterExpr, compile_conjunction,
+                               compile_filters)
+from repro.api.schema import AttrSchema
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Flattened box-batched execution plan for one query batch."""
+
+    lo: np.ndarray        # (T, m) f32 — all boxes, grouped by query
+    hi: np.ndarray        # (T, m) f32
+    qmap: np.ndarray      # (T,) i64 — original query index per box row
+    n_queries: int        # B of the original batch
+    trivial: bool         # conjunctive fast path: identity qmap, T == B
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_boxes(self) -> int:
+        return self.lo.shape[0]
+
+
+def canonicalize_boxes(lo: np.ndarray, hi: np.ndarray):
+    """Canonicalize one query's box union; returns (n_canon, m) arrays.
+
+    Dropped: empty boxes (lo > hi on any attribute), exact duplicates,
+    and boxes contained in another. Merged: box pairs that differ on a
+    single attribute whose intervals overlap or are adjacent within one
+    float32 ulp. Runs to fixpoint, then orders boxes lexicographically
+    so the plan (and hence the merged result under distance ties) is
+    deterministic.
+    """
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    m = lo.shape[1]
+    keep = ~(lo > hi).any(axis=1)
+    boxes = [(lo[i].copy(), hi[i].copy()) for i in np.nonzero(keep)[0]]
+    changed = True
+    while changed:
+        changed = False
+        out: list = []
+        for blo, bhi in boxes:
+            absorbed = False
+            for j, (olo, ohi) in enumerate(out):
+                if (olo <= blo).all() and (bhi <= ohi).all():
+                    absorbed = True                 # contained (or dup)
+                    break
+                if (blo <= olo).all() and (ohi <= bhi).all():
+                    out[j] = (blo, bhi)             # contains -> replace
+                    absorbed = changed = True
+                    break
+                diff = (blo != olo) | (bhi != ohi)
+                if diff.sum() == 1:
+                    a = int(np.argmax(diff))
+                    gap_lo = max(blo[a], olo[a])
+                    gap_hi = min(bhi[a], ohi[a])
+                    if gap_lo <= np.nextafter(gap_hi, np.float32(np.inf)):
+                        nlo, nhi = olo.copy(), ohi.copy()
+                        nlo[a] = min(blo[a], olo[a])
+                        nhi[a] = max(bhi[a], ohi[a])
+                        out[j] = (nlo, nhi)
+                        absorbed = changed = True
+                        break
+            if not absorbed:
+                out.append((blo, bhi))
+        boxes = out
+    if not boxes:
+        return np.empty((0, m), np.float32), np.empty((0, m), np.float32)
+    order = sorted(range(len(boxes)),
+                   key=lambda i: (boxes[i][0].tolist(), boxes[i][1].tolist()))
+    return (np.stack([boxes[i][0] for i in order]),
+            np.stack([boxes[i][1] for i in order]))
+
+
+def plan_queries(filters, schema: AttrSchema, batch_size: int) -> QueryPlan:
+    """Compile + canonicalize + flatten one batch's filters into a plan."""
+    conjs = filters.dnf() if isinstance(filters, FilterExpr) else None
+    if conjs is None or len(conjs) == 1:
+        if conjs is None:     # explicit (lo, hi) arrays or None
+            lo, hi = compile_filters(filters, schema, batch_size)
+        else:
+            lo, hi = compile_conjunction(conjs[0], schema, batch_size)
+        return QueryPlan(lo=lo, hi=hi,
+                         qmap=np.arange(batch_size, dtype=np.int64),
+                         n_queries=batch_size, trivial=True,
+                         stats={"n_queries": batch_size,
+                                "n_boxes": batch_size, "max_fanout": 1})
+
+    slabs = [compile_conjunction(c, schema, batch_size) for c in conjs]
+    blo = np.stack([s[0] for s in slabs])                 # (nb, B, m)
+    bhi = np.stack([s[1] for s in slabs])
+    m = blo.shape[2]
+    if batch_size == 0:
+        lo = np.empty((0, m), np.float32)
+        return QueryPlan(lo=lo, hi=lo.copy(),
+                         qmap=np.empty(0, np.int64), n_queries=0,
+                         trivial=False,
+                         stats={"n_queries": 0, "n_boxes": 0,
+                                "n_dnf_branches": blo.shape[0],
+                                "max_fanout": 0})
+
+    # scalar-bound filters compile to boxes constant across the batch:
+    # canonicalize once and tile, instead of B identical passes
+    uniform = bool((blo == blo[:, :1]).all() and (bhi == bhi[:, :1]).all())
+    if uniform:
+        clo, chi = canonicalize_boxes(blo[:, 0], bhi[:, 0])
+        nbc = clo.shape[0]
+        lo = np.tile(clo, (batch_size, 1))
+        hi = np.tile(chi, (batch_size, 1))
+        qmap = np.repeat(np.arange(batch_size, dtype=np.int64), nbc)
+        fanout = np.full(batch_size, nbc, np.int64)
+    else:
+        los, his, maps = [], [], []
+        fanout = np.zeros(batch_size, np.int64)
+        for b in range(batch_size):
+            clo, chi = canonicalize_boxes(blo[:, b], bhi[:, b])
+            fanout[b] = clo.shape[0]
+            if clo.shape[0]:
+                los.append(clo)
+                his.append(chi)
+                maps.append(np.full(clo.shape[0], b, np.int64))
+        lo = (np.concatenate(los, axis=0) if los
+              else np.empty((0, m), np.float32))
+        hi = (np.concatenate(his, axis=0) if his
+              else np.empty((0, m), np.float32))
+        qmap = (np.concatenate(maps) if maps else np.empty(0, np.int64))
+    return QueryPlan(
+        lo=lo, hi=hi, qmap=qmap, n_queries=batch_size, trivial=False,
+        stats={"n_queries": batch_size,
+               "n_boxes": int(lo.shape[0]),
+               "n_dnf_branches": int(blo.shape[0]),
+               "max_fanout": int(fanout.max()) if batch_size else 0})

@@ -7,6 +7,14 @@ import dataclasses
 import numpy as np
 
 
+def _pad_k(arr: np.ndarray, k: int, fill) -> np.ndarray:
+    """Widen a (B, k') result array to k columns with pad values."""
+    if arr.shape[1] == k:
+        return arr
+    pad = np.full((arr.shape[0], k - arr.shape[1]), fill, arr.dtype)
+    return np.concatenate([arr, pad], axis=1)
+
+
 # eq=False: a generated __eq__ would compare ndarray fields elementwise
 # and raise on bool() — identity comparison is the only sane default
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -39,6 +47,33 @@ class QueryResult:
         """Recall against exact ground-truth ids (paper's metric)."""
         from repro.core.search import recall_at_k
         return recall_at_k(self.ids, true_ids)
+
+    def merge(self, other: "QueryResult") -> "QueryResult":
+        """Row-wise union of two result sets over the same query batch
+        (e.g. two filter branches searched separately).
+
+        Deterministic: per query, duplicate ids collapse to their best
+        (smallest) distance, candidates order by (distance, id) so ties
+        break toward the smaller id, and the union's top-k is kept
+        (k = max of the two operands). Prefer a single disjunctive
+        ``Collection.search`` call — the planner runs all branches in
+        one box-batched device pass; this is the host-side fallback.
+        """
+        from repro.core.search import merge_segment_topk
+        if len(self) != len(other):
+            raise ValueError(
+                f"cannot merge results over different batches "
+                f"({len(self)} vs {len(other)} queries)")
+        B = len(self)
+        k = max(self.k, other.k)
+        ids = np.concatenate([_pad_k(self.ids, k, -1),
+                              _pad_k(other.ids, k, -1)], axis=0)
+        d = np.concatenate([_pad_k(self.distances, k, np.inf),
+                            _pad_k(other.distances, k, np.inf)], axis=0)
+        qmap = np.concatenate([np.arange(B), np.arange(B)])
+        mi, md = merge_segment_topk(ids, d, qmap, B, k)
+        engine = self.engine if self.engine == other.engine else "mixed"
+        return QueryResult(ids=mi, distances=md, engine=engine)
 
     def __iter__(self):
         """Yield (ids, distances) per query, pads trimmed."""

@@ -151,19 +151,37 @@ class OutOfCoreEngine:
 
     def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
                params: Optional[SearchParams] = None,
-               use_schedule: bool = True):
-        """Returns (ids (B, k) original ids, dists (B, k) exact fp32)."""
+               use_schedule: bool = True,
+               qmap: Optional[np.ndarray] = None,
+               n_queries: Optional[int] = None):
+        """Returns (ids (B, k) original ids, dists (B, k) exact fp32).
+
+        With ``qmap`` (row -> original-query segment map from a
+        disjunctive plan), rows are per-box sub-queries that stream
+        through the cell batches as one widened batch; per-box survivors
+        fold back to (n_queries, k) after the exact re-rank.
+        """
         params = params or SearchParams()
         idx = self.index
         cfg = idx.config
         k, ef = params.k, params.ef or cfg.search_ef
         B = q.shape[0]
+        if qmap is not None:
+            qmap = np.asarray(qmap, np.int64)
+            if qmap.shape != (B,):
+                raise ValueError(
+                    f"qmap shape {qmap.shape} != batch ({B},)")
+            if n_queries is None:
+                # inferring from qmap.max() would silently drop trailing
+                # queries whose boxes were all pruned by the planner
+                raise ValueError("n_queries is required with qmap")
         if B == 0:
             self.stats = {"n_batches": 0, "total_active": 0,
                           "cells_per_batch": self.cells_per_batch(),
                           "transfer_bytes": 0, "wall_seconds": 0.0}
-            return (np.zeros((0, k), np.int64),
-                    np.zeros((0, k), np.float32))
+            nq = n_queries if qmap is not None else 0
+            return (np.full((nq, k), -1, np.int64),
+                    np.full((nq, k), np.inf, np.float32))
         t_start = time.perf_counter()
 
         # (1) selection + ordering ranks (host)
@@ -251,6 +269,11 @@ class OutOfCoreEngine:
             ids = np.where(keep, idx.perm[cand[ordr]], -1)
             out_i[bqi, :len(ids)] = ids
             out_d[bqi, :len(ids)] = np.where(keep, d_exact[ordr], np.inf)
+        if qmap is not None:
+            from repro.core.search import merge_segment_topk
+            self.stats["n_boxes"] = B
+            out_i, out_d = merge_segment_topk(out_i, out_d, qmap,
+                                              n_queries, k)
         self.stats["wall_seconds"] = time.perf_counter() - t_start
         return out_i, out_d
 

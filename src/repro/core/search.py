@@ -170,16 +170,34 @@ class Searcher:
     # -- host half: adaptive split + id mapping ----------------------------
 
     def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
-               params: Optional[SearchParams] = None):
-        """Returns (ids (B, k) i64 original ids [-1 pad], dists (B, k))."""
+               params: Optional[SearchParams] = None,
+               qmap: Optional[np.ndarray] = None,
+               n_queries: Optional[int] = None):
+        """Returns (ids (B, k) i64 original ids [-1 pad], dists (B, k)).
+
+        With ``qmap`` (a (B,) row -> original-query segment map from a
+        disjunctive plan), rows are per-box sub-queries: the widened
+        batch still runs as one adaptive pass, and per-box candidates
+        fold back to (n_queries, k) via :func:`merge_segment_topk`.
+        """
         params = params or SearchParams()
         q = np.asarray(q, np.float32)
         lo = np.asarray(lo, np.float32)
         hi = np.asarray(hi, np.float32)
         B = q.shape[0]
+        if qmap is not None:
+            qmap = np.asarray(qmap, np.int64)
+            if qmap.shape != (B,):
+                raise ValueError(
+                    f"qmap shape {qmap.shape} != batch ({B},)")
+            if n_queries is None:
+                # inferring from qmap.max() would silently drop trailing
+                # queries whose boxes were all pruned by the planner
+                raise ValueError("n_queries is required with qmap")
         if B == 0:
-            return (np.zeros((0, params.k), np.int64),
-                    np.zeros((0, params.k), np.float32))
+            nq = n_queries if qmap is not None else 0
+            return (np.full((nq, params.k), -1, np.int64),
+                    np.full((nq, params.k), np.inf, np.float32))
         key = jax.random.PRNGKey(params.seed)
 
         cfg = self.index.config
@@ -236,7 +254,54 @@ class Searcher:
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[sel] = orig
             out_d[sel] = d
+        if qmap is not None:
+            return merge_segment_topk(out_i, out_d, qmap, n_queries,
+                                      params.k)
         return out_i, out_d
+
+
+def merge_segment_topk(ids: np.ndarray, dists: np.ndarray,
+                       qmap: np.ndarray, n_queries: int, k: int):
+    """Fold per-box candidate rows back into per-query top-k.
+
+    ``ids`` (T, kk) with -1 pads and ``dists`` (T, kk) with +inf pads are
+    per-box results; ``qmap`` (T,) maps each row to its original query.
+    Returns ((n_queries, k) i64 ids, (n_queries, k) f32 dists).
+
+    Deterministic by construction: duplicate ids within a query (a point
+    matching several boxes) collapse to their best distance, candidates
+    order by (distance, id) so distance ties break toward the smaller
+    id, and queries with no boxes/candidates come back fully padded.
+    """
+    ids = np.asarray(ids)
+    dists = np.asarray(dists)
+    out_i = np.full((n_queries, k), -1, np.int64)
+    out_d = np.full((n_queries, k), np.inf, np.float32)
+    if ids.size == 0:
+        return out_i, out_d
+    T, kk = ids.shape
+    fq = np.repeat(np.asarray(qmap, np.int64), kk)
+    fi = ids.ravel().astype(np.int64)
+    fd = dists.ravel().astype(np.float32)
+    valid = fi >= 0
+    fi, fd, fq = fi[valid], fd[valid], fq[valid]
+    if fi.size == 0:
+        return out_i, out_d
+    # dedup: sort by (query, id, dist), keep each (query, id)'s best dist
+    o = np.lexsort((fd, fi, fq))
+    fi, fd, fq = fi[o], fd[o], fq[o]
+    first = np.ones(fi.shape[0], bool)
+    first[1:] = (fq[1:] != fq[:-1]) | (fi[1:] != fi[:-1])
+    fi, fd, fq = fi[first], fd[first], fq[first]
+    # rank survivors by (query, dist, id) and take each query's first k
+    o = np.lexsort((fi, fd, fq))
+    fi, fd, fq = fi[o], fd[o], fq[o]
+    starts = np.searchsorted(fq, np.arange(n_queries))
+    rank = np.arange(fq.shape[0]) - starts[fq]
+    keep = rank < k
+    out_i[fq[keep], rank[keep]] = fi[keep]
+    out_d[fq[keep], rank[keep]] = fd[keep]
+    return out_i, out_d
 
 
 def ground_truth(vectors: np.ndarray, attrs: np.ndarray, q: np.ndarray,

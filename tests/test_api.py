@@ -66,8 +66,10 @@ def test_compile_per_query_bounds_and_shape_errors():
         (F("ts") >= t0).compile(SCHEMA, 4)     # batch mismatch
     with pytest.raises(KeyError):
         (F("bogus") >= 0).compile(SCHEMA, 1)
-    with pytest.raises(NotImplementedError):
-        (F("ts") >= 0) | (F("price") <= 1)
+    # disjunctions build fine but cannot lower to ONE box — single-box
+    # compile raises; the DNF path (compile_dnf / planner) serves them
+    with pytest.raises(ValueError):
+        ((F("ts") >= 0) | (F("price") <= 1)).compile(SCHEMA, 1)
 
 
 def test_compile_filters_normalization():

@@ -3,9 +3,10 @@
 import numpy as np
 import pytest
 
+from repro.api import AttrSchema, Collection, F
 from repro.core.search import Searcher, ground_truth, recall_at_k
-from repro.core.types import SearchParams
-from repro.data import make_queries
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_dataset, make_queries
 
 
 @pytest.fixture(scope="module")
@@ -69,6 +70,60 @@ def test_ablation_flags_run(searcher, small_queries):
     ids1, _ = searcher.search(wl.q, wl.lo, wl.hi, p_noorder)
     ids2, _ = searcher.search(wl.q, wl.lo, wl.hi, p_nointer)
     assert (ids1 >= -1).all() and (ids2 >= -1).all()
+
+
+# -- disjunctive recall (acceptance: union predicate == brute force) --------
+
+@pytest.fixture(scope="module")
+def disj_collection():
+    """5k points with price scaled to [0, 100): the acceptance dataset
+    for ``(price < 10) | (price > 90)``."""
+    v, a = make_dataset("deep", 5000, seed=7, m=2)
+    a = a.copy()
+    a[:, 0] *= 100.0
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=12, n_clusters=16,
+                    build_ef=48)
+    col = Collection.build(v, a, schema=AttrSchema(["price", "ts"]),
+                           config=cfg, seed=0)
+    rng = np.random.default_rng(1)
+    q = v[rng.integers(0, len(v), 24)] \
+        + rng.normal(0, 0.3, (24, v.shape[1])).astype(np.float32)
+    return col, v, a, q
+
+
+def _brute_union_ids(v, a, q, mask, k):
+    d = ((v[None] - q[:, None]) ** 2).sum(-1)
+    d[:, ~mask] = np.inf
+    order = np.argsort(d, axis=1)[:, :k]
+    return np.where(np.take_along_axis(d, order, 1) < np.inf, order, -1)
+
+
+def test_disjunction_recall_in_core(disj_collection):
+    col, v, a, q = disj_collection
+    expr = (F("price") < 10) | (F("price") > 90)
+    res = col.search(q, filters=expr, k=10, ef=64)
+    tids = _brute_union_ids(v, a, q, (a[:, 0] < 10) | (a[:, 0] > 90), 10)
+    assert res.recall(tids) >= 0.95
+    # Collection.ground_truth serves the same union exactly
+    assert recall_at_k(col.ground_truth(q, filters=expr, k=10), tids) == 1.0
+    # every returned id satisfies the *disjunction* (not one fixed box)
+    for ids_b, _ in res:
+        assert ((a[ids_b, 0] < 10) | (a[ids_b, 0] > 90)).all()
+
+
+def test_disjunction_recall_out_of_core(disj_collection):
+    col, v, a, q = disj_collection
+    budget = col.out_of_core_resident_bytes() + (1 << 20)
+    assert budget < col.in_core_bytes()
+    ooc = Collection(index=col.index, schema=col.schema,
+                     device_budget_bytes=budget)
+    expr = (F("price") < 10) | (F("price") > 90)
+    res = ooc.search(q, filters=expr, params=SearchParams(k=10, ef=128))
+    assert res.engine == "out_of_core"
+    tids = _brute_union_ids(v, a, q, (a[:, 0] < 10) | (a[:, 0] > 90), 10)
+    assert res.recall(tids) >= 0.95
+    assert ooc.last_stats["n_batches"] >= 1
+    assert ooc.last_stats["planner"]["n_boxes"] == 2 * len(q)
 
 
 def test_wide_open_range_uses_global_path(searcher, small_data,
