@@ -1,0 +1,80 @@
+"""Device-budget sweep across the three engine modes (ISSUE 3).
+
+One collection, one workload, three declared ``device_budget_bytes``
+regimes — the budget alone moves the execution across the mode matrix:
+
+  fits_all    : the whole fp32 index fits            -> incore
+  graph_over  : the fp32 graph exceeds the budget but the int8
+                residents + a full graph cache fit   -> hybrid
+  min_budget  : barely more than the int8 residents  -> ooc
+
+plus a forced hybrid-vs-ooc pair at the ``graph_over`` budget — the
+acceptance row: hybrid must beat the streaming engine's throughput at
+equal (±tolerance) recall, since it keeps hot graph cells device-resident
+across query batches instead of re-gathering/remapping/re-uploading its
+whole window every call.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.api import AttrSchema, Collection
+from repro.core.runtime import cache_slot_bytes
+from repro.core.search import ground_truth
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_queries
+
+
+def run(scale: str = "smoke"):
+    sc = common.SCALES[scale]
+    ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
+    v, a = common.dataset(ds, n)
+    from repro.core import gmg
+    cfg = GMGConfig(seg_per_attr=(2, 2, 2), intra_degree=16, n_clusters=32,
+                    batch_cells=3)
+    idx = gmg.build_gmg(v, a, cfg, seed=0)
+    schema = AttrSchema.generic(a.shape[1])
+    base = Collection(index=idx, schema=schema)
+
+    wl = make_queries(v, a, nq, 2, seed=210)
+    tids, _ = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+    p = SearchParams(k=10, ef=64)
+
+    resident = base.out_of_core_resident_bytes()
+    full_cache = cache_slot_bytes(idx) * idx.n_cells
+    budgets = [
+        ("fits_all", base.in_core_bytes() + (1 << 20)),
+        ("graph_over", resident + full_cache + (1 << 16)),
+        ("min_budget", (resident + base.hybrid_min_bytes()) // 2),
+    ]
+    assert budgets[1][1] < base.in_core_bytes(), \
+        "graph_over regime must exclude the in-core engine"
+
+    rows = []
+
+    def measure(col: Collection, label: str, mode_used: str):
+        res = col.search(wl.q, filters=(wl.lo, wl.hi), params=p)  # warm jit
+        assert res.engine == mode_used
+        qps, _ = common.timed_qps(
+            lambda: col.search(wl.q, filters=(wl.lo, wl.hi), params=p),
+            nq, warmup=0, iters=3)
+        stats = dict(col.last_stats)
+        return dict(
+            bench="memory_budget", dataset=ds, budget=label,
+            budget_mb=round((col.device_budget_bytes or 0) / 1e6, 2),
+            mode=mode_used,
+            recall=round(res.recall(tids), 4), qps=round(qps, 1),
+            transfer_mb=round(stats.get("transfer_bytes", 0) / 1e6, 3))
+
+    # the budget alone walks the mode matrix
+    for label, budget in budgets:
+        col = Collection(index=idx, schema=schema,
+                         device_budget_bytes=budget)
+        rows.append(measure(col, label, col.plan()["engine"]))
+
+    # acceptance pair: same graph_over budget, modes forced
+    for mode in ("hybrid", "ooc"):
+        col = Collection(index=idx, schema=schema,
+                         device_budget_bytes=budgets[1][1], mode=mode)
+        rows.append(measure(col, "graph_over_forced", mode))
+    return rows

@@ -2,7 +2,8 @@
 
 Reads the per-bench JSON written by ``python -m benchmarks.run --scale
 smoke`` (results/bench/*.json), extracts the tracked recall metrics —
-Garfield's QPS/recall sweep rows and the disjunctive box-batched rows —
+Garfield's QPS/recall sweep rows, the disjunctive box-batched rows and
+the engine-mode memory-budget sweep (incore / hybrid / ooc) —
 and exits non-zero if any drops more than ``tolerance`` below its value
 in benchmarks/baselines/smoke_recall.json, or if a tracked metric
 disappeared entirely (a silently-skipped bench must not pass the gate).
@@ -57,6 +58,11 @@ def tracked_metrics(results_dir: str) -> dict:
         if (r.get("method") == "box_batched"
                 and float(r.get("recall", 0)) > 0):
             key = f"disjunction:{r['dataset']}:branches={r['n_branches']}"
+            out[key] = float(r["recall"])
+    for r in _load_rows(results_dir, "bench_memory_budget"):
+        if float(r.get("recall", 0)) > 0:
+            key = (f"memory_budget:{r['dataset']}:{r['budget']}:"
+                   f"{r['mode']}")
             out[key] = float(r["recall"])
     return out
 

@@ -31,6 +31,7 @@ BENCHES = [
     "bench_ablation",       # Figure 13
     "bench_outofcore",      # Figure 14 + Table 3
     "bench_disjunction",    # box-batched DNF planner vs per-box loop
+    "bench_memory_budget",  # engine-mode sweep: incore / hybrid / ooc
     "bench_kernels",        # kernel microbench
 ]
 

@@ -61,12 +61,30 @@ def main():
           f"recall@10 = {rec_or:.4f}")
     assert rec_or > 0.9
 
-    print("7. save -> load -> search round-trip")
+    print("7. engine modes: one traversal core, three residency tiers")
+    #   mode    | vectors       | graph          | seeding
+    #   --------+---------------+----------------+--------------
+    #   incore  | fp32 resident | fully resident | fresh beam
+    #   hybrid  | int8 +rerank  | LRU cell cache | carried pool
+    #   ooc     | int8 +rerank  | streamed batch | carried pool
+    # mode="auto" (the default) picks from device_budget_bytes; an
+    # explicit mode (or search(engine=...)) forces a tier.
+    col.device_budget_bytes = col.hybrid_min_bytes() + (256 << 10)
+    print(f"   budget {col.device_budget_bytes / 1e6:.1f}MB -> "
+          f"{col.plan()['engine']} "
+          f"(in-core would need {col.in_core_bytes() / 1e6:.1f}MB)")
+    res_h = col.search(wl.q, filters=(wl.lo, wl.hi), k=10, ef=64)
+    print(f"   hybrid recall@10 = {res_h.recall(true_ids):.4f} "
+          f"({col.last_stats['cache_misses']} cell-cache misses)")
+    col.device_budget_bytes = None          # back to in-core
+
+    print("8. save -> load -> search round-trip (mode rides along)")
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "collection.npz")
         col.save(path)
         col2 = Collection.load(path)
         res2 = col2.search(wl.q, filters=F("ts") >= t0, k=10, ef=64)
+    assert col2.mode == col.mode
     assert np.array_equal(res_expr.ids, res2.ids)
     print("   identical results after reload")
     print("OK")

@@ -14,6 +14,16 @@ internal layers beneath this facade.
     res = col.search(q, filters=(F("price") < 10) | (F("price") > 90), k=10)
     col.save("index.npz")
     col2 = Collection.load("index.npz")
+
+Engine modes: every collection runs the same traversal core under one of
+three residency tiers — ``mode="auto"`` (default) picks from the declared
+``device_budget_bytes``, or force one with ``mode=`` / ``search(engine=)``:
+
+    mode    | vectors       | graph              | seeding
+    --------+---------------+--------------------+--------------
+    incore  | fp32 resident | fully resident     | fresh beam
+    hybrid  | int8 +rerank  | LRU cell cache     | carried pool
+    ooc     | int8 +rerank  | streamed batches   | carried pool
 """
 
 from repro.api.schema import AttrSchema  # noqa: F401

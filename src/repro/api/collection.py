@@ -2,7 +2,7 @@
 
 One object owns a built GMG index plus its attribute schema and picks the
 execution engine per batch, so callers never touch ``build_gmg``,
-``Searcher`` or ``OutOfCoreEngine`` directly:
+``Searcher``, ``HybridEngine`` or ``OutOfCoreEngine`` directly:
 
   - build     — ``Collection.build(vectors, attrs, schema=..., config=...)``
   - search    — ``col.search(q, filters=F("price") <= 50, k=10)``; the
@@ -11,13 +11,21 @@ execution engine per batch, so callers never touch ``build_gmg``,
                 Filters compose with ``&`` *and* ``|``: disjunctions are
                 planned (repro.api.planner) into one box-batched engine
                 pass plus a segment-aware top-k merge.
-  - dispatch  — a declared ``device_budget_bytes`` decides between the
-                fully-resident in-core ``Searcher`` (which internally
-                splits lanes across the itinerary / global / adaptive
-                dense paths) and the streaming ``OutOfCoreEngine``; the
-                caller states a budget, not an engine class.
+  - dispatch  — an explicit ``mode`` ("auto" | "incore" | "hybrid" |
+                "ooc"); ``"auto"`` picks from the declared
+                ``device_budget_bytes``. All modes run the same
+                traversal core (repro.core.runtime), differing only in
+                the storage x graph-residency x seeding matrix:
+
+                  mode    | vectors       | graph          | seeding
+                  --------+---------------+----------------+-------------
+                  incore  | fp32 resident | fully resident | fresh beam
+                  hybrid  | int8 +rerank  | LRU cell cache | carried pool
+                  ooc     | int8 +rerank  | streamed batch | carried pool
+
   - persist   — ``col.save(path)`` / ``Collection.load(path)`` round-trip
-                the entire built index through one ``.npz`` file.
+                the entire built index, the chosen engine mode and the
+                device budget through one ``.npz`` file.
 """
 
 from __future__ import annotations
@@ -34,13 +42,25 @@ from repro.api.schema import AttrSchema
 from repro.core import gmg as gmg_mod
 from repro.core.types import GMGConfig, GMGIndex, SearchParams
 
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2
 
 # GMGIndex array fields persisted 1:1 (seg_bounds, being a list, is
 # handled separately; None-able fields are skipped when absent).
 _INDEX_ARRAYS = ("vectors", "attrs", "perm", "cell_of", "cell_start",
                  "cell_lo", "cell_hi", "intra_adj", "inter_adj",
                  "centroids", "hist", "attr_quantiles", "vq", "vscale")
+
+_MODES = ("auto", "incore", "hybrid", "ooc")
+# historical engine names accepted by Collection.search(engine=...)
+_MODE_ALIASES = {"in_core": "incore", "out_of_core": "ooc"}
+
+
+def _canon_mode(mode: str) -> str:
+    mode = _MODE_ALIASES.get(mode, mode)
+    if mode not in _MODES:
+        raise ValueError(f"unknown engine mode {mode!r}; "
+                         f"expected one of {_MODES}")
+    return mode
 
 
 @dataclasses.dataclass
@@ -50,13 +70,17 @@ class Collection:
     index: GMGIndex
     schema: AttrSchema
     device_budget_bytes: Optional[int] = None
+    mode: str = "auto"
 
     def __post_init__(self):
         if len(self.schema) != self.index.attrs.shape[1]:
             raise ValueError(
                 f"schema has {len(self.schema)} attributes but index stores "
                 f"{self.index.attrs.shape[1]}")
+        self.mode = _canon_mode(self.mode)
         self._in_core = None        # lazily-built Searcher
+        self._hybrid = None         # lazily-built HybridEngine
+        self._hybrid_budget = None  # budget the hybrid cache was sized for
         self._out_of_core = None    # lazily-built OutOfCoreEngine
         self._out_of_core_budget = None   # budget the streamer was built for
         self._inv_perm = None       # lazily-built original-order inverse
@@ -70,6 +94,7 @@ class Collection:
               schema: Optional[AttrSchema] = None,
               config: Optional[GMGConfig] = None, seed: int = 0,
               device_budget_bytes: Optional[int] = None,
+              mode: str = "auto",
               verbose: bool = False) -> "Collection":
         """Build a collection from raw vectors + attributes.
 
@@ -90,7 +115,7 @@ class Collection:
         index = gmg_mod.build_gmg(vectors, attr_arr, config, seed=seed,
                                   verbose=verbose)
         return cls(index=index, schema=schema,
-                   device_budget_bytes=device_budget_bytes)
+                   device_budget_bytes=device_budget_bytes, mode=mode)
 
     # -- properties ---------------------------------------------------------
 
@@ -112,22 +137,36 @@ class Collection:
         return (idx.vectors.nbytes + idx.attrs.nbytes + 2 * graph + order)
 
     def out_of_core_resident_bytes(self) -> int:
-        """Always-resident part of the streaming engine (int8 copy)."""
+        """Always-resident part of the streaming/hybrid engines (int8
+        copy + attrs)."""
         idx = self.index
         if idx.vq is None:
             return 0
         return idx.vq.nbytes + idx.vscale.nbytes + idx.attrs.nbytes
 
+    def hybrid_min_bytes(self) -> int:
+        """Smallest budget the hybrid mode is worth running under: the
+        int8 residents plus a two-slot graph cache (one slot would
+        re-upload on every wave and degenerate to streaming)."""
+        from repro.core.runtime import cache_slot_bytes
+        return (self.out_of_core_resident_bytes()
+                + 2 * cache_slot_bytes(self.index))
+
     # -- engine dispatch ----------------------------------------------------
 
-    def _resolve_engine(self, engine: str = "auto") -> str:
-        if engine in ("in_core", "out_of_core"):
-            return engine
-        if engine != "auto":
-            raise ValueError(f"unknown engine {engine!r}")
+    def _resolve_engine(self, engine: Optional[str] = None) -> str:
+        # re-canonicalize self.mode too: mutating col.mode after
+        # construction is a supported pattern and may use legacy names
+        mode = _canon_mode(engine if engine is not None else self.mode)
+        if mode != "auto":
+            if mode in ("hybrid", "ooc") and self.index.vq is None:
+                raise ValueError(
+                    f"mode {mode!r} needs a quantized copy; rebuild with "
+                    "config.quantize=True")
+            return mode
         budget = self.device_budget_bytes
         if budget is None or self.in_core_bytes() <= budget:
-            return "in_core"
+            return "incore"
         if self.index.vq is None:
             raise ValueError(
                 "device budget excludes the in-core engine but the index "
@@ -136,13 +175,34 @@ class Collection:
             raise ValueError(
                 f"device budget {budget}B cannot hold even the quantized "
                 f"residents ({self.out_of_core_resident_bytes()}B)")
-        return "out_of_core"
+        if budget >= self.hybrid_min_bytes():
+            return "hybrid"
+        return "ooc"
 
     def _searcher(self):
         if self._in_core is None:
             from repro.core.search import Searcher
             self._in_core = Searcher(self.index)
         return self._in_core
+
+    def _hybrid_cache_budget(self) -> Optional[int]:
+        """Bytes left for the hybrid graph cache after the int8
+        residents (None = unbounded)."""
+        if self.device_budget_bytes is None:
+            return None
+        return max(self.device_budget_bytes
+                   - self.out_of_core_resident_bytes(), 1)
+
+    def _hybrid_engine(self):
+        # rebuilt when the declared budget changes (the cell-cache size
+        # is derived from it at construction)
+        if (self._hybrid is None
+                or self._hybrid_budget != self.device_budget_bytes):
+            from repro.core.hybrid import HybridEngine
+            self._hybrid = HybridEngine(
+                self.index, cache_budget_bytes=self._hybrid_cache_budget())
+            self._hybrid_budget = self.device_budget_bytes
+        return self._hybrid
 
     def _streamer(self):
         # rebuilt when the declared budget changes (the graph window is
@@ -159,15 +219,34 @@ class Collection:
             self._out_of_core_budget = self.device_budget_bytes
         return self._out_of_core
 
-    def plan(self, engine: str = "auto") -> dict:
-        """Introspect the dispatch decision under the current budget
-        (no search is run)."""
+    def _engine_for(self, which: str):
+        if which == "incore":
+            return self._searcher()
+        if which == "hybrid":
+            return self._hybrid_engine()
+        if which == "ooc":
+            return self._streamer()
+        raise ValueError(f"unresolved engine mode {which!r}")
+
+    def plan(self, engine: Optional[str] = None) -> dict:
+        """Introspect the dispatch decision under the current budget and
+        mode (no search is run)."""
         which = self._resolve_engine(engine)
-        info = {"engine": which,
+        # re-canonicalize: col.mode may have been mutated to a legacy name
+        info = {"engine": which, "mode": _canon_mode(self.mode),
                 "in_core_bytes": self.in_core_bytes(),
                 "device_budget_bytes": self.device_budget_bytes}
-        if which == "out_of_core":
+        if which in ("hybrid", "ooc"):
             info["resident_bytes"] = self.out_of_core_resident_bytes()
+        if which == "hybrid":
+            # the cache's own sizing rule, evaluated allocation-free —
+            # introspection never builds the engine or its buffers
+            from repro.core.runtime import cache_slot_bytes, plan_cache_slots
+            n_slots = plan_cache_slots(self.index,
+                                       self._hybrid_cache_budget())
+            info["cache_slots"] = n_slots
+            info["cache_bytes"] = n_slots * cache_slot_bytes(self.index)
+        if which == "ooc":
             info["cells_per_batch"] = self._streamer().cells_per_batch()
         return info
 
@@ -176,13 +255,15 @@ class Collection:
     def search(self, q: np.ndarray, filters=None, k: int = 10,
                ef: Optional[int] = None,
                params: Optional[SearchParams] = None,
-               engine: str = "auto") -> QueryResult:
+               engine: Optional[str] = None) -> QueryResult:
         """Top-k range-filtered search over a query batch.
 
         ``filters`` is a filter expression (``F("price") <= 50``,
         and/or-composable: ``(F("price") < 10) | (F("price") > 90)``),
         an explicit ``(lo, hi)`` array pair, or None. ``params``
-        overrides (k, ef) wholesale when given.
+        overrides (k, ef) wholesale when given. ``engine`` overrides the
+        collection's ``mode`` for this one batch ("incore" | "hybrid" |
+        "ooc"; historical "in_core"/"out_of_core" accepted).
 
         Disjunctive filters go through the query planner: the whole
         batch's DNF boxes flatten into one widened engine pass (query
@@ -201,12 +282,10 @@ class Collection:
         plan = plan_queries(filters, self.schema, B)
         if B == 0:
             return QueryResult.empty(params.k, engine=which)
+        eng = self._engine_for(which)
         if plan.trivial:
-            if which == "in_core":
-                ids, d = self._searcher().search(q, plan.lo, plan.hi, params)
-            else:
-                eng = self._streamer()
-                ids, d = eng.search(q, plan.lo, plan.hi, params)
+            ids, d = eng.search(q, plan.lo, plan.hi, params)
+            if which != "incore":
                 self.last_stats = dict(eng.stats)
             return QueryResult(ids=ids, distances=d, engine=which)
         # box-batched disjunctive pass
@@ -217,13 +296,9 @@ class Collection:
                 distances=np.full((B, params.k), np.inf, np.float32),
                 engine=which)
         qx = q[plan.qmap]
-        if which == "in_core":
-            ids, d = self._searcher().search(qx, plan.lo, plan.hi, params,
-                                             qmap=plan.qmap, n_queries=B)
-        else:
-            eng = self._streamer()
-            ids, d = eng.search(qx, plan.lo, plan.hi, params,
-                                qmap=plan.qmap, n_queries=B)
+        ids, d = eng.search(qx, plan.lo, plan.hi, params,
+                            qmap=plan.qmap, n_queries=B)
+        if which != "incore":
             self.last_stats.update(eng.stats)
         return QueryResult(ids=ids, distances=d, engine=which)
 
@@ -235,7 +310,8 @@ class Collection:
         canonical box, folded with the same segment-aware merge the
         approximate path uses.
         """
-        from repro.core.search import ground_truth, merge_segment_topk
+        from repro.core.runtime import merge_segment_topk
+        from repro.core.search import ground_truth
         q = np.atleast_2d(np.asarray(q, np.float32))
         B = q.shape[0]
         plan = plan_queries(filters, self.schema, B)
@@ -267,7 +343,8 @@ class Collection:
     # -- lifecycle: persist -------------------------------------------------
 
     def save(self, path: str) -> None:
-        """Serialize the built index + schema to one ``.npz`` file."""
+        """Serialize the built index + schema + engine-mode choice to one
+        ``.npz`` file."""
         idx = self.index
         payload = {}
         for name in _INDEX_ARRAYS:
@@ -281,6 +358,8 @@ class Collection:
             "schema": list(self.schema.names),
             "config": dataclasses.asdict(idx.config),
             "n_seg_bounds": len(idx.seg_bounds),
+            "mode": _canon_mode(self.mode),
+            "device_budget_bytes": self.device_budget_bytes,
         }
         payload["meta_json"] = np.frombuffer(
             json.dumps(meta).encode(), dtype=np.uint8)
@@ -288,8 +367,14 @@ class Collection:
 
     @classmethod
     def load(cls, path: str,
-             device_budget_bytes: Optional[int] = None) -> "Collection":
-        """Restore a collection saved by :meth:`save`."""
+             device_budget_bytes: Optional[int] = None,
+             mode: Optional[str] = None) -> "Collection":
+        """Restore a collection saved by :meth:`save`.
+
+        The saved engine mode and device budget are restored so the
+        loaded collection rebuilds the same engine; pass
+        ``device_budget_bytes`` / ``mode`` to override.
+        """
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
             if meta["format_version"] > _FORMAT_VERSION:
@@ -305,5 +390,9 @@ class Collection:
             for name in _INDEX_ARRAYS:
                 fields[name] = z[name] if name in z.files else None
             index = GMGIndex(**fields)
+        if device_budget_bytes is None:
+            device_budget_bytes = meta.get("device_budget_bytes")
+        if mode is None:
+            mode = meta.get("mode", "auto")
         return cls(index=index, schema=AttrSchema(meta["schema"]),
-                   device_budget_bytes=device_budget_bytes)
+                   device_budget_bytes=device_budget_bytes, mode=mode)

@@ -18,8 +18,8 @@ into something the engines can serve in a *single* device pass:
    no per-box Python loop over ``Searcher.search``.
 3. **Merge** per-box top-k candidates back into per-query results with
    the segment-aware, id-deduplicating fold
-   (``repro.core.search.merge_segment_topk``), which both engines apply
-   when handed a ``qmap``.
+   (``repro.core.runtime.merge_segment_topk``), which every engine mode
+   applies when handed a ``qmap``.
 
 Conjunctive filters (including explicit ``(lo, hi)`` arrays and None)
 produce a *trivial* plan — one box per query, identity ``qmap`` — which

@@ -24,10 +24,11 @@ class QueryResult:
 
     ids: np.ndarray          # (B, k) i64 original ids, -1 pad
     distances: np.ndarray    # (B, k) f32 squared L2, +inf pad
-    engine: str = "in_core"  # which execution path served the batch
+    engine: str = "incore"   # engine mode that served the batch
+    # ("incore" | "hybrid" | "ooc" | "mixed")
 
     @classmethod
-    def empty(cls, k: int, engine: str = "in_core") -> "QueryResult":
+    def empty(cls, k: int, engine: str = "incore") -> "QueryResult":
         return cls(ids=np.zeros((0, k), np.int64),
                    distances=np.zeros((0, k), np.float32), engine=engine)
 
@@ -59,7 +60,7 @@ class QueryResult:
         ``Collection.search`` call — the planner runs all branches in
         one box-batched device pass; this is the host-side fallback.
         """
-        from repro.core.search import merge_segment_topk
+        from repro.core.runtime import merge_segment_topk
         if len(self) != len(other):
             raise ValueError(
                 f"cannot merge results over different batches "

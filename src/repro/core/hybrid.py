@@ -1,0 +1,172 @@
+"""Hybrid-cached execution: resident int8 vectors + an LRU graph cache.
+
+The budget regime between the two existing extremes (VecFlow-style,
+PAPERS.md): when the whole fp32 index does not fit but the quantized
+vectors do, keeping the *hot* graph cells device-resident and streaming
+only misses recovers most of the in-core throughput at the out-of-core
+memory footprint. ``Collection`` selects this engine (``mode="hybrid"``)
+when the declared ``device_budget_bytes`` covers the int8 residents plus
+a useful cell cache.
+
+Engine-mode matrix (storage x graph residency x seeding) — this module
+is the **hybrid** row; all three run on the same traversal core via
+``repro.core.runtime.CellRuntime``:
+
+  mode    | vector storage        | graph residency        | seeding
+  --------+-----------------------+------------------------+--------------
+  incore  | fp32 resident         | fully resident         | fresh beam
+  hybrid  | int8 resident +rerank | LRU slot cache         | carried pool
+  ooc     | int8 resident +rerank | streamed batch window  | carried pool
+
+What makes hybrid cheaper than the streaming engine:
+
+  - node ids stay *global*: the traversal finds node u's adjacency row at
+    ``u + cell_base[cell_of[u]]`` inside the fixed cache buffers, so
+    there is no per-batch gather/remap of the partial index (the
+    dominant host cost of the out-of-core path) and carried candidates
+    seed the next wave without any id translation;
+  - the LRU keeps hot cells resident *across query batches*: repeated
+    workloads hit warm slots and transfer nothing, where the streaming
+    engine re-uploads its whole window every call;
+  - per-query visited state is bit-packed over the global id space.
+
+Per query batch:
+  (1) CPU: cell selection -> incidence matrix          (select.py)
+  (2) CPU: greedy wave scheduling, Alg. 5 with the cache capacity as the
+      batch bound                                      (scheduler.py)
+  (3) per wave: make the wave's cells cache-resident (upload misses,
+      evict LRU), run the itinerary traversal over global ids seeded
+      from the carried pool, fold survivors back into the pool
+  (4) CPU: exact fp32 re-rank of each query's pool     (runtime.py)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+
+from repro.core import runtime as rt_mod
+from repro.core import select as select_mod
+from repro.core import scheduler as sched_mod
+from repro.core.runtime import CandidatePool, CellCache, CellRuntime
+from repro.core.types import GMGIndex, SearchParams
+
+
+@dataclasses.dataclass
+class HybridEngine:
+    """Resident int8 vectors + bounded LRU cell cache for the graph."""
+
+    index: GMGIndex
+    cache_budget_bytes: Optional[int] = None   # device bytes for the cache
+    n_slots: Optional[int] = None              # overrides the byte budget
+
+    def __post_init__(self):
+        self.rt = CellRuntime(self.index, storage="int8")
+        self.cache = CellCache(self.index,
+                               budget_bytes=self.cache_budget_bytes,
+                               n_slots=self.n_slots)
+        self.stats: dict = {}
+
+    def resident_bytes(self) -> int:
+        """Device footprint: int8 residents + the graph cache buffers."""
+        idx = self.index
+        resident = idx.vq.nbytes + idx.vscale.nbytes + idx.attrs.nbytes
+        return resident + self.cache.capacity_bytes()
+
+    def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+               params: Optional[SearchParams] = None,
+               qmap: Optional[np.ndarray] = None,
+               n_queries: Optional[int] = None):
+        """Returns (ids (B, k) original ids, dists (B, k) exact fp32).
+
+        With ``qmap`` (row -> original-query segment map from a
+        disjunctive plan), rows are per-box sub-queries; survivors fold
+        back to (n_queries, k) after the exact re-rank.
+        """
+        params = params or SearchParams()
+        idx = self.index
+        cfg = idx.config
+        k, ef = params.k, params.ef or cfg.search_ef
+        B = q.shape[0]
+        if qmap is not None:
+            qmap = rt_mod.check_qmap(qmap, B)
+            if n_queries is None:
+                raise ValueError("n_queries is required with qmap")
+        if B == 0:
+            self.stats = {"n_waves": 0, "cache_hits": 0, "cache_misses": 0,
+                          "transfer_bytes": 0, "n_slots": self.cache.n_slots,
+                          "wall_seconds": 0.0}
+            nq = n_queries if qmap is not None else 0
+            return rt_mod.empty_topk(nq, k)
+        t_start = time.perf_counter()
+        q = np.asarray(q, np.float32)
+        lo = np.asarray(lo, np.float32)
+        hi = np.asarray(hi, np.float32)
+
+        # (1) selection + itinerary ranks (host)
+        inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
+        rank = rt_mod.order_ranks(idx, q, inc)
+
+        # (2) wave scheduling: Alg. 5 bounded by the cache capacity, so
+        # every wave's cells are simultaneously resident
+        waves = sched_mod.schedule_cells(inc, self.cache.n_slots)
+
+        pool = CandidatePool(B, ef)
+        key = jax.random.PRNGKey(params.seed)
+        hits = misses = transfer = 0
+
+        for cells in waves:
+            act = np.nonzero(inc[:, cells].any(axis=1))[0]
+            if len(act) == 0:
+                continue
+            got = self.cache.ensure(cells)
+            hits += got["hits"]
+            misses += got["misses"]
+            transfer += got["bytes"]
+            graph = self.rt.cached_graph(self.cache)
+
+            # per-active-query itinerary over *global* cell ids, fixed
+            # width = cache capacity so every wave is one jitted program;
+            # vectorized: selected cells sort by rank (stable, so rank
+            # ties keep ascending cell order), unselected pad with -1
+            cells_arr = np.asarray(cells, np.int64)
+            sel = inc[np.ix_(act, cells_arr)]            # (n_act, W)
+            key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
+                                np.iinfo(np.int32).max)
+            ordr = np.argsort(key_rank, axis=1, kind="stable")
+            itin = np.full((len(act), self.cache.n_slots), -1, np.int32)
+            itin[:, :len(cells)] = np.where(
+                np.take_along_axis(sel, ordr, axis=1),
+                cells_arr[ordr], -1).astype(np.int32)
+
+            key, sub = jax.random.split(key)
+            # carried pool seeds directly: ids are global, no remap
+            ids, d = self.rt.run(
+                graph, q[act], lo[act], hi[act], sub,
+                k=max(k, min(ef, 2 * k)), ef=ef,
+                cell_order=itin, seeds=pool.ids[act],
+                packed_visited=True, pool_reuse=params.pool_reuse)
+            pool.merge(act, ids, d)
+
+        self.stats = {
+            "n_waves": len(waves),
+            "total_active": sched_mod.total_active(inc, waves),
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "transfer_bytes": transfer,
+            "n_slots": self.cache.n_slots,
+        }
+
+        # (4) CPU exact re-rank of survivors
+        out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                           cfg.rerank_mult)
+        if qmap is not None:
+            self.stats["n_boxes"] = B
+            out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,
+                                                     n_queries, k)
+        self.stats["wall_seconds"] = time.perf_counter() - t_start
+        return out_i, out_d

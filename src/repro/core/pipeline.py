@@ -1,10 +1,21 @@
 """Cell-oriented out-of-core execution (paper Section 5).
 
 Internal layer: the public entry point is ``repro.api.Collection``, which
-selects this streaming engine automatically when the declared
-``device_budget_bytes`` cannot hold the fully-resident in-core searcher
-(the remaining budget becomes the streamed graph window). Instantiate
-``OutOfCoreEngine`` directly only for engine-level ablations.
+selects this streaming engine (``mode="ooc"``) when the declared
+``device_budget_bytes`` cannot hold either the fully-resident in-core
+searcher or a useful hybrid graph cache (the remaining budget becomes the
+streamed graph window). Instantiate ``OutOfCoreEngine`` directly only for
+engine-level ablations.
+
+Engine-mode matrix (storage x graph residency x seeding) — this module
+is the **ooc** row; all three run on the same traversal core via
+``repro.core.runtime.CellRuntime``:
+
+  mode    | vector storage        | graph residency        | seeding
+  --------+-----------------------+------------------------+--------------
+  incore  | fp32 resident         | fully resident         | fresh beam
+  hybrid  | int8 resident +rerank | LRU slot cache         | carried pool
+  ooc     | int8 resident +rerank | streamed batch window  | carried pool
 
 Memory model (paper Fig. 5, adapted to TPU — DESIGN.md §2):
 
@@ -26,10 +37,9 @@ Per query batch:
       and merges into the global per-query pool.
 
 Entry-point propagation across batches follows the paper: each query
-carries its current global candidate pool; when its next cell appears in
-a later batch, the pool's inter-cell edges provide the entries.  Here the
-carried state is the per-query top-ef candidate ids (host-side), re-seeded
-into the device search of the next batch.
+carries its current global candidate pool (``runtime.CandidatePool``);
+when its next cell appears in a later batch, the pool's members are
+remapped into the batch and re-seed the device search.
 """
 
 from __future__ import annotations
@@ -40,11 +50,12 @@ from typing import Optional
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
+from repro.core import runtime as rt_mod
 from repro.core import select as select_mod
 from repro.core import scheduler as sched_mod
-from repro.core.traversal import multi_cell_search_seeded
+from repro.core.runtime import CandidatePool, CellRuntime, round_up
+from repro.core.traversal import GraphView
 from repro.core.types import GMGIndex, SearchParams
 
 
@@ -61,10 +72,6 @@ class BatchPlan:
                                     # order (-1 padded), most-promising first
 
 
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
-
-
 def _remap_plan(index: GMGIndex, cells: list, incidence: np.ndarray,
                 order_rank: np.ndarray, pad_cells: int,
                 row_quantum: int = 4096) -> BatchPlan:
@@ -77,7 +84,7 @@ def _remap_plan(index: GMGIndex, cells: list, incidence: np.ndarray,
     starts = index.cell_start
     sizes = np.diff(starts)
     n_rows = int(sizes[cells].sum())
-    n_pad = _round_up(max(n_rows, 1), row_quantum)
+    n_pad = round_up(max(n_rows, 1), row_quantum)
 
     # global->local row remap over the batch cells
     local_start = np.zeros(pad_cells + 1, np.int64)
@@ -127,11 +134,11 @@ class OutOfCoreEngine:
     hbm_budget_bytes: Optional[int] = None   # overrides config.batch_cells
 
     def __post_init__(self):
-        idx = self.index
-        assert idx.vq is not None, "out-of-core mode needs quantize=True"
-        self.vq = jnp.asarray(idx.vq)               # resident (paper §5.1)
-        self.vscale = jnp.asarray(idx.vscale)
-        self.attrs_dev = jnp.asarray(idx.attrs)     # attrs ride along (f32)
+        self.rt = CellRuntime(self.index, storage="int8")
+        # engine-level views (ablation benches/tests poke these directly)
+        self.vq = self.rt.store.vq                  # resident (paper §5.1)
+        self.vscale = self.rt.store.vscale
+        self.attrs_dev = self.rt.attrs_dev          # attrs ride along (f32)
         self.stats: dict = {}
 
     # -- batch size under an explicit HBM constraint ------------------------
@@ -167,10 +174,7 @@ class OutOfCoreEngine:
         k, ef = params.k, params.ef or cfg.search_ef
         B = q.shape[0]
         if qmap is not None:
-            qmap = np.asarray(qmap, np.int64)
-            if qmap.shape != (B,):
-                raise ValueError(
-                    f"qmap shape {qmap.shape} != batch ({B},)")
+            qmap = rt_mod.check_qmap(qmap, B)
             if n_queries is None:
                 # inferring from qmap.max() would silently drop trailing
                 # queries whose boxes were all pruned by the planner
@@ -180,13 +184,12 @@ class OutOfCoreEngine:
                           "cells_per_batch": self.cells_per_batch(),
                           "transfer_bytes": 0, "wall_seconds": 0.0}
             nq = n_queries if qmap is not None else 0
-            return (np.full((nq, k), -1, np.int64),
-                    np.full((nq, k), np.inf, np.float32))
+            return rt_mod.empty_topk(nq, k)
         t_start = time.perf_counter()
 
         # (1) selection + ordering ranks (host)
         inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
-        rank = self._order_ranks(q, inc)
+        rank = rt_mod.order_ranks(idx, q, inc)
 
         # (2) scheduling (Alg. 5) vs naive (ablation Table 3)
         b = self.cells_per_batch()
@@ -201,11 +204,7 @@ class OutOfCoreEngine:
         }
 
         # carried per-query candidate pool (global internal ids + dists)
-        pool_ids = np.full((B, ef), -1, np.int32)
-        pool_d = np.full((B, ef), np.inf, np.float32)
-
-        qd = jnp.asarray(q)
-        lod, hid = jnp.asarray(lo), jnp.asarray(hi)
+        pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
 
         # (3)+(4) stage the first batch; inside the loop stage batch t+1
@@ -225,75 +224,30 @@ class OutOfCoreEngine:
             if len(plan.active_queries) == 0:
                 continue
             key, sub = jax.random.split(key)
-            got_ids, got_d = self._run_batch(plan, dev, qd, lod, hid,
-                                             pool_ids, pool_d, k, ef, sub)
-            # (7) merge into carried pool (host, cheap). Seeds re-found in
-            # later batches would otherwise duplicate and crowd the pool.
-            act = plan.active_queries
-            merged_ids = np.concatenate([pool_ids[act], got_ids], axis=1)
-            merged_d = np.concatenate([pool_d[act], got_d], axis=1)
-            for r, qid in enumerate(act):
-                ordr = np.argsort(merged_d[r], kind="stable")
-                seen, mi, md = set(), [], []
-                for j in ordr:
-                    i = int(merged_ids[r, j])
-                    if i < 0 or i in seen:
-                        continue
-                    seen.add(i)
-                    mi.append(i)
-                    md.append(merged_d[r, j])
-                    if len(mi) == ef:
-                        break
-                pool_ids[qid, :len(mi)] = mi
-                pool_ids[qid, len(mi):] = -1
-                pool_d[qid, :len(md)] = md
-                pool_d[qid, len(md):] = np.inf
+            got_ids, got_d = self._run_batch(plan, dev, q, lo, hi,
+                                             pool, k, ef, sub, params)
+            # (7) merge into carried pool (host, deterministic fold).
+            # Seeds re-found in later batches would otherwise duplicate
+            # and crowd the pool.
+            pool.merge(plan.active_queries, got_ids, got_d)
 
         self.stats["transfer_bytes"] = transfer_bytes
 
         # CPU exact re-rank of survivors (paper step 7)
-        out_i = np.full((B, k), -1, np.int64)
-        out_d = np.full((B, k), np.inf, np.float32)
-        rerank_n = min(ef, max(k * cfg.rerank_mult, k))
-        for bqi in range(B):
-            cand = pool_ids[bqi][pool_ids[bqi] >= 0][:rerank_n]
-            if len(cand) == 0:
-                continue
-            vecs = idx.vectors[cand]
-            d_exact = ((vecs - q[bqi]) ** 2).sum(axis=1)
-            ok = ((idx.attrs[cand] >= lo[bqi]) &
-                  (idx.attrs[cand] <= hi[bqi])).all(axis=1)
-            d_exact = np.where(ok, d_exact, np.inf)
-            ordr = np.argsort(d_exact)[:k]
-            keep = d_exact[ordr] < np.inf
-            ids = np.where(keep, idx.perm[cand[ordr]], -1)
-            out_i[bqi, :len(ids)] = ids
-            out_d[bqi, :len(ids)] = np.where(keep, d_exact[ordr], np.inf)
+        out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                           cfg.rerank_mult)
         if qmap is not None:
-            from repro.core.search import merge_segment_topk
             self.stats["n_boxes"] = B
-            out_i, out_d = merge_segment_topk(out_i, out_d, qmap,
-                                              n_queries, k)
+            out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,
+                                                     n_queries, k)
         self.stats["wall_seconds"] = time.perf_counter() - t_start
         return out_i, out_d
 
     # -- helpers -------------------------------------------------------------
 
     def _order_ranks(self, q: np.ndarray, inc: np.ndarray) -> np.ndarray:
-        """(B, S) traversal rank per (query, cell) from the cluster vote
-        (lower = search earlier; untouched cells get a large rank)."""
-        from repro.core.ordering import order_cells
-        idx = self.index
-        S = idx.n_cells
-        order, _ = order_cells(
-            jnp.asarray(q), jnp.asarray(idx.centroids), jnp.asarray(idx.hist),
-            jnp.asarray(inc), top_m=idx.config.top_m_clusters, T=S)
-        order = np.asarray(order)
-        rank = np.full((q.shape[0], S), S + 1, np.int32)
-        for bqi in range(q.shape[0]):
-            sel = order[bqi][order[bqi] >= 0]
-            rank[bqi, sel] = np.arange(len(sel))
-        return rank
+        """Back-compat shim for engine-level tests; see runtime."""
+        return rt_mod.order_ranks(self.index, q, inc)
 
     def _stage(self, plan: BatchPlan):
         """Async H2D staging of one batch's partial index."""
@@ -304,24 +258,18 @@ class OutOfCoreEngine:
             "rows": jax.device_put(plan.rows.astype(np.int32)),
         }
 
-    def _run_batch(self, plan: BatchPlan, dev, qd, lod, hid,
-                   pool_ids, pool_d, k: int, ef: int, key):
+    def _run_batch(self, plan: BatchPlan, dev, q, lo, hi,
+                   pool: CandidatePool, k: int, ef: int, key,
+                   params: SearchParams):
         """Device traversal of one batch (step 5-6). Returns candidate
         (global ids, int8 distances) for the active queries."""
         idx = self.index
-        cfg = idx.config
         act = plan.active_queries
-        nB = len(act)
-        # pad active set to pow2 to keep jit cache warm
-        padded = 1
-        while padded < nB:
-            padded *= 2
-        sel = np.concatenate([act, np.repeat(act[:1], padded - nB)])
 
         # seed entries: carried pool's inter edges into batch cells happen
         # via inter_adj remap below; plus the pool's own members that live
         # inside this batch (remapped), plus randoms added device-side.
-        seed_global = pool_ids[sel]                       # (padded, ef)
+        seed_global = pool.ids[act]                       # (n_act, ef)
         cell = idx.cell_of[np.maximum(seed_global, 0)]
         # local offset per cell (recompute, small); deltas may be negative
         offset = np.zeros(idx.n_cells, np.int64)
@@ -332,21 +280,13 @@ class OutOfCoreEngine:
         seed_local = np.where((seed_global >= 0) & in_batch[cell],
                               seed_global + offset[cell], -1).astype(np.int32)
 
-        itin = plan.itinerary[
-            np.concatenate([np.arange(nB),
-                            np.zeros(padded - nB, np.int64)])]
-
-        ids_l, d_l = multi_cell_search_seeded(
-            self.vq, self.vscale, self.attrs_dev,
-            dev["intra"], dev["inter"], dev["local_start"], dev["rows"],
-            qd[sel], lod[sel], hid[sel], jnp.asarray(itin),
-            jnp.asarray(seed_local), key,
+        graph = GraphView(intra=dev["intra"], inter=dev["inter"],
+                          cell_start=dev["local_start"], rows=dev["rows"])
+        ids_l, d_l = self.rt.run(
+            graph, q[act], lo[act], hi[act], key,
             k=max(k, min(ef, 2 * k)), ef=ef,
-            entry_width=cfg.entry_width, entry_random=cfg.entry_random,
-            entry_beam_l=cfg.entry_beam_l,
-            max_iters=cfg.max_iters_per_cell)
-        ids_l = np.asarray(ids_l[:nB])
-        d_l = np.asarray(d_l[:nB])
+            cell_order=plan.itinerary, seeds=seed_local,
+            pool_reuse=params.pool_reuse)
         ids_g = np.where(ids_l >= 0, plan.rows[np.maximum(ids_l, 0)], -1)
         return ids_g.astype(np.int32), d_l
 

@@ -1,0 +1,445 @@
+"""Shared cell-runtime layer beneath every engine mode (ISSUE 3 tentpole).
+
+Both engines used to reimplement half of the paper's cell-by-cell
+execution model; this module owns the common machinery so
+``core/search.py`` (in-core), ``core/hybrid.py`` (hybrid-cached) and
+``core/pipeline.py`` (out-of-core) shrink to thin orchestrators:
+
+  host side    — pow2/quantum padding (:func:`pad_pow2`, :func:`round_up`),
+                 qmap segment handling (:func:`check_qmap`,
+                 :func:`merge_segment_topk`), the carried per-query
+                 candidate pool (:class:`CandidatePool`), itinerary ranks
+                 (:func:`order_ranks`) and the exact fp32 re-rank
+                 (:func:`exact_rerank`).
+  device side  — vector/graph residency (:class:`CellRuntime` builds the
+                 :class:`~repro.core.traversal.VectorStore` /
+                 :class:`~repro.core.traversal.GraphView` pytrees and
+                 invokes the one jitted traversal core with stable
+                 pow2-padded shapes), plus the bounded LRU graph-cell
+                 cache (:class:`CellCache`) that gives the hybrid mode
+                 its middle memory tier.
+
+Engine-mode matrix (storage x graph residency x seeding):
+
+  mode    | vector storage        | graph residency        | seeding
+  --------+-----------------------+------------------------+--------------
+  incore  | fp32 resident         | fully resident         | fresh beam
+  hybrid  | int8 resident +rerank | LRU slot cache         | carried pool
+  ooc     | int8 resident +rerank | streamed batch window  | carried pool
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.traversal import (
+    UNCACHED, GraphView, VectorStore, traversal_core)
+from repro.core.types import GMGIndex
+
+
+# -- host-side padding helpers (deduplicated from search.py / pipeline.py) --
+
+def pad_pow2(x: np.ndarray, axis: int = 0):
+    """Pad axis 0 to the next power of two by repeating row 0 (keeps the
+    jitted program cache warm across ragged sub-batches).
+    Returns (padded, original_size)."""
+    n = x.shape[axis]
+    if n == 0:
+        raise ValueError(
+            "cannot pad an empty batch (callers must early-return on B=0)")
+    p = 1
+    while p < n:
+        p *= 2
+    if p == n:
+        return x, n
+    reps = np.repeat(x[:1], p - n, axis=0)
+    return np.concatenate([x, reps], axis=0), n
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= x (row-quantum padding)."""
+    return ((x + mult - 1) // mult) * mult
+
+
+# -- qmap segment handling (disjunctive box-batching) ------------------------
+
+def check_qmap(qmap, B: int) -> np.ndarray:
+    """Validate a planner row -> original-query segment map."""
+    qmap = np.asarray(qmap, np.int64)
+    if qmap.shape != (B,):
+        raise ValueError(f"qmap shape {qmap.shape} != batch ({B},)")
+    return qmap
+
+
+def empty_topk(n_queries: int, k: int):
+    """Fully-padded (ids, dists) result block."""
+    return (np.full((n_queries, k), -1, np.int64),
+            np.full((n_queries, k), np.inf, np.float32))
+
+
+def merge_segment_topk(ids: np.ndarray, dists: np.ndarray,
+                       qmap: np.ndarray, n_queries: int, k: int):
+    """Fold per-box candidate rows back into per-query top-k.
+
+    ``ids`` (T, kk) with -1 pads and ``dists`` (T, kk) with +inf pads are
+    per-box results; ``qmap`` (T,) maps each row to its original query.
+    Returns ((n_queries, k) i64 ids, (n_queries, k) f32 dists).
+
+    Deterministic by construction: duplicate ids within a query (a point
+    matching several boxes) collapse to their best distance, candidates
+    order by (distance, id) so distance ties break toward the smaller
+    id, and queries with no boxes/candidates come back fully padded.
+    """
+    ids = np.asarray(ids)
+    dists = np.asarray(dists)
+    out_i, out_d = empty_topk(n_queries, k)
+    if ids.size == 0:
+        return out_i, out_d
+    T, kk = ids.shape
+    fq = np.repeat(np.asarray(qmap, np.int64), kk)
+    fi = ids.ravel().astype(np.int64)
+    fd = dists.ravel().astype(np.float32)
+    valid = fi >= 0
+    fi, fd, fq = fi[valid], fd[valid], fq[valid]
+    if fi.size == 0:
+        return out_i, out_d
+    # dedup: sort by (query, id, dist), keep each (query, id)'s best dist
+    o = np.lexsort((fd, fi, fq))
+    fi, fd, fq = fi[o], fd[o], fq[o]
+    first = np.ones(fi.shape[0], bool)
+    first[1:] = (fq[1:] != fq[:-1]) | (fi[1:] != fi[:-1])
+    fi, fd, fq = fi[first], fd[first], fq[first]
+    # rank survivors by (query, dist, id) and take each query's first k
+    o = np.lexsort((fi, fd, fq))
+    fi, fd, fq = fi[o], fd[o], fq[o]
+    starts = np.searchsorted(fq, np.arange(n_queries))
+    rank = np.arange(fq.shape[0]) - starts[fq]
+    keep = rank < k
+    out_i[fq[keep], rank[keep]] = fi[keep]
+    out_d[fq[keep], rank[keep]] = fd[keep]
+    return out_i, out_d
+
+
+# -- carried per-query candidate pool (paper §5.1 entry propagation) ---------
+
+class CandidatePool:
+    """Per-query top-``ef`` candidate carry across cell batches/waves.
+
+    Holds view-global internal ids + (approximate) distances; batches
+    re-seed their beam from it and fold their survivors back in. The
+    merge is the same deterministic (distance, id) fold the disjunctive
+    planner uses, so pool contents are reproducible across runs.
+    """
+
+    def __init__(self, n_queries: int, ef: int):
+        self.ids = np.full((n_queries, ef), -1, np.int32)
+        self.d = np.full((n_queries, ef), np.inf, np.float32)
+        self.ef = ef
+
+    def merge(self, rows: np.ndarray, got_ids: np.ndarray,
+              got_d: np.ndarray) -> None:
+        """Fold (len(rows), kk) new candidates into the carried pool."""
+        if len(rows) == 0:
+            return
+        ids = np.concatenate([self.ids[rows], got_ids], axis=1)
+        d = np.concatenate([self.d[rows], got_d], axis=1)
+        qm = np.arange(len(rows), dtype=np.int64)
+        mi, md = merge_segment_topk(ids, d, qm, len(rows), self.ef)
+        self.ids[rows] = mi.astype(np.int32)
+        self.d[rows] = md
+
+
+# -- itinerary ranks (shared by the streaming/hybrid schedulers) -------------
+
+def order_ranks(index: GMGIndex, q: np.ndarray,
+                inc: np.ndarray) -> np.ndarray:
+    """(B, S) traversal rank per (query, cell) from the cluster vote
+    (lower = search earlier; untouched cells get a large rank)."""
+    from repro.core.ordering import order_cells
+    S = index.n_cells
+    order, _ = order_cells(
+        jnp.asarray(q), jnp.asarray(index.centroids),
+        jnp.asarray(index.hist), jnp.asarray(inc),
+        top_m=index.config.top_m_clusters, T=S)
+    order = np.asarray(order)
+    rank = np.full((q.shape[0], S), S + 1, np.int32)
+    for bqi in range(q.shape[0]):
+        sel = order[bqi][order[bqi] >= 0]
+        rank[bqi, sel] = np.arange(len(sel))
+    return rank
+
+
+# -- exact fp32 re-rank of pool survivors (paper §5.1 step 7) ----------------
+
+def exact_rerank(index: GMGIndex, pool: CandidatePool, q: np.ndarray,
+                 lo: np.ndarray, hi: np.ndarray, k: int,
+                 rerank_mult: int):
+    """Host-side exact re-rank of each query's carried candidates.
+    Returns ((B, k) i64 *original* ids, (B, k) f32 exact distances)."""
+    B = q.shape[0]
+    out_i, out_d = empty_topk(B, k)
+    rerank_n = min(pool.ef, max(k * rerank_mult, k))
+    for bqi in range(B):
+        cand = pool.ids[bqi][pool.ids[bqi] >= 0][:rerank_n]
+        if len(cand) == 0:
+            continue
+        vecs = index.vectors[cand]
+        d_exact = ((vecs - q[bqi]) ** 2).sum(axis=1)
+        ok = ((index.attrs[cand] >= lo[bqi]) &
+              (index.attrs[cand] <= hi[bqi])).all(axis=1)
+        d_exact = np.where(ok, d_exact, np.inf)
+        ordr = np.argsort(d_exact)[:k]
+        keep = d_exact[ordr] < np.inf
+        ids = np.where(keep, index.perm[cand[ordr]], -1)
+        out_i[bqi, :len(ids)] = ids
+        out_d[bqi, :len(ids)] = np.where(keep, d_exact[ordr], np.inf)
+    return out_i, out_d
+
+
+# -- the bounded LRU graph-cell cache (hybrid middle tier) -------------------
+
+# donate the buffer: the caller always rebinds to the result, so the
+# update happens in place on accelerators instead of copying the cache
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot(buf, block, start):
+    return jax.lax.dynamic_update_slice(
+        buf, block, (start,) + (0,) * (buf.ndim - 1))
+
+
+def cache_slot_rows(index: GMGIndex) -> int:
+    """Rows per cache slot: the largest cell, rounded up (quantile
+    partitioning keeps cells near-equal sized, so waste is small)."""
+    sizes = np.diff(index.cell_start)
+    return round_up(max(int(sizes.max()), 1), 8)
+
+
+def cache_slot_bytes(index: GMGIndex) -> int:
+    """Device bytes one cache slot costs (intra + inter adjacency rows);
+    used by the engine dispatcher to size/viability-check a hybrid cache
+    without building one."""
+    deg = index.intra_adj.shape[1]
+    S, l = index.inter_adj.shape[1], index.inter_adj.shape[2]
+    return cache_slot_rows(index) * (deg + S * l) * 4
+
+
+def plan_cache_slots(index: GMGIndex, budget_bytes: int | None) -> int:
+    """Slots a :class:`CellCache` allocates under ``budget_bytes``
+    (None = one per cell). The single sizing rule shared by the cache
+    constructor and ``Collection.plan``'s allocation-free introspection."""
+    S = index.n_cells
+    if budget_bytes is None:
+        return S
+    return max(1, min(int(budget_bytes // cache_slot_bytes(index)), S))
+
+
+class CellCache:
+    """Device-resident LRU cache of graph cells in fixed-size slots.
+
+    The grid partitions on attribute quantiles, so cells are near-equal
+    sized; one slot = ``slot_rows`` adjacency rows (the largest cell,
+    rounded up), which keeps every upload the same shape — one jitted
+    ``dynamic_update_slice`` program serves all slots.
+
+    Node ids stay *global*: a traversal finds node u's adjacency row at
+    ``u + cell_base[cell_of[u]]`` inside the cache buffers (see
+    ``GraphView``), so no per-batch remap work and no id translation of
+    carried candidates — the whole point of the hybrid tier.
+    """
+
+    def __init__(self, index: GMGIndex, budget_bytes: int | None = None,
+                 n_slots: int | None = None):
+        self.index = index
+        self.slot_rows = cache_slot_rows(index)
+        deg = index.intra_adj.shape[1]
+        S, l = index.inter_adj.shape[1], index.inter_adj.shape[2]
+        self.bytes_per_slot = cache_slot_bytes(index)
+        if n_slots is None:
+            self.n_slots = plan_cache_slots(index, budget_bytes)
+        else:
+            self.n_slots = max(1, min(int(n_slots), S))
+        cap = self.n_slots * self.slot_rows
+        self.intra_buf = jnp.full((cap, deg), -1, jnp.int32)
+        self.inter_buf = jnp.full((cap, S, l), -1, jnp.int32)
+        self._lru: "collections.OrderedDict[int, int]" = \
+            collections.OrderedDict()           # cell -> slot
+        self._free = list(range(self.n_slots))
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_uploaded = 0
+
+    def capacity_bytes(self) -> int:
+        return self.n_slots * self.bytes_per_slot
+
+    def ensure(self, cells) -> dict:
+        """Make every cell in ``cells`` resident (len <= n_slots),
+        evicting least-recently-used cells outside the request. Returns
+        per-call stats."""
+        cells = list(cells)
+        if len(cells) > self.n_slots:
+            raise ValueError(
+                f"wave of {len(cells)} cells exceeds cache capacity "
+                f"{self.n_slots}")
+        want = set(cells)
+        hits = misses = 0
+        for c in cells:
+            if c in self._lru:
+                self._lru.move_to_end(c)
+                hits += 1
+                continue
+            misses += 1
+            if not self._free:
+                # evict the LRU cell not needed by this wave
+                victim = next(cc for cc in self._lru if cc not in want)
+                self._free.append(self._lru.pop(victim))
+                self.evictions += 1
+            slot = self._free.pop()
+            self._upload(c, slot)
+            self._lru[c] = slot
+            self._lru.move_to_end(c)
+        self.hits += hits
+        self.misses += misses
+        return {"hits": hits, "misses": misses,
+                "bytes": misses * self.bytes_per_slot}
+
+    def _upload(self, c: int, slot: int) -> None:
+        idx = self.index
+        s, e = int(idx.cell_start[c]), int(idx.cell_start[c + 1])
+        deg = idx.intra_adj.shape[1]
+        S, l = idx.inter_adj.shape[1], idx.inter_adj.shape[2]
+        bi = np.full((self.slot_rows, deg), -1, np.int32)
+        bx = np.full((self.slot_rows, S, l), -1, np.int32)
+        bi[:e - s] = idx.intra_adj[s:e]
+        bx[:e - s] = idx.inter_adj[s:e]
+        start = jnp.int32(slot * self.slot_rows)
+        self.intra_buf = _write_slot(self.intra_buf, jnp.asarray(bi), start)
+        self.inter_buf = _write_slot(self.inter_buf, jnp.asarray(bx), start)
+        self.bytes_uploaded += bi.nbytes + bx.nbytes
+
+    def cell_base(self) -> np.ndarray:
+        """(S,) i32: slot base minus cell_start (UNCACHED when absent)."""
+        base = np.full(self.index.n_cells, UNCACHED, np.int32)
+        for c, slot in self._lru.items():
+            base[c] = slot * self.slot_rows - int(self.index.cell_start[c])
+        return base
+
+
+# -- the runtime: residency + one padded invocation path ---------------------
+
+class CellRuntime:
+    """Device residency + the shared traversal-invocation path.
+
+    One instance per engine; ``storage`` picks the resident distance
+    table ("f32" for in-core, "int8" for hybrid/out-of-core). Engines
+    build a :class:`GraphView` for whatever graph residency they use and
+    call :meth:`run`, which pow2-pads the query sub-batch (warm jit
+    caches across ragged adaptive splits) and unpads the result.
+    """
+
+    def __init__(self, index: GMGIndex, storage: str = "f32"):
+        if storage not in ("f32", "int8"):
+            raise ValueError(f"unknown storage {storage!r}")
+        if storage == "int8" and index.vq is None:
+            raise ValueError(
+                "int8 storage needs a quantized copy; rebuild with "
+                "config.quantize=True")
+        self.index = index
+        self.storage = storage
+        self.attrs_dev = jnp.asarray(index.attrs)
+        if storage == "f32":
+            self.store = VectorStore(
+                vectors=jnp.asarray(index.vectors), vq=None, vscale=None,
+                attrs=self.attrs_dev)
+        else:
+            self.store = VectorStore(
+                vectors=None, vq=jnp.asarray(index.vq),
+                vscale=jnp.asarray(index.vscale), attrs=self.attrs_dev)
+        self.cell_start_dev = jnp.asarray(index.cell_start)
+        self.cell_of_dev = jnp.asarray(index.cell_of.astype(np.int32))
+        self._resident_graph = None
+        self._global_graph = None
+
+    # -- graph views ---------------------------------------------------------
+
+    def resident_graph(self) -> GraphView:
+        """Fully device-resident per-cell graph (in-core itinerary)."""
+        if self._resident_graph is None:
+            idx = self.index
+            self._resident_graph = GraphView(
+                intra=jnp.asarray(idx.intra_adj),
+                inter=jnp.asarray(idx.inter_adj),
+                cell_start=self.cell_start_dev)
+        return self._resident_graph
+
+    def global_graph(self) -> GraphView:
+        """Concatenated intra ++ inter adjacency (adaptive global path)."""
+        if self._global_graph is None:
+            from repro.core import gmg as gmg_mod
+            self._global_graph = GraphView(
+                intra=jnp.asarray(gmg_mod.global_adjacency(self.index)),
+                inter=None, cell_start=None)
+        return self._global_graph
+
+    def cached_graph(self, cache: CellCache) -> GraphView:
+        """Hybrid slot-cache view over global ids (see CellCache)."""
+        return GraphView(
+            intra=cache.intra_buf, inter=cache.inter_buf,
+            cell_start=self.cell_start_dev, cell_of=self.cell_of_dev,
+            cell_base=jnp.asarray(cache.cell_base()))
+
+    # -- the one invocation path --------------------------------------------
+
+    def run(self, graph: GraphView, q: np.ndarray, lo: np.ndarray,
+            hi: np.ndarray, key, *, k: int, ef: int,
+            cell_order: np.ndarray | None = None,
+            seeds: np.ndarray | None = None,
+            use_inter: bool = True, packed_visited: bool = False,
+            pool_reuse: bool = False,
+            entry_width: int | None = None,
+            entry_random: int | None = None,
+            entry_beam_l: int | None = None,
+            max_iters: int | None = None):
+        """Pad, traverse, unpad. Returns ((B, k) i32 view-local ids,
+        (B, k) f32 distances) as numpy."""
+        cfg = self.index.config
+        entry_width = cfg.entry_width if entry_width is None else entry_width
+        entry_random = (cfg.entry_random if entry_random is None
+                        else entry_random)
+        entry_beam_l = (cfg.entry_beam_l if entry_beam_l is None
+                        else entry_beam_l)
+        max_iters = (cfg.max_iters_per_cell if max_iters is None
+                     else max_iters)
+        qp, real = pad_pow2(np.asarray(q, np.float32))
+        lop, _ = pad_pow2(np.asarray(lo, np.float32))
+        hip, _ = pad_pow2(np.asarray(hi, np.float32))
+        order_d = None
+        if cell_order is not None:
+            if isinstance(cell_order, jax.Array):
+                # already on device (e.g. straight from order_cells):
+                # use as-is instead of a sync + D2H/H2D round-trip; the
+                # caller must have computed it on the padded batch
+                if cell_order.shape[0] != qp.shape[0]:
+                    raise ValueError(
+                        f"device cell_order batch {cell_order.shape[0]} "
+                        f"!= padded query batch {qp.shape[0]}")
+                order_d = cell_order
+            else:
+                op, _ = pad_pow2(np.asarray(cell_order, np.int32))
+                order_d = jnp.asarray(op)
+        seeds_d = None
+        if seeds is not None:
+            sp, _ = pad_pow2(np.asarray(seeds, np.int32))
+            seeds_d = jnp.asarray(sp)
+        ids, d = traversal_core(
+            self.store, graph, jnp.asarray(qp), jnp.asarray(lop),
+            jnp.asarray(hip), order_d, seeds_d, key,
+            k=k, ef=ef, entry_width=entry_width, entry_random=entry_random,
+            entry_beam_l=entry_beam_l, max_iters=max_iters,
+            use_inter=use_inter, packed_visited=packed_visited,
+            pool_reuse=pool_reuse)
+        return np.asarray(ids[:real]), np.asarray(d[:real])

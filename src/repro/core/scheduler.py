@@ -3,7 +3,13 @@
 Host-side greedy: place each cell into the batch (capacity b) whose active
 query count grows least — minimizing sum_k Active(B_k), the number of live
 per-query traversal states the accelerator must keep resident per batch.
-Ties break toward the currently-least-active batch, exactly as Alg. 5.
+
+Deterministic by construction: cells are visited in ascending id order
+and each placement minimizes the explicit lexicographic key
+``(added_active, current_active, batch_index)`` — equal-gain ties break
+toward the currently-least-active batch (exactly as Alg. 5) and then
+toward the lowest batch index, so identical incidence always yields an
+identical batch plan (reproducible streamed/hybrid executions).
 """
 
 from __future__ import annotations
@@ -28,7 +34,7 @@ def schedule_cells(incidence: np.ndarray, batch_size: int,
     m, n = incidence.shape
     if cells is None:
         cells = [c for c in range(n) if incidence[:, c].any()]
-    cells = list(cells)
+    cells = sorted(int(c) for c in cells)      # deterministic visit order
     n_batches = max(1, -(-len(cells) // batch_size))
     batches: list[list[int]] = [[] for _ in range(n_batches)]
     # incremental active masks per batch: queries already active
@@ -37,14 +43,16 @@ def schedule_cells(incidence: np.ndarray, batch_size: int,
 
     for c in cells:
         col = incidence[:, c]
-        best_k, best_inc = -1, None
+        # stable placement: lexicographic (added_active, current_active,
+        # batch_index) — ties under equal gain always resolve the same way
+        best_k, best_key = -1, None
         for k in range(n_batches):
             if len(batches[k]) >= batch_size:
                 continue
             inc = int((col & ~active_mask[k]).sum())
-            if (best_inc is None or inc < best_inc or
-                    (inc == best_inc and active_cnt[k] < active_cnt[best_k])):
-                best_k, best_inc = k, inc
+            cand = (inc, active_cnt[k], k)
+            if best_key is None or cand < best_key:
+                best_k, best_key = k, cand
         batches[best_k].append(c)
         active_mask[best_k] |= col
         active_cnt[best_k] = int(active_mask[best_k].sum())

@@ -3,24 +3,36 @@
 Internal layer: the public entry point is ``repro.api.Collection``, which
 owns the index lifecycle (build/search/save/load), compiles named-attribute
 filter expressions down to the dense ``(lo, hi)`` arrays consumed here,
-and dispatches between this in-core engine and the out-of-core pipeline
-from a declared device-memory budget. Use ``Searcher`` directly only for
-engine-level ablations.
+and dispatches between the engine modes (in-core / hybrid-cached /
+out-of-core) from a declared device-memory budget. Use ``Searcher``
+directly only for engine-level ablations.
 
-``Searcher`` owns the device-resident copies of a built GMG index and runs
-the three-stage pipeline per query batch:
+Engine-mode matrix (storage x graph residency x seeding) — this module
+is the **incore** row; all three run on the same traversal core via
+``repro.core.runtime.CellRuntime``:
+
+  mode    | vector storage        | graph residency        | seeding
+  --------+-----------------------+------------------------+--------------
+  incore  | fp32 resident         | fully resident         | fresh beam
+  hybrid  | int8 resident +rerank | LRU slot cache         | carried pool
+  ooc     | int8 resident +rerank | streamed batch window  | carried pool
+
+``Searcher`` is a thin orchestrator over the runtime: it owns the
+adaptive three-way split per query batch —
 
   1. cell selection   — vectorized box intersection (select.py)
   2. cell ordering    — cluster-histogram cardinality vote (ordering.py)
-  3. cell traversal   — sequential search-jump-search (traversal.py)
+  3. cell traversal   — sequential search-jump-search (traversal core)
 
 plus the adaptive global path (Alg. 2 lines 5-8) for lanes whose selected
-cell count exceeds S_thre: those queries skip the itinerary and run one
-greedy traversal over the global graph (intra ++ inter edges), with the
-predicate enforced on the result pool. The split is decided host-side and
-the two sub-batches run as separate fixed-shape programs (pow2-padded so
-jit caches stay warm) — the TPU analogue of the paper's divergence-free
-dispatch.
+cell count exceeds S_thre and the exact dense-scan path for tiny
+candidate sets. The split is decided host-side and the sub-batches run
+as separate fixed-shape programs (pow2-padded by the runtime so jit
+caches stay warm) — the TPU analogue of the paper's divergence-free
+dispatch. Cross-cell candidate reuse (``SearchParams.pool_reuse``) lets
+the in-range result pool propose inter-cell entries on every itinerary
+hop, the same candidate recycling the streaming modes get from their
+carried pool.
 """
 
 from __future__ import annotations
@@ -33,57 +45,52 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import gmg as gmg_mod
+from repro.core import runtime as rt_mod
 from repro.core import select as select_mod
 from repro.core.ordering import order_cells
-from repro.core.traversal import global_search, multi_cell_search
+from repro.core.runtime import merge_segment_topk  # noqa: F401  (re-export)
+from repro.core.runtime import CellRuntime, pad_pow2
 from repro.core.types import GMGIndex, SearchParams
 
-
-def _pad_pow2(x: np.ndarray, axis: int = 0):
-    """Pad axis 0 to the next power of two by repeating row 0."""
-    n = x.shape[axis]
-    if n == 0:
-        raise ValueError(
-            "cannot pad an empty batch (callers must early-return on B=0)")
-    p = 1
-    while p < n:
-        p *= 2
-    if p == n:
-        return x, n
-    reps = np.repeat(x[:1], p - n, axis=0)
-    return np.concatenate([x, reps], axis=0), n
+# back-compat alias: callers historically imported the padding helper here
+_pad_pow2 = pad_pow2
 
 
 @dataclasses.dataclass
 class Searcher:
-    """Device-resident search context for one built index."""
+    """Device-resident in-core search context for one built index."""
 
     index: GMGIndex
 
     def __post_init__(self):
         idx = self.index
-        self.vectors = jnp.asarray(idx.vectors)
-        self.attrs = jnp.asarray(idx.attrs)
-        self.intra = jnp.asarray(idx.intra_adj)
-        self.inter = jnp.asarray(idx.inter_adj)
-        self.cell_start = jnp.asarray(idx.cell_start)
+        self.rt = CellRuntime(idx, storage="f32")
+        # engine-level views (ablation benches poke these directly)
+        self.vectors = self.rt.store.vectors
+        self.attrs = self.rt.store.attrs
+        self.cell_start = self.rt.cell_start_dev
         self.cell_lo = jnp.asarray(idx.cell_lo)
         self.cell_hi = jnp.asarray(idx.cell_hi)
         self.centroids = jnp.asarray(idx.centroids)
         self.hist = jnp.asarray(idx.hist)
-        self.global_adj = jnp.asarray(gmg_mod.global_adjacency(idx))
 
     # -- device half: one fixed-shape program per (B, knobs) ---------------
 
     def _traverse(self, q, lo, hi, params: SearchParams, key):
+        """Itinerary path over the fully-resident graph. Takes numpy
+        sub-batch arrays; pow2-pads once so selection, ordering and the
+        traversal core all see the same stable shape."""
         cfg = self.index.config
         ef = params.ef or cfg.search_ef
-        mask = select_mod.select_cells(lo, hi, self.cell_lo, self.cell_hi)
+        qp, real = pad_pow2(np.asarray(q, np.float32))
+        lop, _ = pad_pow2(np.asarray(lo, np.float32))
+        hip, _ = pad_pow2(np.asarray(hi, np.float32))
+        qd, lod, hid = jnp.asarray(qp), jnp.asarray(lop), jnp.asarray(hip)
+        mask = select_mod.select_cells(lod, hid, self.cell_lo, self.cell_hi)
         T = self.index.n_cells if params.max_cells is None \
             else min(params.max_cells, self.index.n_cells)
         if params.use_ordering:
-            order, _ = order_cells(q, self.centroids, self.hist, mask,
+            order, _ = order_cells(qd, self.centroids, self.hist, mask,
                                    top_m=cfg.top_m_clusters, T=T)
         else:  # ablation Fig 13(b): grid order
             S = mask.shape[1]
@@ -92,20 +99,22 @@ class Searcher:
             srt = jnp.where(mask, ids, S + 1)
             order = jnp.sort(srt, axis=1)[:, :T].astype(jnp.int32)
             order = jnp.where(order <= S - 1, order, -1)
-        return multi_cell_search(
-            self.vectors, self.attrs, self.intra, self.inter,
-            self.cell_start, q, lo, hi, order, key,
-            k=params.k, ef=ef, entry_width=cfg.entry_width,
-            entry_random=cfg.entry_random, entry_beam_l=cfg.entry_beam_l,
-            max_iters=cfg.max_iters_per_cell,
-            use_inter=params.use_inter_edges)
+        ids, d = self.rt.run(
+            self.rt.resident_graph(), qp, lop, hip, key,
+            k=params.k, ef=ef, cell_order=order,
+            use_inter=params.use_inter_edges,
+            pool_reuse=params.pool_reuse)
+        return ids[:real], d[:real]
 
     def _global(self, q, lo, hi, params: SearchParams, key):
+        """Adaptive high-selectivity path: one greedy traversal over the
+        whole graph, predicate enforced on the result pool only."""
         cfg = self.index.config
         ef = params.ef or cfg.search_ef
-        return global_search(
-            self.vectors, self.attrs, self.global_adj, q, lo, hi, key,
-            k=params.k, ef=ef, entry_width=cfg.entry_width,
+        return self.rt.run(
+            self.rt.global_graph(), q, lo, hi, key,
+            k=params.k, ef=ef, cell_order=None, seeds=None,
+            entry_random=0, entry_beam_l=0,
             max_iters=cfg.max_iters_per_cell * 4)
 
     def _dense_scan(self, q, lo, hi, inc, k: int):
@@ -114,7 +123,6 @@ class Searcher:
         the cell's contiguous rows with the predicate folded in as +inf
         bias; winners merge on the host. Exact within the selected cells.
         Returns (ids (B, k) internal, d (B, k))."""
-        import jax.numpy as jnp
         from repro.kernels import ops
         B = q.shape[0]
         out_i = np.full((B, k), -1, np.int32)
@@ -139,9 +147,9 @@ class Searcher:
             s, e = int(starts[c]), int(starts[c + 1])
             if e <= s:
                 continue
-            qs, real = _pad_pow2(q[rows])
-            los, _ = _pad_pow2(lo[rows])
-            his, _ = _pad_pow2(hi[rows])
+            qs, real = pad_pow2(q[rows])
+            los, _ = pad_pow2(lo[rows])
+            his, _ = pad_pow2(hi[rows])
             kk = min(k, e - s)
             d_c, i_c = scan_cell(jnp.asarray(qs), jnp.asarray(los),
                                  jnp.asarray(his), s, e, kk)
@@ -186,18 +194,14 @@ class Searcher:
         hi = np.asarray(hi, np.float32)
         B = q.shape[0]
         if qmap is not None:
-            qmap = np.asarray(qmap, np.int64)
-            if qmap.shape != (B,):
-                raise ValueError(
-                    f"qmap shape {qmap.shape} != batch ({B},)")
+            qmap = rt_mod.check_qmap(qmap, B)
             if n_queries is None:
                 # inferring from qmap.max() would silently drop trailing
                 # queries whose boxes were all pruned by the planner
                 raise ValueError("n_queries is required with qmap")
         if B == 0:
             nq = n_queries if qmap is not None else 0
-            return (np.full((nq, params.k), -1, np.int64),
-                    np.full((nq, params.k), np.inf, np.float32))
+            return rt_mod.empty_topk(nq, params.k)
         key = jax.random.PRNGKey(params.seed)
 
         cfg = self.index.config
@@ -241,16 +245,10 @@ class Searcher:
             sel = np.nonzero((use_global == flag) & ~use_dense)[0]
             if len(sel) == 0:
                 continue
-            qs, real = _pad_pow2(q[sel])
-            los, _ = _pad_pow2(lo[sel])
-            his, _ = _pad_pow2(hi[sel])
             # independent entry randomization per sub-batch: sharing one
             # key would correlate the itinerary and global walks
             key, sub = jax.random.split(key)
-            ids, d = fn(jnp.asarray(qs), jnp.asarray(los), jnp.asarray(his),
-                        params, sub)
-            ids = np.asarray(ids[:real])
-            d = np.asarray(d[:real])
+            ids, d = fn(q[sel], lo[sel], hi[sel], params, sub)
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[sel] = orig
             out_d[sel] = d
@@ -258,50 +256,6 @@ class Searcher:
             return merge_segment_topk(out_i, out_d, qmap, n_queries,
                                       params.k)
         return out_i, out_d
-
-
-def merge_segment_topk(ids: np.ndarray, dists: np.ndarray,
-                       qmap: np.ndarray, n_queries: int, k: int):
-    """Fold per-box candidate rows back into per-query top-k.
-
-    ``ids`` (T, kk) with -1 pads and ``dists`` (T, kk) with +inf pads are
-    per-box results; ``qmap`` (T,) maps each row to its original query.
-    Returns ((n_queries, k) i64 ids, (n_queries, k) f32 dists).
-
-    Deterministic by construction: duplicate ids within a query (a point
-    matching several boxes) collapse to their best distance, candidates
-    order by (distance, id) so distance ties break toward the smaller
-    id, and queries with no boxes/candidates come back fully padded.
-    """
-    ids = np.asarray(ids)
-    dists = np.asarray(dists)
-    out_i = np.full((n_queries, k), -1, np.int64)
-    out_d = np.full((n_queries, k), np.inf, np.float32)
-    if ids.size == 0:
-        return out_i, out_d
-    T, kk = ids.shape
-    fq = np.repeat(np.asarray(qmap, np.int64), kk)
-    fi = ids.ravel().astype(np.int64)
-    fd = dists.ravel().astype(np.float32)
-    valid = fi >= 0
-    fi, fd, fq = fi[valid], fd[valid], fq[valid]
-    if fi.size == 0:
-        return out_i, out_d
-    # dedup: sort by (query, id, dist), keep each (query, id)'s best dist
-    o = np.lexsort((fd, fi, fq))
-    fi, fd, fq = fi[o], fd[o], fq[o]
-    first = np.ones(fi.shape[0], bool)
-    first[1:] = (fq[1:] != fq[:-1]) | (fi[1:] != fi[:-1])
-    fi, fd, fq = fi[first], fd[first], fq[first]
-    # rank survivors by (query, dist, id) and take each query's first k
-    o = np.lexsort((fi, fd, fq))
-    fi, fd, fq = fi[o], fd[o], fq[o]
-    starts = np.searchsorted(fq, np.arange(n_queries))
-    rank = np.arange(fq.shape[0]) - starts[fq]
-    keep = rank < k
-    out_i[fq[keep], rank[keep]] = fi[keep]
-    out_d[fq[keep], rank[keep]] = fd[keep]
-    return out_i, out_d
 
 
 def ground_truth(vectors: np.ndarray, attrs: np.ndarray, q: np.ndarray,

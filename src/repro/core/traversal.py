@@ -1,4 +1,5 @@
-"""Batched sequential cell traversal (paper Section 4.3, Alg. 4).
+"""Batched sequential cell traversal (paper Section 4.3, Alg. 4) — the
+single parameterized core every engine mode runs on.
 
 GPU -> TPU mapping (DESIGN.md §2): the paper runs one thread block per
 query with warp-parallel distance evaluation. Here a *batch* of queries is
@@ -7,6 +8,29 @@ step is a vectorized op over the whole batch — masked lanes replace warp
 divergence. One expansion step = one gather-distance kernel call over the
 frontier's neighbor rows (the scalar-prefetch DMA pattern), one predicate
 check, and two top-k merges (navigation beam / in-range result pool).
+
+Engine-mode matrix (storage x graph residency x seeding), all served by
+:func:`traversal_core`:
+
+  mode    | vector storage        | graph residency           | seeding
+  --------+-----------------------+---------------------------+---------
+  incore  | fp32 resident         | fully resident            | fresh
+  hybrid  | int8 resident +rerank | LRU slot cache (cell_base | carried
+          |                       | indirection, misses only) | pool
+  ooc     | int8 resident +rerank | batch-local window (rows  | carried
+          |                       | local->global indirection)| pool
+
+The two pytree axes are :class:`VectorStore` (``vectors`` xor
+``vq``/``vscale``) and :class:`GraphView` (``rows`` for batch-local ids,
+``cell_of``/``cell_base`` for the hybrid slot cache, both ``None`` for a
+fully resident graph). ``seed_ids`` is ``None`` for a fresh beam.
+``cell_order=None`` degenerates to one global greedy expansion (the
+adaptive high-selectivity path, Alg. 2 lines 5-8).
+
+Cross-cell candidate reuse: with ``pool_reuse`` the in-range result pool
+joins the navigation beam as an inter-cell hop source at every cell
+seeding (paper Section 5.1's "aggressively reuse candidates as entry
+points", previously applied only to the out-of-core carried pool).
 
 Differences from Alg. 4, documented:
 - The paper's R (size-k, mixed in/out-of-range) + recCand (in-range
@@ -18,18 +42,14 @@ Differences from Alg. 4, documented:
 - Cand admission is top-ef merge rather than "closer than furthest in R";
   with ef >= k this only widens the frontier.
 
-Three entry points share the engine:
-  multi_cell_search         — in-core Alg. 4 on fp32 vectors
-  global_search             — the adaptive high-selectivity path
-  multi_cell_search_seeded  — out-of-core batch variant: int8 resident
-                              vectors, batch-local graph with a
-                              local->global ``rows`` indirection, beam
-                              seeded from the carried candidate pool.
+Legacy entry points (``multi_cell_search``, ``multi_cell_search_seeded``,
+``global_search``) are thin jitted wrappers over the core, kept for
+engine-level ablations and the fleet dry-run.
 
 State per query lane:
   beam_ids/beam_d/expanded  (B, ef)  — navigation frontier, ascending
   res_ids/res_d             (B, k)   — in-range results, ascending
-  visited                   (B, n)   — scored-marker (bool)
+  visited                   (B, n)   — scored-marker (bool or packed u32)
 """
 
 from __future__ import annotations
@@ -41,6 +61,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+
+# cell_base value marking an uncached cell in the hybrid slot cache
+UNCACHED = -(1 << 30)
+
+
+class VectorStore(NamedTuple):
+    """Distance-table residency: exactly one of (vectors) / (vq, vscale).
+
+    vectors: (n, dim) f32 | vq: (n, dim) i8 + vscale: (n,) f32;
+    attrs: (n, m) f32 rides along for predicate checks.
+    """
+    vectors: jax.Array | None
+    vq: jax.Array | None
+    vscale: jax.Array | None
+    attrs: jax.Array
+
+
+class GraphView(NamedTuple):
+    """Adjacency residency.
+
+    intra: (n_rows, deg) i32; inter: (n_rows, S, l) i32;
+    cell_start: (S+1,) i32 CSR offsets in the id space of this view.
+    rows: optional (n_rows,) local->global map (out-of-core batch window;
+    ids fed to the traversal are batch-local).
+    cell_of/cell_base: optional hybrid slot-cache indirection — node u's
+    adjacency row lives at ``u + cell_base[cell_of[u]]`` in the cache
+    buffers, or nowhere when ``cell_base[...] == UNCACHED`` (ids stay
+    global; only the adjacency lookup indirects).
+    """
+    intra: jax.Array
+    inter: jax.Array | None
+    cell_start: jax.Array | None
+    rows: jax.Array | None = None
+    cell_of: jax.Array | None = None
+    cell_base: jax.Array | None = None
 
 
 class TraversalState(NamedTuple):
@@ -82,20 +137,52 @@ def _in_range(attrs_rows, lo, hi):
     return ok.all(axis=2)
 
 
-class _Tables(NamedTuple):
-    """Distance/attribute lookup context.
+def _gather_d2(store: VectorStore, q, gids):
+    """(B, nb) squared distances from whichever table is resident."""
+    if store.vectors is not None:
+        return ops.gather_l2(q, store.vectors, gids)
+    return ops.gather_l2_q(q, store.vq, store.vscale, gids)
 
-    gather_d2(q, gids) -> (B, nb) squared distances (+inf for gids < 0);
-    attrs: (n_global, m); rows: optional (n_local,) local->global map
-    (None = ids are already global); packed: bit-packed visited map
-    (uint32 words, 8x smaller than TPU byte-wide bools — the visited map
-    is the dominant per-query state at fleet scale, see EXPERIMENTS.md
-    §Perf garfield iteration).
-    """
-    gather_d2: object
-    attrs: jax.Array
-    rows: jax.Array | None
-    packed: bool = False
+
+def _slot_of(graph: GraphView, safe_ids):
+    """Hybrid cache: node id -> adjacency buffer row (clipped) + validity."""
+    base = graph.cell_base[graph.cell_of[safe_ids]]
+    cached = base != UNCACHED
+    slot = jnp.clip(safe_ids + base, 0, graph.intra.shape[0] - 1)
+    return slot, cached
+
+
+def _adj_rows(graph: GraphView, u, lane_ok):
+    """Fixed-degree neighbor row per lane for frontier node u (B,).
+
+    Resident/batch-local graphs index directly; the hybrid slot cache
+    indirects through cell_base and yields no neighbors (-1) for nodes
+    whose cell is not currently cached — traversal degrades gracefully
+    instead of faulting."""
+    safe = jnp.maximum(u, 0)
+    ok = (u >= 0) & lane_ok
+    if graph.cell_base is None:
+        nbrs = graph.intra[safe]
+    else:
+        slot, cached = _slot_of(graph, safe)
+        nbrs = graph.intra[slot]
+        ok = ok & cached
+    return jnp.where(ok[:, None], nbrs, -1)
+
+
+def _inter_rows(graph: GraphView, src, c):
+    """Inter-cell hop targets: src (B, L) nodes -> their edges into cell
+    c (B,). Returns (B, L*l) candidate ids (-1 where invalid)."""
+    B = src.shape[0]
+    safe = jnp.maximum(src, 0)
+    ok = src >= 0
+    if graph.cell_base is None:
+        hop = graph.inter[safe, c[:, None]]
+    else:
+        slot, cached = _slot_of(graph, safe)
+        hop = graph.inter[slot, c[:, None]]
+        ok = ok & cached
+    return jnp.where(ok[:, :, None], hop, -1).reshape(B, -1)
 
 
 def _visited_init(B: int, n: int, packed: bool):
@@ -104,21 +191,22 @@ def _visited_init(B: int, n: int, packed: bool):
     return jnp.zeros((B, n), bool)
 
 
-def _score(tab: _Tables, lo, hi, q, visited, cand_ids, active):
+def _score(store: VectorStore, graph: GraphView, packed: bool,
+           lo, hi, q, visited, cand_ids, active):
     """Distance + predicate + visited bookkeeping for a candidate batch.
 
-    cand_ids are *local* ids (== global when tab.rows is None). Returns
-    (nav_d, res_d, visited'): nav_d has +inf for invalid/visited ids;
-    res_d additionally +inf for out-of-range points.
+    cand_ids are *view-local* ids (== global when graph.rows is None).
+    Returns (nav_d, res_d, visited'): nav_d has +inf for invalid/visited
+    ids; res_d additionally +inf for out-of-range points.
     """
     B = cand_ids.shape[0]
     safe = jnp.maximum(cand_ids, 0)
     valid = (cand_ids >= 0) & active[:, None]
 
-    gids = safe if tab.rows is None else tab.rows[safe]
-    d2 = tab.gather_d2(q, jnp.where(valid, gids, -1))
+    gids = safe if graph.rows is None else graph.rows[safe]
+    d2 = _gather_d2(store, q, jnp.where(valid, gids, -1))
     rows_b = jnp.arange(B, dtype=jnp.int32)[:, None]
-    if tab.packed:
+    if packed:
         widx = safe >> 5
         bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
         seen = (visited[rows_b, widx] & bit) != 0
@@ -134,13 +222,13 @@ def _score(tab: _Tables, lo, hi, q, visited, cand_ids, active):
         visited = visited.at[rows_b, safe].max(valid)
     nav_d = jnp.where(valid & ~seen, d2, jnp.inf)
 
-    a_rows = tab.attrs[gids]                                # (B, nb, m)
+    a_rows = store.attrs[gids]                              # (B, nb, m)
     ok = _in_range(a_rows, lo, hi)
     res_d = jnp.where(ok, nav_d, jnp.inf)
     return nav_d, res_d, visited
 
 
-def _expand_loop(state: TraversalState, q, tab: _Tables, adj, lo, hi,
+def _expand_loop(state: TraversalState, q, store, graph, packed, lo, hi,
                  max_iters: int):
     """Best-first expansion until every lane's beam is exhausted (Alg. 4
     lines 4-13), capped at max_iters."""
@@ -168,11 +256,10 @@ def _expand_loop(state: TraversalState, q, tab: _Tables, adj, lo, hi,
         expanded = st.expanded.at[rows_b[:, 0], slot].max(lane_active)
 
         # 3. gather fixed-degree neighbor row (the DMA-chase kernel)
-        nbrs = adj[jnp.maximum(u, 0)]                       # (B, deg)
-        nbrs = jnp.where(((u >= 0) & lane_active)[:, None], nbrs, -1)
+        nbrs = _adj_rows(graph, u, lane_active)             # (B, deg)
 
         nav_d, res_d, visited = _score(
-            tab, lo, hi, q, st.visited, nbrs, lane_active)
+            store, graph, packed, lo, hi, q, st.visited, nbrs, lane_active)
 
         # 4. merge into navigation beam (carry expanded flags) and results
         nbrs_s, nav_s = _dedup_inf(nbrs, nav_d)
@@ -190,7 +277,7 @@ def _expand_loop(state: TraversalState, q, tab: _Tables, adj, lo, hi,
     return state
 
 
-def _seed_beam(state: TraversalState, q, tab: _Tables, lo, hi,
+def _seed_beam(state: TraversalState, q, store, graph, packed, lo, hi,
                cand_ids, active, entry_width: int):
     """Score entry candidates, reset the beam to the best entry_width of
     them (paper: 'Cand <- the d nearest nodes in CandEntry'), merge
@@ -199,7 +286,7 @@ def _seed_beam(state: TraversalState, q, tab: _Tables, lo, hi,
     ef = state.beam_ids.shape[1]
     B = q.shape[0]
     nav_d, res_d, visited = _score(
-        tab, lo, hi, q, state.visited, cand_ids, active)
+        store, graph, packed, lo, hi, q, state.visited, cand_ids, active)
     ids_s, nav_s = _dedup_inf(cand_ids, nav_d)
     _, res_s = _dedup_inf(cand_ids, res_d)
 
@@ -235,9 +322,9 @@ def _init_state(B: int, n: int, k: int, ef: int, key,
     )
 
 
-def _cell_itinerary_loop(state, q, tab, adj, inter_adj, cell_start,
-                         lo, hi, cell_order, *, entry_width, entry_random,
-                         entry_beam_l, max_iters, use_inter):
+def _cell_itinerary_loop(state, q, store, graph, packed, lo, hi, cell_order,
+                         *, entry_width, entry_random, entry_beam_l,
+                         max_iters, use_inter, pool_reuse):
     """Shared Alg. 4 outer loop over an ordered cell itinerary."""
     B = q.shape[0]
     T = cell_order.shape[1]
@@ -246,8 +333,8 @@ def _cell_itinerary_loop(state, q, tab, adj, inter_adj, cell_start,
         c = cell_order[:, t]                                 # (B,)
         active = c >= 0
         safe_c = jnp.maximum(c, 0)
-        start = cell_start[safe_c]
-        end = cell_start[safe_c + 1]
+        start = graph.cell_start[safe_c]
+        end = graph.cell_start[safe_c + 1]
         nonempty = end > start
 
         # --- entry candidates: inter-cell hops + random (Alg. 4 l14-16)
@@ -260,81 +347,123 @@ def _cell_itinerary_loop(state, q, tab, adj, inter_adj, cell_start,
 
         if use_inter:
             hop_src = state.beam_ids[:, :entry_beam_l]       # (B, L)
-            hop = inter_adj[jnp.maximum(hop_src, 0), safe_c[:, None]]
-            hop = jnp.where((hop_src >= 0)[:, :, None], hop, -1)
-            hop = hop.reshape(B, -1)
+            if pool_reuse:
+                # cross-cell candidate reuse: the in-range result pool's
+                # inter edges also propose entries (paper §5.1, applied
+                # to every itinerary, not only the out-of-core carry)
+                hop_src = jnp.concatenate(
+                    [hop_src, state.res_ids[:, :entry_beam_l]], axis=1)
+            hop = _inter_rows(graph, hop_src, safe_c)
             cand = jnp.concatenate([hop, rnd], axis=1)
         else:
             cand = rnd
         cand = jnp.where(active[:, None], cand, -1)
 
-        state = _seed_beam(state, q, tab, lo, hi, cand,
+        state = _seed_beam(state, q, store, graph, packed, lo, hi, cand,
                            active & nonempty, entry_width)
-        state = _expand_loop(state, q, tab, adj, lo, hi, max_iters)
+        state = _expand_loop(state, q, store, graph, packed, lo, hi,
+                             max_iters)
         return state
 
     return jax.lax.fori_loop(0, T, cell_body, state)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "ef", "entry_width", "entry_random",
-                     "entry_beam_l", "max_iters", "use_inter"))
-def multi_cell_search(vectors, attrs, adj, inter_adj, cell_start,
-                      q, lo, hi, cell_order, key, *,
-                      k: int, ef: int, entry_width: int, entry_random: int,
-                      entry_beam_l: int, max_iters: int,
-                      use_inter: bool = True):
-    """Sequential cell-by-cell traversal (Alg. 4), in-core fp32.
+def _traversal_core_impl(store: VectorStore, graph: GraphView,
+                         q, lo, hi, cell_order, seed_ids, key, *,
+                         k: int, ef: int, entry_width: int,
+                         entry_random: int, entry_beam_l: int,
+                         max_iters: int, use_inter: bool = True,
+                         packed_visited: bool = False,
+                         pool_reuse: bool = False):
+    """The one traversal core (see module docstring for the mode matrix).
 
-    vectors (n, dim) | attrs (n, m) | adj (n, deg) | inter_adj (n, S, l)
-    cell_start (S+1,) | q (B, dim) | lo/hi (B, m)
-    cell_order (B, T) int32: per-lane ordered cell ids, -1 padded.
-    Returns (res_ids (B, k) int32 internal ids [-1 pad], res_d (B, k)).
+    q (B, dim) | lo/hi (B, m) | cell_order (B, T) i32 ordered cell ids
+    (-1 padded) or None for one global expansion | seed_ids (B, n_seed)
+    view-local entry ids (-1 padded) or None for a fresh beam.
+    Returns (res_ids (B, k) i32 view-local ids [-1 pad], res_d (B, k)).
     """
-    B, n = q.shape[0], vectors.shape[0]
-    tab = _Tables(
-        gather_d2=lambda qq, gids: ops.gather_l2(qq, vectors, gids),
-        attrs=attrs, rows=None)
-    state = _init_state(B, n, k, ef, key)
-    state = _cell_itinerary_loop(
-        state, q, tab, adj, inter_adj, cell_start, lo, hi, cell_order,
-        entry_width=entry_width, entry_random=entry_random,
-        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=use_inter)
+    B = q.shape[0]
+    n = store.attrs.shape[0] if graph.rows is None else graph.rows.shape[0]
+    state = _init_state(B, n, k, ef, key, packed=packed_visited)
+    all_lanes = jnp.ones((B,), bool)
+
+    if seed_ids is None and cell_order is None:
+        # global path seeds from uniform randoms over the whole view
+        seed_ids = jax.random.randint(
+            key, (B, entry_width), 0, n).astype(jnp.int32)
+    if seed_ids is not None:
+        state = _seed_beam(state, q, store, graph, packed_visited, lo, hi,
+                           seed_ids, all_lanes, entry_width)
+    if cell_order is None:
+        state = _expand_loop(state, q, store, graph, packed_visited,
+                             lo, hi, max_iters)
+    else:
+        state = _cell_itinerary_loop(
+            state, q, store, graph, packed_visited, lo, hi, cell_order,
+            entry_width=entry_width, entry_random=entry_random,
+            entry_beam_l=entry_beam_l, max_iters=max_iters,
+            use_inter=use_inter, pool_reuse=pool_reuse)
     return state.res_ids, state.res_d
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "ef", "entry_width", "entry_random",
-                     "entry_beam_l", "max_iters", "packed_visited"))
-def multi_cell_search_seeded(vq, vscale, attrs, adj, inter_adj, cell_start,
-                             rows, q, lo, hi, cell_order, seed_ids, key, *,
-                             k: int, ef: int, entry_width: int,
-                             entry_random: int, entry_beam_l: int,
-                             max_iters: int, packed_visited: bool = False):
-    """Out-of-core batch variant (paper Section 5.1 step 5).
+_STATIC = ("k", "ef", "entry_width", "entry_random", "entry_beam_l",
+           "max_iters", "use_inter", "packed_visited", "pool_reuse")
 
-    Differences from multi_cell_search: distances come from the *resident
-    int8* table (vq (n_glob, dim) i8 + vscale (n_glob,)), graph ids are
-    batch-local with ``rows`` (n_local,) mapping local->global, and the
-    beam starts from ``seed_ids`` (B, n_seed) — the carried global
-    candidate pool remapped into this batch (paper's cross-batch entry
-    propagation). Returns batch-local ids.
-    """
-    B, n_local = q.shape[0], rows.shape[0]
-    tab = _Tables(
-        gather_d2=lambda qq, gids: ops.gather_l2_q(qq, vq, vscale, gids),
-        attrs=attrs, rows=rows, packed=packed_visited)
-    state = _init_state(B, n_local, k, ef, key, packed=packed_visited)
-    # seed from the carried pool (may be empty: all -1)
-    state = _seed_beam(state, q, tab, lo, hi, seed_ids,
-                       jnp.ones((B,), bool), entry_width)
-    state = _cell_itinerary_loop(
-        state, q, tab, adj, inter_adj, cell_start, lo, hi, cell_order,
-        entry_width=entry_width, entry_random=entry_random,
-        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=True)
-    return state.res_ids, state.res_d
+traversal_core = jax.jit(_traversal_core_impl, static_argnames=_STATIC)
+
+
+# -- legacy entry points: thin wrappers over the core ------------------------
+
+def _multi_cell_search_impl(vectors, attrs, adj, inter_adj, cell_start,
+                            q, lo, hi, cell_order, key, *,
+                            k: int, ef: int, entry_width: int,
+                            entry_random: int, entry_beam_l: int,
+                            max_iters: int, use_inter: bool = True,
+                            pool_reuse: bool = False):
+    """In-core Alg. 4 on fp32 vectors (fresh beam, resident graph)."""
+    store = VectorStore(vectors=vectors, vq=None, vscale=None, attrs=attrs)
+    graph = GraphView(intra=adj, inter=inter_adj, cell_start=cell_start)
+    return _traversal_core_impl(
+        store, graph, q, lo, hi, cell_order, None, key,
+        k=k, ef=ef, entry_width=entry_width, entry_random=entry_random,
+        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=use_inter,
+        pool_reuse=pool_reuse)
+
+
+multi_cell_search = jax.jit(
+    _multi_cell_search_impl,
+    static_argnames=("k", "ef", "entry_width", "entry_random",
+                     "entry_beam_l", "max_iters", "use_inter",
+                     "pool_reuse"))
+
+
+def _multi_cell_search_seeded_impl(vq, vscale, attrs, adj, inter_adj,
+                                   cell_start, rows, q, lo, hi, cell_order,
+                                   seed_ids, key, *,
+                                   k: int, ef: int, entry_width: int,
+                                   entry_random: int, entry_beam_l: int,
+                                   max_iters: int,
+                                   packed_visited: bool = False,
+                                   pool_reuse: bool = False):
+    """Out-of-core batch variant (paper Section 5.1 step 5): int8
+    resident distances, batch-local graph with ``rows`` local->global
+    indirection, beam seeded from the carried candidate pool. Returns
+    batch-local ids."""
+    store = VectorStore(vectors=None, vq=vq, vscale=vscale, attrs=attrs)
+    graph = GraphView(intra=adj, inter=inter_adj, cell_start=cell_start,
+                      rows=rows)
+    return _traversal_core_impl(
+        store, graph, q, lo, hi, cell_order, seed_ids, key,
+        k=k, ef=ef, entry_width=entry_width, entry_random=entry_random,
+        entry_beam_l=entry_beam_l, max_iters=max_iters, use_inter=True,
+        packed_visited=packed_visited, pool_reuse=pool_reuse)
+
+
+multi_cell_search_seeded = jax.jit(
+    _multi_cell_search_seeded_impl,
+    static_argnames=("k", "ef", "entry_width", "entry_random",
+                     "entry_beam_l", "max_iters", "packed_visited",
+                     "pool_reuse"))
 
 
 @functools.partial(
@@ -345,13 +474,9 @@ def global_search(vectors, attrs, adj, q, lo, hi, key, *,
     """Adaptive high-selectivity path (Alg. 2 lines 5-8): one greedy
     traversal over the whole graph (adj = intra ++ flattened inter edges),
     predicate enforced on the result pool only."""
-    B, n = q.shape[0], vectors.shape[0]
-    tab = _Tables(
-        gather_d2=lambda qq, gids: ops.gather_l2(qq, vectors, gids),
-        attrs=attrs, rows=None)
-    state = _init_state(B, n, k, ef, key)
-    rnd = jax.random.randint(key, (B, entry_width), 0, n).astype(jnp.int32)
-    active = jnp.ones((B,), bool)
-    state = _seed_beam(state, q, tab, lo, hi, rnd, active, entry_width)
-    state = _expand_loop(state, q, tab, adj, lo, hi, max_iters)
-    return state.res_ids, state.res_d
+    store = VectorStore(vectors=vectors, vq=None, vscale=None, attrs=attrs)
+    graph = GraphView(intra=adj, inter=None, cell_start=None)
+    return _traversal_core_impl(
+        store, graph, q, lo, hi, None, None, key,
+        k=k, ef=ef, entry_width=entry_width, entry_random=0,
+        entry_beam_l=0, max_iters=max_iters)

@@ -145,4 +145,7 @@ class SearchParams:
     use_ordering: bool = True          # ablation: Fig 13(b)
     use_inter_edges: bool = True       # ablation: Fig 13(a)
     adaptive_global: bool = True       # Section 4.1 adaptive path
+    pool_reuse: bool = True            # cross-cell candidate reuse: the
+    # in-range result pool proposes inter-cell entries on every itinerary
+    # hop (paper §5.1's entry propagation, applied to all engine modes)
     seed: int = 0

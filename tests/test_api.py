@@ -155,26 +155,71 @@ def test_dispatch_by_device_budget(small_collection, small_queries,
                                    small_truth):
     wl = small_queries
     col = small_collection
-    assert col.plan()["engine"] == "in_core"
-    budget = col.out_of_core_resident_bytes() + (1 << 20)
-    assert budget < col.in_core_bytes()
+    assert col.plan()["engine"] == "incore"
+    resident = col.out_of_core_resident_bytes()
+    # budget above the residents but below the hybrid floor -> streaming
+    budget = (resident + col.hybrid_min_bytes()) // 2
+    assert resident < budget < col.hybrid_min_bytes() < col.in_core_bytes()
     ooc = Collection(index=col.index, schema=col.schema,
                      device_budget_bytes=budget)
-    assert ooc.plan()["engine"] == "out_of_core"
+    assert ooc.plan()["engine"] == "ooc"
     res = ooc.search(wl.q, filters=(wl.lo, wl.hi),
                      params=SearchParams(k=10, ef=64))
-    assert res.engine == "out_of_core"
+    assert res.engine == "ooc"
     assert ooc.last_stats["n_batches"] >= 1
     assert res.recall(small_truth[0]) >= 0.8
-    # explicit override wins over the budget, and stats never carry over
+    # explicit override wins over the budget (legacy engine names keep
+    # working), and stats never carry over
     res_ic = ooc.search(wl.q[:4], filters=(wl.lo[:4], wl.hi[:4]),
                         k=10, engine="in_core")
-    assert res_ic.engine == "in_core"
+    assert res_ic.engine == "incore"
     assert ooc.last_stats == {}
     # a budget change rebuilds the streamer with the new graph window
     first = ooc._streamer()
     ooc.device_budget_bytes = budget * 2
     assert ooc._streamer() is not first
+
+
+def test_dispatch_hybrid_budget_tier(small_collection, small_queries,
+                                     small_truth):
+    """A budget that fits the int8 residents plus a useful cell cache
+    resolves to the hybrid middle tier."""
+    wl = small_queries
+    col = small_collection
+    budget = col.hybrid_min_bytes() + (1 << 18)
+    assert budget < col.in_core_bytes()
+    hyb = Collection(index=col.index, schema=col.schema,
+                     device_budget_bytes=budget)
+    plan = hyb.plan()
+    assert plan["engine"] == "hybrid"
+    assert plan["cache_slots"] >= 2
+    res = hyb.search(wl.q, filters=(wl.lo, wl.hi),
+                     params=SearchParams(k=10, ef=64))
+    assert res.engine == "hybrid"
+    assert hyb.last_stats["cache_misses"] >= 1
+    assert res.recall(small_truth[0]) >= 0.8
+    # warm repeat: the LRU keeps hot cells resident across query batches
+    hyb.search(wl.q, filters=(wl.lo, wl.hi),
+               params=SearchParams(k=10, ef=64))
+    assert hyb.last_stats["cache_hits"] >= 1
+    # unknown mode names are rejected at construction
+    with pytest.raises(ValueError):
+        Collection(index=col.index, schema=col.schema, mode="bogus")
+
+
+def test_explicit_mode_requires_quantized_copy(small_data):
+    """hybrid/ooc modes need the int8 copy; an index built with
+    quantize=False must fail fast at resolve time, not deep in the
+    runtime."""
+    from repro.core.types import GMGConfig
+    v, a = small_data
+    cfg = GMGConfig(seg_per_attr=(2,), intra_degree=8, n_clusters=8,
+                    build_ef=32, quantize=False)
+    col = Collection.build(v[:512], a[:512, :1], config=cfg, seed=0)
+    assert col.index.vq is None
+    for mode in ("hybrid", "ooc"):
+        with pytest.raises(ValueError, match="quantize"):
+            col.plan(engine=mode)
 
 
 def test_dispatch_budget_too_small_raises(small_collection):
@@ -199,6 +244,30 @@ def test_save_load_roundtrip_identical(small_collection, small_queries,
     r2 = col2.search(wl.q, filters=(wl.lo, wl.hi), k=10)
     np.testing.assert_array_equal(r1.ids, r2.ids)
     np.testing.assert_allclose(r1.distances, r2.distances)
+
+
+def test_save_load_roundtrips_engine_mode(small_collection, tmp_path):
+    """Regression (ISSUE 3): a loaded collection must rebuild the same
+    engine — mode AND budget round-trip, not just the index arrays."""
+    path = os.path.join(tmp_path, "mode.npz")
+    budget = small_collection.hybrid_min_bytes() + (1 << 18)
+    col = Collection(index=small_collection.index,
+                     schema=small_collection.schema,
+                     device_budget_bytes=budget)
+    assert col.plan()["engine"] == "hybrid"
+    col.save(path)
+    col2 = Collection.load(path)
+    assert col2.mode == "auto"
+    assert col2.device_budget_bytes == budget
+    assert col2.plan()["engine"] == "hybrid"
+    # an explicit (non-auto) mode survives the round-trip too
+    col.mode = "ooc"
+    col.save(path)
+    col3 = Collection.load(path)
+    assert col3.mode == "ooc" and col3.plan()["engine"] == "ooc"
+    # and load-time overrides still win
+    col4 = Collection.load(path, mode="incore")
+    assert col4.plan()["engine"] == "incore"
 
 
 # -- selectivity estimator --------------------------------------------------

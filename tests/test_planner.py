@@ -221,9 +221,7 @@ def test_disjunction_single_out_of_core_engine_pass(small_collection,
                                                     small_queries,
                                                     monkeypatch):
     col = small_collection
-    budget = col.out_of_core_resident_bytes() + (1 << 20)
-    ooc = Collection(index=col.index, schema=col.schema,
-                     device_budget_bytes=budget)
+    ooc = Collection(index=col.index, schema=col.schema, mode="ooc")
     eng = ooc._streamer()
     calls = []
     orig = eng.search
@@ -237,7 +235,7 @@ def test_disjunction_single_out_of_core_engine_pass(small_collection,
     res = ooc.search(small_queries.q[:4], filters=expr,
                      params=SearchParams(k=5, ef=64))
     assert len(calls) == 1
-    assert res.engine == "out_of_core"
+    assert res.engine == "ooc"
     assert ooc.last_stats["n_boxes"] == 8
     assert ooc.last_stats["planner"]["n_boxes"] == 8
 

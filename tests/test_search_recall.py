@@ -113,17 +113,55 @@ def test_disjunction_recall_in_core(disj_collection):
 
 def test_disjunction_recall_out_of_core(disj_collection):
     col, v, a, q = disj_collection
-    budget = col.out_of_core_resident_bytes() + (1 << 20)
-    assert budget < col.in_core_bytes()
-    ooc = Collection(index=col.index, schema=col.schema,
-                     device_budget_bytes=budget)
+    ooc = Collection(index=col.index, schema=col.schema, mode="ooc")
     expr = (F("price") < 10) | (F("price") > 90)
     res = ooc.search(q, filters=expr, params=SearchParams(k=10, ef=128))
-    assert res.engine == "out_of_core"
+    assert res.engine == "ooc"
     tids = _brute_union_ids(v, a, q, (a[:, 0] < 10) | (a[:, 0] > 90), 10)
     assert res.recall(tids) >= 0.95
     assert ooc.last_stats["n_batches"] >= 1
     assert ooc.last_stats["planner"]["n_boxes"] == 2 * len(q)
+
+
+# -- engine parity: in-core / hybrid / out-of-core on one 5k dataset --------
+
+ENGINE_PARITY_TOL = 0.08
+
+
+def test_engine_parity_conjunctive(disj_collection):
+    """All three engine modes run the same traversal core; their recall
+    on identical conjunctive workloads must agree within tolerance."""
+    col, v, a, q = disj_collection
+    wl = make_queries(v, a, 24, 1, seed=31)
+    lo, hi = wl.lo, wl.hi
+    tids, _ = ground_truth(v, a, wl.q, lo, hi, 10)
+    recalls = {}
+    for mode in ("incore", "hybrid", "ooc"):
+        res = col.search(wl.q, filters=(lo, hi),
+                         params=SearchParams(k=10, ef=96), engine=mode)
+        assert res.engine == mode
+        recalls[mode] = res.recall(tids)
+    assert min(recalls.values()) >= 0.9, recalls
+    spread = max(recalls.values()) - min(recalls.values())
+    assert spread <= ENGINE_PARITY_TOL, recalls
+
+
+def test_engine_parity_disjunctive(disj_collection):
+    """The planner's box-batched disjunctive pass reaches equivalent
+    recall through every engine mode."""
+    col, v, a, q = disj_collection
+    expr = (F("price") < 10) | (F("price") > 90)
+    tids = _brute_union_ids(v, a, q, (a[:, 0] < 10) | (a[:, 0] > 90), 10)
+    recalls = {}
+    for mode in ("incore", "hybrid", "ooc"):
+        res = col.search(q, filters=expr,
+                         params=SearchParams(k=10, ef=128), engine=mode)
+        assert res.engine == mode
+        assert col.last_stats["planner"]["n_boxes"] == 2 * len(q)
+        recalls[mode] = res.recall(tids)
+    assert min(recalls.values()) >= 0.9, recalls
+    spread = max(recalls.values()) - min(recalls.values())
+    assert spread <= ENGINE_PARITY_TOL, recalls
 
 
 def test_wide_open_range_uses_global_path(searcher, small_data,
