@@ -1,18 +1,30 @@
-"""Device-budget sweep across the three engine modes (ISSUE 3).
+"""Device-budget sweep across the three engine modes (ISSUE 3 + 4).
 
-One collection, one workload, three declared ``device_budget_bytes``
-regimes — the budget alone moves the execution across the mode matrix:
+One collection, one workload, declared ``device_budget_bytes`` regimes —
+the budget alone moves the execution across the mode matrix:
 
-  fits_all    : the whole fp32 index fits            -> incore
-  graph_over  : the fp32 graph exceeds the budget but the int8
-                residents + a full graph cache fit   -> hybrid
-  min_budget  : barely more than the int8 residents  -> ooc
+  fits_all       : the whole fp32 index fits          -> incore
+  graph_over     : the fp32 graph exceeds the budget but the int8
+                   residents + a full graph cache fit  -> hybrid
+  min_budget     : barely more than the int8 residents -> ooc
 
-plus a forced hybrid-vs-ooc pair at the ``graph_over`` budget — the
-acceptance row: hybrid must beat the streaming engine's throughput at
-equal (±tolerance) recall, since it keeps hot graph cells device-resident
-across query batches instead of re-gathering/remapping/re-uploading its
-whole window every call.
+plus two forced pairs at fixed budgets:
+
+  graph_over_forced : hybrid vs ooc at the graph_over budget — hybrid
+      must beat the streaming engine's throughput at equal (±tolerance)
+      recall, since it keeps hot graph cells device-resident across
+      query batches instead of re-uploading its window every call.
+  cache_pressure    : hybrid with the cache halved, size-aware arena +
+      cache-aware wave order vs the PR-3 fixed-slot cache-blind
+      baseline (``cache_policy="fixed"``). The ISSUE-4 acceptance row:
+      the locality-aware runtime must cut warm ``transfer_bytes`` at
+      equal (±0.005) recall. Asserted here so the row cannot silently
+      stop meaning anything; the CI perf gate additionally tracks
+      hit_rate / transfer_bytes / total_active against the committed
+      baseline.
+
+Rows carry the engine stats (``total_active``, ``hit_rate``,
+``transfer_bytes``) for ``benchmarks.check_recall_gate``'s perf gate.
 """
 
 from __future__ import annotations
@@ -49,6 +61,10 @@ def run(scale: str = "smoke"):
     ]
     assert budgets[1][1] < base.in_core_bytes(), \
         "graph_over regime must exclude the in-core engine"
+    # cache under pressure: room for roughly half the graph cells, so a
+    # warm repeated workload still streams — the regime where cache-aware
+    # wave order + size-aware slots pay off
+    pressure = resident + full_cache // 2
 
     rows = []
 
@@ -59,22 +75,46 @@ def run(scale: str = "smoke"):
             lambda: col.search(wl.q, filters=(wl.lo, wl.hi), params=p),
             nq, warmup=0, iters=3)
         stats = dict(col.last_stats)
-        return dict(
+        row = dict(
             bench="memory_budget", dataset=ds, budget=label,
             budget_mb=round((col.device_budget_bytes or 0) / 1e6, 2),
             mode=mode_used,
             recall=round(res.recall(tids), 4), qps=round(qps, 1),
             transfer_mb=round(stats.get("transfer_bytes", 0) / 1e6, 3))
+        if mode_used != "incore":      # engine stats the perf gate tracks
+            row["transfer_bytes"] = int(stats.get("transfer_bytes", 0))
+            row["total_active"] = int(stats.get("total_active", 0))
+            if "hit_rate" in stats:
+                row["hit_rate"] = round(float(stats["hit_rate"]), 4)
+        rows.append(row)
+        return row
 
     # the budget alone walks the mode matrix
     for label, budget in budgets:
         col = Collection(index=idx, schema=schema,
                          device_budget_bytes=budget)
-        rows.append(measure(col, label, col.plan()["engine"]))
+        measure(col, label, col.plan()["engine"])
 
     # acceptance pair: same graph_over budget, modes forced
     for mode in ("hybrid", "ooc"):
         col = Collection(index=idx, schema=schema,
                          device_budget_bytes=budgets[1][1], mode=mode)
-        rows.append(measure(col, "graph_over_forced", mode))
+        measure(col, "graph_over_forced", mode)
+
+    # ISSUE-4 acceptance pair: halved cache, size-aware vs PR-3 baseline
+    by_policy = {}
+    for policy in ("size_aware", "fixed"):
+        col = Collection(index=idx, schema=schema,
+                         device_budget_bytes=pressure, mode="hybrid",
+                         cache_policy=policy)
+        by_policy[policy] = measure(col, f"cache_pressure_{policy}",
+                                    "hybrid")
+    arena, fixed = by_policy["size_aware"], by_policy["fixed"]
+    assert arena["transfer_bytes"] < fixed["transfer_bytes"], (
+        "cache-aware scheduling + size-aware slots must reduce warm "
+        f"transfer vs the fixed-slot baseline: {arena['transfer_bytes']} "
+        f"vs {fixed['transfer_bytes']}")
+    assert abs(arena["recall"] - fixed["recall"]) <= 0.005, (
+        "transfer win must come at equal recall: "
+        f"{arena['recall']} vs {fixed['recall']}")
     return rows

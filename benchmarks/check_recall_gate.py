@@ -1,19 +1,34 @@
-"""CI recall gate: smoke-bench recall vs. the committed baseline.
+"""CI quality + perf gate: smoke-bench metrics vs. the committed baseline.
 
 Reads the per-bench JSON written by ``python -m benchmarks.run --scale
-smoke`` (results/bench/*.json), extracts the tracked recall metrics —
-Garfield's QPS/recall sweep rows, the disjunctive box-batched rows and
-the engine-mode memory-budget sweep (incore / hybrid / ooc) —
-and exits non-zero if any drops more than ``tolerance`` below its value
-in benchmarks/baselines/smoke_recall.json, or if a tracked metric
-disappeared entirely (a silently-skipped bench must not pass the gate).
+smoke`` (results/bench/*.json) and tracks two metric families:
 
-After an *intentional* quality change, regenerate the baseline with::
+  quality — recall of Garfield's QPS/recall sweep rows, the disjunctive
+      box-batched rows and the engine-mode memory-budget sweep (incore /
+      hybrid / ooc). Fails when a recall drops more than ``tolerance``
+      below baseline.
+  perf — the streamed engines' scheduling/transfer counters from
+      ``bench_memory_budget``: ``total_active`` (Alg. 5's objective),
+      cache ``hit_rate`` and warm ``transfer_bytes``. These are
+      deterministic host-side counters (no wall-clock flakiness), so the
+      gate holds them to tight direction-aware tolerances: lower-is-
+      better counters fail on growth beyond a relative slack,
+      ``hit_rate`` fails on an absolute drop. A cache-layout or
+      scheduling change that silently re-inflates transfer can no
+      longer pass CI.
+
+Both families fail the job too when a tracked metric disappears entirely
+(a silently-skipped bench must not pass the gate).
+
+After an *intentional* quality/perf change, regenerate the baseline::
 
     PYTHONPATH=src python -m benchmarks.run --scale smoke
     PYTHONPATH=src python -m benchmarks.check_recall_gate --write-baseline
 
 and commit the updated baseline file alongside the change.
+
+In CI the comparison table is also appended as markdown to
+``$GITHUB_STEP_SUMMARY`` (or any path passed via ``--summary``).
 """
 
 from __future__ import annotations
@@ -29,6 +44,15 @@ DEFAULT_BASELINE = os.path.join(_REPO, "benchmarks", "baselines",
                                 "smoke_recall.json")
 DEFAULT_TOLERANCE = 0.03   # CPU-jax jitter headroom across versions/runners
 
+# perf counters tracked per memory-budget row; key suffix ->
+# (direction, kind, tolerance, absolute slack). Deterministic counters,
+# so the slack only absorbs benign plan shifts (e.g. one extra wave).
+PERF_METRICS = {
+    "transfer_bytes": ("lower", "rel", 0.10, 4096),
+    "total_active": ("lower", "rel", 0.10, 2),
+    "hit_rate": ("higher", "abs", 0.05, 0.0),
+}
+
 
 def _load_rows(results_dir: str, bench: str):
     path = os.path.join(results_dir, f"{bench}.json")
@@ -42,12 +66,13 @@ def _load_rows(results_dir: str, bench: str):
 
 
 def tracked_metrics(results_dir: str) -> dict:
-    """key -> recall for every row the gate watches.
+    """key -> value for every metric the gate watches.
 
-    Rows with recall == 0 are skipped as degenerate: at smoke scale some
-    workloads (e.g. m=4 conjunctions) leave empty ground-truth sets and
-    score 0/1 regardless of search quality, so a 0.0 floor could never
-    fail and would only pretend to guard anything.
+    Recall rows with recall == 0 are skipped as degenerate: at smoke
+    scale some workloads (e.g. m=4 conjunctions) leave empty ground-truth
+    sets and score 0/1 regardless of search quality, so a 0.0 floor could
+    never fail and would only pretend to guard anything. Perf counters
+    ride on the same (non-degenerate) memory-budget rows.
     """
     out = {}
     for r in _load_rows(results_dir, "bench_qps_recall"):
@@ -61,10 +86,53 @@ def tracked_metrics(results_dir: str) -> dict:
             out[key] = float(r["recall"])
     for r in _load_rows(results_dir, "bench_memory_budget"):
         if float(r.get("recall", 0)) > 0:
-            key = (f"memory_budget:{r['dataset']}:{r['budget']}:"
-                   f"{r['mode']}")
-            out[key] = float(r["recall"])
+            base = f"memory_budget:{r['dataset']}:{r['budget']}:{r['mode']}"
+            out[base] = float(r["recall"])
+            for suffix in PERF_METRICS:
+                if suffix in r:
+                    out[f"{base}:{suffix}"] = float(r[suffix])
     return out
+
+
+def metric_rule(key: str, recall_tol: float):
+    """(direction, kind, tolerance, abs_slack) for a tracked key."""
+    suffix = key.rsplit(":", 1)[-1]
+    if suffix in PERF_METRICS:
+        return PERF_METRICS[suffix]
+    return ("higher", "abs", recall_tol, 0.0)
+
+
+def check_one(key: str, got: float, base: float, recall_tol: float):
+    """Returns (ok, limit) — the boundary value the metric must respect."""
+    direction, kind, tol, slack = metric_rule(key, recall_tol)
+    if direction == "higher":
+        limit = base - tol if kind == "abs" else base * (1 - tol)
+        return got >= limit, limit
+    limit = (base + tol if kind == "abs" else base * (1 + tol)) + slack
+    return got <= limit, limit
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4f}" if abs(v) < 100 else f"{v:.0f}"
+
+
+def write_summary(path: str, lines: list[tuple], failures, missing) -> None:
+    """Markdown table for $GITHUB_STEP_SUMMARY."""
+    with open(path, "a") as f:
+        f.write("### Bench gate (quality + perf)\n\n")
+        f.write("| metric | baseline | current | limit | status |\n")
+        f.write("|---|---:|---:|---:|---|\n")
+        for key, base, got, limit, status in lines:
+            mark = {"ok": "✅", "FAIL": "❌", "new": "🆕"}.get(status, "")
+            f.write(f"| `{key}` | {_fmt(base) if base is not None else '—'} "
+                    f"| {_fmt(got)} | "
+                    f"{_fmt(limit) if limit is not None else '—'} "
+                    f"| {mark} {status} |\n")
+        for key in missing:
+            f.write(f"| `{key}` | — | *missing* | — | ❌ missing |\n")
+        verdict = "**FAIL**" if (failures or missing) else "**OK**"
+        f.write(f"\n{verdict}: {len(lines)} tracked, "
+                f"{len(failures)} regressed, {len(missing)} missing\n")
 
 
 def main(argv=None) -> int:
@@ -74,11 +142,15 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--write-baseline", action="store_true",
                     help="record current results as the new baseline")
+    ap.add_argument("--summary", default=os.environ.get(
+        "GITHUB_STEP_SUMMARY"),
+        help="append a markdown summary table to this file "
+             "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args(argv)
 
     got = tracked_metrics(args.results)
     if not got:
-        print(f"recall gate: no tracked bench results under {args.results} "
+        print(f"bench gate: no tracked bench results under {args.results} "
               "(run `python -m benchmarks.run --scale smoke` first)")
         return 1
 
@@ -89,34 +161,39 @@ def main(argv=None) -> int:
         with open(args.baseline, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
-        print(f"recall gate: wrote {len(got)} metrics to {args.baseline}")
+        print(f"bench gate: wrote {len(got)} metrics to {args.baseline}")
         return 0
 
     with open(args.baseline) as f:
         base = json.load(f)
     tol = float(base.get("tolerance", DEFAULT_TOLERANCE))
-    failures, missing = [], []
+    lines, failures, missing = [], [], []
     for key, floor in sorted(base["metrics"].items()):
         if key not in got:
             missing.append(key)
             continue
-        status = "FAIL" if got[key] < floor - tol else "ok"
-        print(f"  [{status}] {key}: {got[key]:.4f} "
-              f"(baseline {floor:.4f}, tolerance {tol})")
-        if status == "FAIL":
+        ok, limit = check_one(key, got[key], floor, tol)
+        status = "ok" if ok else "FAIL"
+        print(f"  [{status}] {key}: {_fmt(got[key])} "
+              f"(baseline {_fmt(floor)}, limit {_fmt(limit)})")
+        lines.append((key, floor, got[key], limit, status))
+        if not ok:
             failures.append(key)
     for key in sorted(set(got) - set(base["metrics"])):
-        print(f"  [new]  {key}: {got[key]:.4f} (not in baseline yet)")
+        print(f"  [new]  {key}: {_fmt(got[key])} (not in baseline yet)")
+        lines.append((key, None, got[key], None, "new"))
 
+    if args.summary:
+        write_summary(args.summary, lines, failures, missing)
     if missing:
-        print(f"recall gate: {len(missing)} tracked metric(s) missing from "
+        print(f"bench gate: {len(missing)} tracked metric(s) missing from "
               f"results: {missing}")
     if failures:
-        print(f"recall gate: FAIL — {len(failures)} metric(s) regressed "
-              f"below baseline - {tol}: {failures}")
+        print(f"bench gate: FAIL — {len(failures)} metric(s) regressed "
+              f"past their limit: {failures}")
     if missing or failures:
         return 1
-    print(f"recall gate: OK ({len(got)} metrics within tolerance)")
+    print(f"bench gate: OK ({len(got)} metrics within tolerance)")
     return 0
 
 

@@ -51,8 +51,10 @@ def main():
           f"recall@10 = {res.recall(true_ids):.4f}")
     res = col.search(wl.q, filters=(wl.lo, wl.hi),
                      params=SearchParams(k=10))
-    print(f"  warm pass: {col.last_stats['cache_hits']} hits, "
-          f"{col.last_stats['transfer_bytes']}B streamed")
+    print(f"  warm pass: {col.last_stats['cache_hits']} hits "
+          f"(hit_rate {col.last_stats['hit_rate']:.2f}), "
+          f"{col.last_stats['transfer_bytes']}B streamed, "
+          f"rerank={col.last_stats['rerank']}")
 
     # 2. a budget barely above the residents -> the streaming engine,
     # with the leftover as the (re-uploaded every call) graph window

@@ -23,9 +23,16 @@ execution engine per batch, so callers never touch ``build_gmg``,
                   hybrid  | int8 +rerank  | LRU cell cache | carried pool
                   ooc     | int8 +rerank  | streamed batch | carried pool
 
+                Two knobs tune the streamed tiers: ``cache_policy``
+                ("size_aware" byte-granular arena + cache-aware wave
+                scheduling, or the legacy "fixed" slots) and ``rerank``
+                ("device" fused gather->distance->top-k, or the "host"
+                numpy loop — bit-identical ids either way).
+
   - persist   — ``col.save(path)`` / ``Collection.load(path)`` round-trip
-                the entire built index, the chosen engine mode and the
-                device budget through one ``.npz`` file.
+                the entire built index, the chosen engine mode, device
+                budget, cache policy and rerank path through one
+                ``.npz`` file.
 """
 
 from __future__ import annotations
@@ -40,6 +47,9 @@ from repro.api.planner import plan_queries
 from repro.api.result import QueryResult
 from repro.api.schema import AttrSchema
 from repro.core import gmg as gmg_mod
+# the engines own the valid knob-value sets; imported for validation
+from repro.core.runtime import CACHE_POLICIES as _CACHE_POLICIES
+from repro.core.runtime import RERANKS as _RERANKS
 from repro.core.types import GMGConfig, GMGIndex, SearchParams
 
 _FORMAT_VERSION = 2
@@ -53,6 +63,7 @@ _INDEX_ARRAYS = ("vectors", "attrs", "perm", "cell_of", "cell_start",
 _MODES = ("auto", "incore", "hybrid", "ooc")
 # historical engine names accepted by Collection.search(engine=...)
 _MODE_ALIASES = {"in_core": "incore", "out_of_core": "ooc"}
+
 
 
 def _canon_mode(mode: str) -> str:
@@ -71,6 +82,14 @@ class Collection:
     schema: AttrSchema
     device_budget_bytes: Optional[int] = None
     mode: str = "auto"
+    # hybrid graph-cache layout: "size_aware" (byte-granular slot arena +
+    # cache-aware wave scheduling) | "fixed" (legacy largest-cell slots,
+    # cache-blind waves — the PR-3 ablation baseline)
+    cache_policy: str = "size_aware"
+    # exact fp32 re-rank of the hybrid/ooc candidate pool: "device" (one
+    # fused gather->distance->k-select program) | "host" (numpy loop);
+    # both return bit-identical ids
+    rerank: str = "device"
 
     def __post_init__(self):
         if len(self.schema) != self.index.attrs.shape[1]:
@@ -78,11 +97,17 @@ class Collection:
                 f"schema has {len(self.schema)} attributes but index stores "
                 f"{self.index.attrs.shape[1]}")
         self.mode = _canon_mode(self.mode)
+        if self.cache_policy not in _CACHE_POLICIES:
+            raise ValueError(f"unknown cache_policy {self.cache_policy!r}; "
+                             f"expected one of {_CACHE_POLICIES}")
+        if self.rerank not in _RERANKS:
+            raise ValueError(f"unknown rerank {self.rerank!r}; "
+                             f"expected one of {_RERANKS}")
         self._in_core = None        # lazily-built Searcher
         self._hybrid = None         # lazily-built HybridEngine
-        self._hybrid_budget = None  # budget the hybrid cache was sized for
+        self._hybrid_key = None     # (budget, policy, rerank) it was built for
         self._out_of_core = None    # lazily-built OutOfCoreEngine
-        self._out_of_core_budget = None   # budget the streamer was built for
+        self._out_of_core_key = None      # (budget, rerank) it was built for
         self._inv_perm = None       # lazily-built original-order inverse
         self.last_stats: dict = {}
 
@@ -194,29 +219,30 @@ class Collection:
                    - self.out_of_core_resident_bytes(), 1)
 
     def _hybrid_engine(self):
-        # rebuilt when the declared budget changes (the cell-cache size
-        # is derived from it at construction)
-        if (self._hybrid is None
-                or self._hybrid_budget != self.device_budget_bytes):
+        # rebuilt when the declared budget / cache policy / rerank path
+        # changes (the cell cache is sized and laid out at construction)
+        key = (self.device_budget_bytes, self.cache_policy, self.rerank)
+        if self._hybrid is None or self._hybrid_key != key:
             from repro.core.hybrid import HybridEngine
             self._hybrid = HybridEngine(
-                self.index, cache_budget_bytes=self._hybrid_cache_budget())
-            self._hybrid_budget = self.device_budget_bytes
+                self.index, cache_budget_bytes=self._hybrid_cache_budget(),
+                cache_policy=self.cache_policy, rerank=self.rerank)
+            self._hybrid_key = key
         return self._hybrid
 
     def _streamer(self):
-        # rebuilt when the declared budget changes (the graph window is
-        # derived from it at construction)
-        if (self._out_of_core is None
-                or self._out_of_core_budget != self.device_budget_bytes):
+        # rebuilt when the declared budget or rerank path changes (the
+        # graph window is derived from the budget at construction)
+        key = (self.device_budget_bytes, self.rerank)
+        if self._out_of_core is None or self._out_of_core_key != key:
             from repro.core.pipeline import OutOfCoreEngine
             window = None
             if self.device_budget_bytes is not None:
                 window = max(self.device_budget_bytes
                              - self.out_of_core_resident_bytes(), 1)
             self._out_of_core = OutOfCoreEngine(
-                self.index, hbm_budget_bytes=window)
-            self._out_of_core_budget = self.device_budget_bytes
+                self.index, hbm_budget_bytes=window, rerank=self.rerank)
+            self._out_of_core_key = key
         return self._out_of_core
 
     def _engine_for(self, which: str):
@@ -238,14 +264,27 @@ class Collection:
                 "device_budget_bytes": self.device_budget_bytes}
         if which in ("hybrid", "ooc"):
             info["resident_bytes"] = self.out_of_core_resident_bytes()
+            info["rerank"] = self.rerank
         if which == "hybrid":
-            # the cache's own sizing rule, evaluated allocation-free —
+            # the cache's own sizing rules, evaluated allocation-free —
             # introspection never builds the engine or its buffers
-            from repro.core.runtime import cache_slot_bytes, plan_cache_slots
-            n_slots = plan_cache_slots(self.index,
-                                       self._hybrid_cache_budget())
-            info["cache_slots"] = n_slots
-            info["cache_bytes"] = n_slots * cache_slot_bytes(self.index)
+            from repro.core.runtime import (
+                cache_row_bytes, cache_slot_bytes, cache_slot_rows,
+                plan_cache_rows, plan_cache_slots)
+            budget = self._hybrid_cache_budget()
+            info["cache_policy"] = self.cache_policy
+            if self.cache_policy == "size_aware":
+                rows = plan_cache_rows(self.index, budget)
+                info["cache_rows"] = rows
+                info["cache_bytes"] = rows * cache_row_bytes(self.index)
+                # largest-cell-slot equivalent, matching the engine's
+                # own n_slots = cap_rows // slot_rows
+                info["cache_slots"] = max(
+                    1, rows // cache_slot_rows(self.index))
+            else:
+                n_slots = plan_cache_slots(self.index, budget)
+                info["cache_slots"] = n_slots
+                info["cache_bytes"] = n_slots * cache_slot_bytes(self.index)
         if which == "ooc":
             info["cells_per_batch"] = self._streamer().cells_per_batch()
         return info
@@ -360,6 +399,8 @@ class Collection:
             "n_seg_bounds": len(idx.seg_bounds),
             "mode": _canon_mode(self.mode),
             "device_budget_bytes": self.device_budget_bytes,
+            "cache_policy": self.cache_policy,
+            "rerank": self.rerank,
         }
         payload["meta_json"] = np.frombuffer(
             json.dumps(meta).encode(), dtype=np.uint8)
@@ -368,12 +409,16 @@ class Collection:
     @classmethod
     def load(cls, path: str,
              device_budget_bytes: Optional[int] = None,
-             mode: Optional[str] = None) -> "Collection":
+             mode: Optional[str] = None,
+             cache_policy: Optional[str] = None,
+             rerank: Optional[str] = None) -> "Collection":
         """Restore a collection saved by :meth:`save`.
 
-        The saved engine mode and device budget are restored so the
-        loaded collection rebuilds the same engine; pass
-        ``device_budget_bytes`` / ``mode`` to override.
+        The saved engine mode, device budget, cache policy and rerank
+        path are restored so the loaded collection rebuilds the same
+        engine; pass ``device_budget_bytes`` / ``mode`` /
+        ``cache_policy`` / ``rerank`` to override (files written before
+        these knobs existed load with today's defaults).
         """
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
@@ -394,5 +439,11 @@ class Collection:
             device_budget_bytes = meta.get("device_budget_bytes")
         if mode is None:
             mode = meta.get("mode", "auto")
+        if cache_policy is None:
+            # pre-knob files load with today's dataclass defaults
+            cache_policy = meta.get("cache_policy", cls.cache_policy)
+        if rerank is None:
+            rerank = meta.get("rerank", cls.rerank)
         return cls(index=index, schema=AttrSchema(meta["schema"]),
-                   device_budget_bytes=device_budget_bytes, mode=mode)
+                   device_budget_bytes=device_budget_bytes, mode=mode,
+                   cache_policy=cache_policy, rerank=rerank)

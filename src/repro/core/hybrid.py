@@ -33,11 +33,23 @@ What makes hybrid cheaper than the streaming engine:
 Per query batch:
   (1) CPU: cell selection -> incidence matrix          (select.py)
   (2) CPU: greedy wave scheduling, Alg. 5 with the cache capacity as the
-      batch bound                                      (scheduler.py)
+      batch bound — *cache-aware*: the placement key scores affinity to
+      the cells the LRU cache already holds from the previous execution
+      (resident cells steer into the earliest wave, so they hit before
+      eviction; misses group with co-accessed residents), and with the
+      size-aware arena each wave packs against the arena's row capacity
+      instead of a fixed slot count                    (scheduler.py)
   (3) per wave: make the wave's cells cache-resident (upload misses,
       evict LRU), run the itinerary traversal over global ids seeded
       from the carried pool, fold survivors back into the pool
-  (4) CPU: exact fp32 re-rank of each query's pool     (runtime.py)
+  (4) exact fp32 re-rank of each query's pool — fused on device by
+      default (``rerank="device"``: one gather->distance->k-select
+      program), or the legacy host loop (``rerank="host"``); both
+      return bit-identical ids                         (runtime.py)
+
+``cache_policy="fixed"`` reproduces the PR-3 baseline wholesale (fixed
+largest-cell slots *and* cache-blind scheduling) — the ablation arm the
+memory-budget bench compares transfer bytes against.
 """
 
 from __future__ import annotations
@@ -63,12 +75,18 @@ class HybridEngine:
     index: GMGIndex
     cache_budget_bytes: Optional[int] = None   # device bytes for the cache
     n_slots: Optional[int] = None              # overrides the byte budget
+    cache_policy: str = "size_aware"           # | "fixed" (PR-3 baseline)
+    rerank: str = "device"                     # | "host" (identical ids)
 
     def __post_init__(self):
+        if self.rerank not in rt_mod.RERANKS:
+            raise ValueError(f"unknown rerank {self.rerank!r}; "
+                             f"expected one of {rt_mod.RERANKS}")
         self.rt = CellRuntime(self.index, storage="int8")
         self.cache = CellCache(self.index,
                                budget_bytes=self.cache_budget_bytes,
-                               n_slots=self.n_slots)
+                               n_slots=self.n_slots,
+                               policy=self.cache_policy)
         self.stats: dict = {}
 
     def resident_bytes(self) -> int:
@@ -97,9 +115,12 @@ class HybridEngine:
             if n_queries is None:
                 raise ValueError("n_queries is required with qmap")
         if B == 0:
-            self.stats = {"n_waves": 0, "cache_hits": 0, "cache_misses": 0,
-                          "transfer_bytes": 0, "n_slots": self.cache.n_slots,
-                          "wall_seconds": 0.0}
+            self.stats = {"n_waves": 0, "total_active": 0,
+                          "cache_hits": 0, "cache_misses": 0,
+                          "hit_rate": 0.0, "transfer_bytes": 0,
+                          "n_slots": self.cache.n_slots,
+                          "cache_policy": self.cache.policy,
+                          "rerank": self.rerank, "wall_seconds": 0.0}
             nq = n_queries if qmap is not None else 0
             return rt_mod.empty_topk(nq, k)
         t_start = time.perf_counter()
@@ -112,8 +133,31 @@ class HybridEngine:
         rank = rt_mod.order_ranks(idx, q, inc)
 
         # (2) wave scheduling: Alg. 5 bounded by the cache capacity, so
-        # every wave's cells are simultaneously resident
-        waves = sched_mod.schedule_cells(inc, self.cache.n_slots)
+        # every wave's cells are simultaneously resident. The size-aware
+        # arena packs waves against its row capacity (per-cell weights)
+        # and seeds the placement key with the cells still resident from
+        # the previous execution; the fixed policy keeps the PR-3
+        # cache-blind slot-count bound.
+        if self.cache.policy == "fixed":
+            waves = sched_mod.schedule_cells(inc, self.cache.n_slots)
+        else:
+            resident = self.cache.resident_cells()
+            waves = sched_mod.schedule_cells(
+                inc, idx.n_cells, resident=resident,
+                weights=self.cache.alloc_rows,
+                capacity=self.cache.cap_rows)
+            # total_active is order-invariant; run the most-resident
+            # wave first so it hits before later waves evict it
+            waves = sched_mod.order_waves(waves, resident,
+                                          weights=self.cache.alloc_rows)
+
+        # itinerary width: one jitted program per width — fixed slots pin
+        # it to the slot count, the arena pow2-pads the widest wave
+        if self.cache.policy == "fixed":
+            W = self.cache.n_slots
+        else:
+            W = max((len(w) for w in waves), default=1)
+            W = 1 << (W - 1).bit_length()
 
         pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
@@ -129,8 +173,7 @@ class HybridEngine:
             transfer += got["bytes"]
             graph = self.rt.cached_graph(self.cache)
 
-            # per-active-query itinerary over *global* cell ids, fixed
-            # width = cache capacity so every wave is one jitted program;
+            # per-active-query itinerary over *global* cell ids;
             # vectorized: selected cells sort by rank (stable, so rank
             # ties keep ascending cell order), unselected pad with -1
             cells_arr = np.asarray(cells, np.int64)
@@ -138,7 +181,7 @@ class HybridEngine:
             key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
                                 np.iinfo(np.int32).max)
             ordr = np.argsort(key_rank, axis=1, kind="stable")
-            itin = np.full((len(act), self.cache.n_slots), -1, np.int32)
+            itin = np.full((len(act), W), -1, np.int32)
             itin[:, :len(cells)] = np.where(
                 np.take_along_axis(sel, ordr, axis=1),
                 cells_arr[ordr], -1).astype(np.int32)
@@ -157,13 +200,23 @@ class HybridEngine:
             "total_active": sched_mod.total_active(inc, waves),
             "cache_hits": hits,
             "cache_misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
             "transfer_bytes": transfer,
             "n_slots": self.cache.n_slots,
+            "cache_policy": self.cache.policy,
+            "resident_cells": len(self.cache.resident_cells()),
+            "rerank": self.rerank,
         }
 
-        # (4) CPU exact re-rank of survivors
-        out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
-                                           cfg.rerank_mult)
+        # (4) exact re-rank of survivors: fused on device by default,
+        # host loop for the legacy/ablation path — bit-identical ids
+        if self.rerank == "device":
+            out_i, out_d = rt_mod.exact_rerank_device(
+                idx, self.rt.attrs_dev, pool, q, lo, hi, k,
+                cfg.rerank_mult)
+        else:
+            out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                               cfg.rerank_mult)
         if qmap is not None:
             self.stats["n_boxes"] = B
             out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,

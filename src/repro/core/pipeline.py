@@ -132,8 +132,20 @@ class OutOfCoreEngine:
 
     index: GMGIndex
     hbm_budget_bytes: Optional[int] = None   # overrides config.batch_cells
+    rerank: str = "device"                   # | "host" (identical ids)
 
     def __post_init__(self):
+        if self.rerank not in rt_mod.RERANKS:
+            raise ValueError(f"unknown rerank {self.rerank!r}; "
+                             f"expected one of {rt_mod.RERANKS}")
+        # NOTE: unlike the hybrid engine, scheduling here deliberately
+        # takes no residency hint — the streaming engine keeps no graph
+        # state across calls (every batch re-stages and the prefetch
+        # pipeline overlaps the copies regardless of order), so a
+        # cache-affinity bias would only make identical query batches
+        # schedule differently depending on call history, for zero
+        # transfer benefit. The cache-aware placement key + wave order
+        # live where a cache does: core/hybrid.py's CellCache.
         self.rt = CellRuntime(self.index, storage="int8")
         # engine-level views (ablation benches/tests poke these directly)
         self.vq = self.rt.store.vq                  # resident (paper §5.1)
@@ -182,7 +194,8 @@ class OutOfCoreEngine:
         if B == 0:
             self.stats = {"n_batches": 0, "total_active": 0,
                           "cells_per_batch": self.cells_per_batch(),
-                          "transfer_bytes": 0, "wall_seconds": 0.0}
+                          "transfer_bytes": 0, "rerank": self.rerank,
+                          "wall_seconds": 0.0}
             nq = n_queries if qmap is not None else 0
             return rt_mod.empty_topk(nq, k)
         t_start = time.perf_counter()
@@ -201,6 +214,7 @@ class OutOfCoreEngine:
             "n_batches": len(batches),
             "total_active": sched_mod.total_active(inc, batches),
             "cells_per_batch": b,
+            "rerank": self.rerank,
         }
 
         # carried per-query candidate pool (global internal ids + dists)
@@ -233,9 +247,15 @@ class OutOfCoreEngine:
 
         self.stats["transfer_bytes"] = transfer_bytes
 
-        # CPU exact re-rank of survivors (paper step 7)
-        out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
-                                           cfg.rerank_mult)
+        # exact re-rank of survivors (paper step 7): fused on device by
+        # default, host loop as the legacy/ablation path (identical ids)
+        if self.rerank == "device":
+            out_i, out_d = rt_mod.exact_rerank_device(
+                idx, self.rt.attrs_dev, pool, q, lo, hi, k,
+                cfg.rerank_mult)
+        else:
+            out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                               cfg.rerank_mult)
         if qmap is not None:
             self.stats["n_boxes"] = B
             out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,

@@ -10,14 +10,19 @@ execution model; this module owns the common machinery so
                  :func:`merge_segment_topk`), the carried per-query
                  candidate pool (:class:`CandidatePool`), itinerary ranks
                  (:func:`order_ranks`) and the exact fp32 re-rank
-                 (:func:`exact_rerank`).
+                 (:func:`exact_rerank`, host loop).
   device side  — vector/graph residency (:class:`CellRuntime` builds the
                  :class:`~repro.core.traversal.VectorStore` /
                  :class:`~repro.core.traversal.GraphView` pytrees and
                  invokes the one jitted traversal core with stable
-                 pow2-padded shapes), plus the bounded LRU graph-cell
-                 cache (:class:`CellCache`) that gives the hybrid mode
-                 its middle memory tier.
+                 pow2-padded shapes), the bounded LRU graph-cell cache
+                 (:class:`CellCache` — a byte-granular size-aware slot
+                 arena by default, fixed largest-cell slots as the legacy
+                 policy) that gives the hybrid mode its middle memory
+                 tier, and the fused device-side re-rank
+                 (:func:`exact_rerank_device`: one jitted
+                 gather->distance->k-select pass, bit-identical ids to
+                 the host loop).
 
 Engine-mode matrix (storage x graph residency x seeding):
 
@@ -175,6 +180,31 @@ def order_ranks(index: GMGIndex, q: np.ndarray,
 
 
 # -- exact fp32 re-rank of pool survivors (paper §5.1 step 7) ----------------
+#
+# Two interchangeable implementations: ``exact_rerank`` (host numpy,
+# per-query loop) and ``exact_rerank_device`` (one jitted
+# gather->distance->k-select program). Both score the same pool prefix
+# and order candidates by exact distance with ties broken toward the
+# earlier pool position (host: stable argsort; device: lax.top_k's
+# documented lower-index-first tie rule via kernels.ops.k_select), and
+# the pool itself is already deterministically ordered by (distance, id)
+# — so whenever the two paths compute equal f32 distances the selected
+# ids match exactly, and engines may flip ``rerank="device"|"host"``
+# freely (enforced across all modes by tests/test_rerank.py).
+#
+# Caveat on the equality premise: numpy's pairwise summation and XLA's
+# reduction order can differ in the last ulp, so two *distinct*
+# candidates whose exact distances agree to within f32 summation error
+# may swap at the k boundary between the paths. Such a swap exchanges
+# candidates of (ulp-)equal exact distance — quality-neutral — but it
+# means the id-equality guarantee is exact-float, not cross-backend
+# bitwise; comparisons across jax versions/accelerators should treat
+# near-tied tails accordingly.
+
+def rerank_width(ef: int, k: int, rerank_mult: int) -> int:
+    """Pool prefix both rerank paths score: min(ef, max(k*mult, k))."""
+    return min(ef, max(k * rerank_mult, k))
+
 
 def exact_rerank(index: GMGIndex, pool: CandidatePool, q: np.ndarray,
                  lo: np.ndarray, hi: np.ndarray, k: int,
@@ -183,7 +213,7 @@ def exact_rerank(index: GMGIndex, pool: CandidatePool, q: np.ndarray,
     Returns ((B, k) i64 *original* ids, (B, k) f32 exact distances)."""
     B = q.shape[0]
     out_i, out_d = empty_topk(B, k)
-    rerank_n = min(pool.ef, max(k * rerank_mult, k))
+    rerank_n = rerank_width(pool.ef, k, rerank_mult)
     for bqi in range(B):
         cand = pool.ids[bqi][pool.ids[bqi] >= 0][:rerank_n]
         if len(cand) == 0:
@@ -193,11 +223,61 @@ def exact_rerank(index: GMGIndex, pool: CandidatePool, q: np.ndarray,
         ok = ((index.attrs[cand] >= lo[bqi]) &
               (index.attrs[cand] <= hi[bqi])).all(axis=1)
         d_exact = np.where(ok, d_exact, np.inf)
-        ordr = np.argsort(d_exact)[:k]
+        # stable: distance ties keep pool order (device-parity contract)
+        ordr = np.argsort(d_exact, kind="stable")[:k]
         keep = d_exact[ordr] < np.inf
         ids = np.where(keep, index.perm[cand[ordr]], -1)
         out_i[bqi, :len(ids)] = ids
         out_d[bqi, :len(ids)] = np.where(keep, d_exact[ordr], np.inf)
+    return out_i, out_d
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rerank_device_core(table, attrs, q, lo, hi, cand, *, k: int):
+    """One fused device pass: gathered-row distances (the traversal's own
+    scalar-prefetch gather kernel), predicate mask from the resident attr
+    table, ascending k-select. cand (B, R) internal ids (-1 pad); table
+    (B*R, dim) f32 candidate rows in cand order."""
+    from repro.kernels import ops
+    B, R = cand.shape
+    valid = cand >= 0
+    flat = jnp.arange(B * R, dtype=jnp.int32).reshape(B, R)
+    d2 = ops.gather_l2(q, table, jnp.where(valid, flat, -1))
+    a = attrs[jnp.maximum(cand, 0)]                       # (B, R, m)
+    ok = (a >= lo[:, None, :]) & (a <= hi[:, None, :])
+    d2 = jnp.where(valid & ok.all(axis=2), d2, jnp.inf)
+    vals, pos = ops.k_select(d2, k)
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    return jnp.where(jnp.isfinite(vals), ids, -1), vals
+
+
+def exact_rerank_device(index: GMGIndex, attrs_dev, pool: CandidatePool,
+                        q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                        k: int, rerank_mult: int):
+    """Device-side exact re-rank: same contract as :func:`exact_rerank`
+    without the per-query host loop — one H2D of the candidates' fp32
+    rows (they are *not* device-resident in the hybrid/ooc modes, only
+    the int8 copy is) and one jitted gather->distance->top-k program;
+    only the final (B, k) block returns to the host.
+    ``attrs_dev`` is the engine's resident attribute table."""
+    B = q.shape[0]
+    R = rerank_width(pool.ef, k, rerank_mult)
+    candp, real = pad_pow2(pool.ids[:, :R].astype(np.int32))
+    qp, _ = pad_pow2(np.asarray(q, np.float32))
+    lop, _ = pad_pow2(np.asarray(lo, np.float32))
+    hip, _ = pad_pow2(np.asarray(hi, np.float32))
+    tbl = index.vectors[np.maximum(candp, 0).reshape(-1)]
+    # k may exceed the candidate width (k > ef): select what exists and
+    # pad back out, exactly like the host loop's short result rows
+    kk = min(k, R)
+    ids, vals = _rerank_device_core(
+        jnp.asarray(tbl), attrs_dev, jnp.asarray(qp), jnp.asarray(lop),
+        jnp.asarray(hip), jnp.asarray(candp), k=kk)
+    ids = np.asarray(ids[:real])
+    vals = np.asarray(vals[:real])
+    out_i, out_d = empty_topk(B, k)
+    out_i[:, :kk] = np.where(ids >= 0, index.perm[np.maximum(ids, 0)], -1)
+    out_d[:, :kk] = np.where(ids >= 0, vals, np.inf)
     return out_i, out_d
 
 
@@ -211,121 +291,269 @@ def _write_slot(buf, block, start):
         buf, block, (start,) + (0,) * (buf.ndim - 1))
 
 
+# arena allocation granularity (rows); bounds fragmentation and the
+# number of distinct upload-block shapes the jitted writer compiles
+ROW_QUANTUM = 8
+
+
+def cache_row_bytes(index: GMGIndex) -> int:
+    """Device bytes one adjacency row costs (intra + inter columns)."""
+    deg = index.intra_adj.shape[1]
+    S, l = index.inter_adj.shape[1], index.inter_adj.shape[2]
+    return (deg + S * l) * 4
+
+
+def cell_alloc_rows(index: GMGIndex) -> np.ndarray:
+    """(S,) rows each cell occupies in the size-aware arena (its own
+    size, quantum-rounded) — the per-cell weight the wave scheduler
+    packs against the arena capacity."""
+    sizes = np.maximum(np.diff(index.cell_start), 1)
+    return ((sizes + ROW_QUANTUM - 1) // ROW_QUANTUM
+            * ROW_QUANTUM).astype(np.int64)
+
+
+def plan_cache_rows(index: GMGIndex, budget_bytes: int | None) -> int:
+    """Arena rows a size-aware :class:`CellCache` allocates under
+    ``budget_bytes`` (None = every cell resident). Never below the
+    largest single cell (a cache that cannot hold its biggest cell
+    cannot run any wave touching it)."""
+    rows = cell_alloc_rows(index)
+    total = int(rows.sum())
+    if budget_bytes is None:
+        return total
+    cap = int(budget_bytes // cache_row_bytes(index))
+    return max(int(rows.max()), min(cap, total))
+
+
 def cache_slot_rows(index: GMGIndex) -> int:
-    """Rows per cache slot: the largest cell, rounded up (quantile
-    partitioning keeps cells near-equal sized, so waste is small)."""
+    """Rows per fixed-policy cache slot: the largest cell, rounded up.
+    Skewed cell-size distributions pay this padding on *every* slot —
+    the waste the size-aware arena exists to reclaim."""
     sizes = np.diff(index.cell_start)
-    return round_up(max(int(sizes.max()), 1), 8)
+    return round_up(max(int(sizes.max()), 1), ROW_QUANTUM)
 
 
 def cache_slot_bytes(index: GMGIndex) -> int:
-    """Device bytes one cache slot costs (intra + inter adjacency rows);
-    used by the engine dispatcher to size/viability-check a hybrid cache
-    without building one."""
-    deg = index.intra_adj.shape[1]
-    S, l = index.inter_adj.shape[1], index.inter_adj.shape[2]
-    return cache_slot_rows(index) * (deg + S * l) * 4
+    """Device bytes one fixed-policy cache slot costs (intra + inter
+    adjacency rows); used by the engine dispatcher to size/viability-check
+    a hybrid cache without building one."""
+    return cache_slot_rows(index) * cache_row_bytes(index)
 
 
 def plan_cache_slots(index: GMGIndex, budget_bytes: int | None) -> int:
-    """Slots a :class:`CellCache` allocates under ``budget_bytes``
-    (None = one per cell). The single sizing rule shared by the cache
-    constructor and ``Collection.plan``'s allocation-free introspection."""
+    """Slots a fixed-policy :class:`CellCache` allocates under
+    ``budget_bytes`` (None = one per cell). The single sizing rule shared
+    by the cache constructor and ``Collection.plan``'s allocation-free
+    introspection."""
     S = index.n_cells
     if budget_bytes is None:
         return S
     return max(1, min(int(budget_bytes // cache_slot_bytes(index)), S))
 
 
+CACHE_POLICIES = ("size_aware", "fixed")
+
+# valid exact-rerank paths (see the re-rank section above); shared by the
+# engines and the Collection facade so the set lives in one place
+RERANKS = ("device", "host")
+
+
 class CellCache:
-    """Device-resident LRU cache of graph cells in fixed-size slots.
+    """Device-resident LRU cache of graph cells.
 
-    The grid partitions on attribute quantiles, so cells are near-equal
-    sized; one slot = ``slot_rows`` adjacency rows (the largest cell,
-    rounded up), which keeps every upload the same shape — one jitted
-    ``dynamic_update_slice`` program serves all slots.
+    Two allocation policies over the same contract (``ensure`` a wave of
+    cells, read back ``cell_base`` indirection, LRU-evict whole cells):
 
-    Node ids stay *global*: a traversal finds node u's adjacency row at
-    ``u + cell_base[cell_of[u]]`` inside the cache buffers (see
-    ``GraphView``), so no per-batch remap work and no id translation of
-    carried candidates — the whole point of the hybrid tier.
+    ``policy="size_aware"`` (default) — a byte-granular slot *arena*:
+    each cell occupies exactly its own rows (quantum-rounded), allocated
+    first-fit over a free-extent list with LRU eviction of whole cells.
+    Skewed cell-size distributions stop paying largest-cell padding on
+    every slot, so the same byte budget keeps more cells resident. When
+    first-fit fails on fragmentation (want-pinned extents splitting the
+    free space), surviving cells are compacted to the front and the
+    allocation retried — ``compactions`` counts those re-uploads.
+
+    ``policy="fixed"`` — the legacy equal-slot layout (one slot = the
+    largest cell, rounded up) with cache-blind scheduling upstream; kept
+    as the PR-3 baseline the memory-budget bench ablates against.
+
+    Node ids stay *global* under both policies: a traversal finds node
+    u's adjacency row at ``u + cell_base[cell_of[u]]`` inside the cache
+    buffers (see ``GraphView``), so no per-batch remap work and no id
+    translation of carried candidates — the whole point of the hybrid
+    tier. The traversal core never addresses a row outside a resident
+    cell's extent: ``cell_base`` is ``UNCACHED`` for absent cells and
+    in-extent pad rows hold -1 adjacency.
     """
 
     def __init__(self, index: GMGIndex, budget_bytes: int | None = None,
-                 n_slots: int | None = None):
+                 n_slots: int | None = None, policy: str = "size_aware"):
+        if policy not in CACHE_POLICIES:
+            raise ValueError(f"unknown cache policy {policy!r}; "
+                             f"expected one of {CACHE_POLICIES}")
         self.index = index
-        self.slot_rows = cache_slot_rows(index)
+        self.policy = policy
+        S = index.inter_adj.shape[1]
         deg = index.intra_adj.shape[1]
-        S, l = index.inter_adj.shape[1], index.inter_adj.shape[2]
+        l = index.inter_adj.shape[2]
+        self.row_bytes = cache_row_bytes(index)
+        self.slot_rows = cache_slot_rows(index)
         self.bytes_per_slot = cache_slot_bytes(index)
-        if n_slots is None:
-            self.n_slots = plan_cache_slots(index, budget_bytes)
+        self.alloc_rows = cell_alloc_rows(index)
+        if policy == "fixed":
+            if n_slots is None:
+                self.n_slots = plan_cache_slots(index, budget_bytes)
+            else:
+                self.n_slots = max(1, min(int(n_slots), S))
+            self.cap_rows = self.n_slots * self.slot_rows
         else:
-            self.n_slots = max(1, min(int(n_slots), S))
-        cap = self.n_slots * self.slot_rows
-        self.intra_buf = jnp.full((cap, deg), -1, jnp.int32)
-        self.inter_buf = jnp.full((cap, S, l), -1, jnp.int32)
-        self._lru: "collections.OrderedDict[int, int]" = \
-            collections.OrderedDict()           # cell -> slot
-        self._free = list(range(self.n_slots))
+            if n_slots is not None:
+                # back-compat: n_slots expressed in largest-cell units
+                self.cap_rows = max(1, min(int(n_slots), S)) * self.slot_rows
+            else:
+                self.cap_rows = plan_cache_rows(index, budget_bytes)
+            self.n_slots = max(1, self.cap_rows // self.slot_rows)
+        self.intra_buf = jnp.full((self.cap_rows, deg), -1, jnp.int32)
+        self.inter_buf = jnp.full((self.cap_rows, S, l), -1, jnp.int32)
+        # cell -> (start_row, rows); insertion order is the LRU order
+        self._lru: "collections.OrderedDict[int, tuple[int, int]]" = \
+            collections.OrderedDict()
+        self._free: list[tuple[int, int]] = [(0, self.cap_rows)]
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.compactions = 0
         self.bytes_uploaded = 0
 
     def capacity_bytes(self) -> int:
-        return self.n_slots * self.bytes_per_slot
+        return self.cap_rows * self.row_bytes
+
+    def resident_cells(self) -> frozenset:
+        """Cells currently resident — the scheduler's affinity seed."""
+        return frozenset(self._lru)
+
+    def hit_rate(self) -> float:
+        """Lifetime hit fraction of ``ensure`` lookups."""
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def _rows_of(self, c: int) -> int:
+        return self.slot_rows if self.policy == "fixed" \
+            else int(self.alloc_rows[c])
 
     def ensure(self, cells) -> dict:
-        """Make every cell in ``cells`` resident (len <= n_slots),
-        evicting least-recently-used cells outside the request. Returns
-        per-call stats."""
+        """Make every cell in ``cells`` resident (their summed rows must
+        fit the arena), evicting least-recently-used cells outside the
+        request. Returns per-call stats."""
         cells = list(cells)
-        if len(cells) > self.n_slots:
-            raise ValueError(
-                f"wave of {len(cells)} cells exceeds cache capacity "
-                f"{self.n_slots}")
         want = set(cells)
+        need = sum(self._rows_of(c) for c in want)
+        if need > self.cap_rows:
+            raise ValueError(
+                f"wave of {len(cells)} cells needs {need} rows, exceeds "
+                f"cache capacity {self.cap_rows}")
         hits = misses = 0
+        # measure actual H2D traffic via the upload counter so the
+        # re-uploads a compaction performs count too — transfer_bytes is
+        # a CI-gated metric and must not undercount churn
+        bytes_before = self.bytes_uploaded
         for c in cells:
             if c in self._lru:
                 self._lru.move_to_end(c)
                 hits += 1
                 continue
             misses += 1
-            if not self._free:
-                # evict the LRU cell not needed by this wave
-                victim = next(cc for cc in self._lru if cc not in want)
-                self._free.append(self._lru.pop(victim))
-                self.evictions += 1
-            slot = self._free.pop()
-            self._upload(c, slot)
-            self._lru[c] = slot
+            rows = self._rows_of(c)
+            start = self._alloc(rows, want)
+            self._upload(c, start, rows)
+            self._lru[c] = (start, rows)
             self._lru.move_to_end(c)
         self.hits += hits
         self.misses += misses
         return {"hits": hits, "misses": misses,
-                "bytes": misses * self.bytes_per_slot}
+                "bytes": self.bytes_uploaded - bytes_before}
 
-    def _upload(self, c: int, slot: int) -> None:
+    # -- arena bookkeeping --------------------------------------------------
+
+    def _try_fit(self, rows: int):
+        """Carve ``rows`` from the first free extent that fits, or None."""
+        for i, (s, ln) in enumerate(self._free):
+            if ln >= rows:
+                if ln == rows:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (s + rows, ln - rows)
+                return s
+        return None
+
+    def _alloc(self, rows: int, want: set) -> int:
+        """First-fit over the free extents; evict LRU cells outside the
+        current wave until a fit exists, compacting as a last resort."""
+        while True:
+            start = self._try_fit(rows)
+            if start is not None:
+                return start
+            victim = next((cc for cc in self._lru if cc not in want), None)
+            if victim is not None:
+                self._release(victim)
+                self.evictions += 1
+                continue
+            # every resident cell is wanted: free space exists (the
+            # capacity check passed) but is fragmented around pinned
+            # extents — repack survivors and retry
+            self._compact()
+            start = self._try_fit(rows)
+            if start is not None:
+                return start
+            raise ValueError(
+                f"cannot place {rows} rows in a {self.cap_rows}-row cache")
+
+    def _release(self, c: int) -> None:
+        start, rows = self._lru.pop(c)
+        self._free.append((start, rows))
+        # keep extents sorted + coalesced so first-fit stays first-fit
+        self._free.sort()
+        merged = [self._free[0]]
+        for s, ln in self._free[1:]:
+            ps, pl = merged[-1]
+            if ps + pl == s:
+                merged[-1] = (ps, pl + ln)
+            else:
+                merged.append((s, ln))
+        self._free = merged
+
+    def _compact(self) -> None:
+        """Repack resident cells to the arena front (LRU order kept),
+        re-uploading moved cells; frees one contiguous tail extent."""
+        self.compactions += 1
+        cursor = 0
+        for c in list(self._lru):
+            start, rows = self._lru[c]
+            if start != cursor:
+                self._upload(c, cursor, rows)
+                self._lru[c] = (cursor, rows)
+            cursor += rows
+        self._free = [(cursor, self.cap_rows - cursor)] \
+            if cursor < self.cap_rows else []
+
+    def _upload(self, c: int, start: int, rows: int) -> None:
         idx = self.index
         s, e = int(idx.cell_start[c]), int(idx.cell_start[c + 1])
         deg = idx.intra_adj.shape[1]
         S, l = idx.inter_adj.shape[1], idx.inter_adj.shape[2]
-        bi = np.full((self.slot_rows, deg), -1, np.int32)
-        bx = np.full((self.slot_rows, S, l), -1, np.int32)
+        bi = np.full((rows, deg), -1, np.int32)
+        bx = np.full((rows, S, l), -1, np.int32)
         bi[:e - s] = idx.intra_adj[s:e]
         bx[:e - s] = idx.inter_adj[s:e]
-        start = jnp.int32(slot * self.slot_rows)
-        self.intra_buf = _write_slot(self.intra_buf, jnp.asarray(bi), start)
-        self.inter_buf = _write_slot(self.inter_buf, jnp.asarray(bx), start)
+        at = jnp.int32(start)
+        self.intra_buf = _write_slot(self.intra_buf, jnp.asarray(bi), at)
+        self.inter_buf = _write_slot(self.inter_buf, jnp.asarray(bx), at)
         self.bytes_uploaded += bi.nbytes + bx.nbytes
 
     def cell_base(self) -> np.ndarray:
-        """(S,) i32: slot base minus cell_start (UNCACHED when absent)."""
+        """(S,) i32: arena base minus cell_start (UNCACHED when absent)."""
         base = np.full(self.index.n_cells, UNCACHED, np.int32)
-        for c, slot in self._lru.items():
-            base[c] = slot * self.slot_rows - int(self.index.cell_start[c])
+        for c, (start, _) in self._lru.items():
+            base[c] = start - int(self.index.cell_start[c])
         return base
 
 

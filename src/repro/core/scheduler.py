@@ -4,17 +4,44 @@ Host-side greedy: place each cell into the batch (capacity b) whose active
 query count grows least — minimizing sum_k Active(B_k), the number of live
 per-query traversal states the accelerator must keep resident per batch.
 
-Deterministic by construction: cells are visited in ascending id order
-and each placement minimizes the explicit lexicographic key
-``(added_active, current_active, batch_index)`` — equal-gain ties break
-toward the currently-least-active batch (exactly as Alg. 5) and then
-toward the lowest batch index, so identical incidence always yields an
-identical batch plan (reproducible streamed/hybrid executions).
+Placement key (lexicographic, smaller wins)::
+
+    (added_active, cache_affinity, current_active, batch_index)
+
+``added_active`` is Alg. 5's objective and always dominates.
+``cache_affinity`` is the locality extension (0 unless the caller hands a
+``resident`` cell set, so the base algorithm is byte-identical to Alg. 5):
+
+  - a cell already resident in the caller's device cell cache scores its
+    *batch index*, steering it into the earliest wave under equal gain —
+    it executes before LRU eviction can claim its slot, turning the
+    upload it would otherwise cost into a cache hit;
+  - a non-resident cell scores ``-overlap``: the number of its queries
+    shared with resident cells already placed in that batch. Co-accessed
+    cells travel together, so a miss lands in the wave whose resident
+    members its queries already need (RNSG-style range locality).
+
+The final ``(current_active, batch_index)`` pair preserves the existing
+deterministic tie-break — equal-gain equal-affinity ties resolve toward
+the currently-least-active batch (exactly as Alg. 5) and then the lowest
+batch index, so identical inputs always yield an identical batch plan
+(reproducible streamed/hybrid executions).
+
+Size-aware capacity: with ``weights`` (rows each cell occupies in the
+device arena) and ``capacity`` (total arena rows), a batch only admits a
+cell whose weight still fits — every scheduled wave is simultaneously
+residentable in a byte-granular cell cache. New batches are appended
+deterministically when no existing batch can admit a cell.
+
+Because Eq. 3's objective sums over waves it is invariant under wave
+*order*; :func:`order_waves` exploits that freedom to run the waves
+holding the most already-resident rows first — the transfer half of the
+cache-aware schedule, at zero total_active cost.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -27,36 +54,121 @@ def active_queries(incidence: np.ndarray, batch: Sequence[int]) -> int:
 
 
 def schedule_cells(incidence: np.ndarray, batch_size: int,
-                   cells: Sequence[int] | None = None) -> list[list[int]]:
-    """Alg. 5. incidence: (m_queries, n_cells) bool; returns batches of
-    cell ids, each |batch| <= batch_size, covering `cells` (default: every
-    cell touched by at least one query)."""
+                   cells: Sequence[int] | None = None, *,
+                   resident: Optional[Iterable[int]] = None,
+                   weights: Optional[np.ndarray] = None,
+                   capacity: Optional[int] = None) -> list[list[int]]:
+    """Alg. 5 with optional cache affinity and size-aware capacity.
+
+    incidence: (m_queries, n_cells) bool; returns batches of cell ids,
+    each |batch| <= batch_size, covering `cells` (default: every cell
+    touched by at least one query).
+
+    resident: cells currently held by the caller's device cell cache
+    (e.g. ``CellCache.resident_cells()``); biases equal-gain placements
+    toward cache hits (see module docstring). None = pure Alg. 5.
+    weights/capacity: per-cell arena rows and the arena row total; a
+    batch additionally admits a cell only while its summed weight fits.
+    """
     m, n = incidence.shape
     if cells is None:
         cells = [c for c in range(n) if incidence[:, c].any()]
     cells = sorted(int(c) for c in cells)      # deterministic visit order
+    res = frozenset(int(c) for c in resident) if resident is not None \
+        else frozenset()
+    if weights is not None:
+        weights = np.asarray(weights)
+        if capacity is None:
+            raise ValueError("weights requires capacity")
+        too_big = [c for c in cells if int(weights[c]) > capacity]
+        if too_big:
+            raise ValueError(
+                f"cells {too_big} exceed the batch capacity {capacity} "
+                "on their own")
     n_batches = max(1, -(-len(cells) // batch_size))
     batches: list[list[int]] = [[] for _ in range(n_batches)]
     # incremental active masks per batch: queries already active
     active_mask = [np.zeros(m, dtype=bool) for _ in range(n_batches)]
     active_cnt = [0] * n_batches
+    # queries covered by *resident* members of each batch (affinity term)
+    res_mask = [np.zeros(m, dtype=bool) for _ in range(n_batches)]
+    weight_used = [0] * n_batches
+
+    def admits(k: int, c: int) -> bool:
+        if len(batches[k]) >= batch_size:
+            return False
+        if weights is not None and \
+                weight_used[k] + int(weights[c]) > capacity:
+            return False
+        return True
 
     for c in cells:
         col = incidence[:, c]
-        # stable placement: lexicographic (added_active, current_active,
-        # batch_index) — ties under equal gain always resolve the same way
-        best_k, best_key = -1, None
+        # stable placement: lexicographic (added_active, cache_affinity,
+        # current_active, batch_index) — ties under equal gain and equal
+        # affinity always resolve the same way
+        best_k, best_key, best_inc = -1, None, 0
         for k in range(n_batches):
-            if len(batches[k]) >= batch_size:
+            if not admits(k, c):
                 continue
             inc = int((col & ~active_mask[k]).sum())
-            cand = (inc, active_cnt[k], k)
+            if res:
+                aff = k if c in res else -int((col & res_mask[k]).sum())
+            else:
+                aff = 0
+            cand = (inc, aff, active_cnt[k], k)
             if best_key is None or cand < best_key:
-                best_k, best_key = k, cand
+                best_k, best_key, best_inc = k, cand, inc
+        if best_k < 0:
+            # capacity-constrained: no existing batch admits this cell;
+            # open a new one (deterministic: always appended at the end)
+            best_k = n_batches
+            best_inc = int(col.sum())
+            n_batches += 1
+            batches.append([])
+            active_mask.append(np.zeros(m, dtype=bool))
+            active_cnt.append(0)
+            res_mask.append(np.zeros(m, dtype=bool))
+            weight_used.append(0)
         batches[best_k].append(c)
         active_mask[best_k] |= col
-        active_cnt[best_k] = int(active_mask[best_k].sum())
+        # incremental: the placement's own gain IS the count delta —
+        # recomputing the O(m) mask sum per placement was pure waste
+        active_cnt[best_k] += best_inc
+        if c in res:
+            res_mask[best_k] |= col
+        if weights is not None:
+            weight_used[best_k] += int(weights[c])
     return [b for b in batches if b]
+
+
+def order_waves(batches: list[list[int]],
+                resident: Optional[Iterable[int]] = None,
+                weights: Optional[np.ndarray] = None) -> list[list[int]]:
+    """Cache-aware execution order for a batch plan.
+
+    ``total_active`` (Eq. 3) sums over waves, so it is *invariant under
+    wave order* — but an LRU cell cache is not: cells resident from the
+    previous execution only hit if their wave runs before later waves
+    evict them. Run the waves with the most resident rows first (ties:
+    original greedy order), turning the previous execution's tail into
+    this execution's warm head. ``weights`` scores residency in arena
+    rows (bytes saved); without it each resident cell counts 1.
+    """
+    if resident is None:
+        return batches
+    res = frozenset(int(c) for c in resident)
+    if not res:
+        return batches
+
+    def saved(batch):
+        if weights is None:
+            return sum(1 for c in batch if c in res)
+        return sum(int(weights[c]) for c in batch if c in res)
+
+    order = sorted(range(len(batches)),
+                   key=lambda i: (-saved(batches[i]), i))
+    return [batches[i] for i in order]
 
 
 def naive_schedule(incidence: np.ndarray, batch_size: int) -> list[list[int]]:

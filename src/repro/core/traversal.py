@@ -89,6 +89,15 @@ class GraphView(NamedTuple):
     adjacency row lives at ``u + cell_base[cell_of[u]]`` in the cache
     buffers, or nowhere when ``cell_base[...] == UNCACHED`` (ids stay
     global; only the adjacency lookup indirects).
+
+    Bounds contract for the indirection: bases are *arbitrary* per-cell
+    offsets (the size-aware arena packs variable-length extents, so
+    bases are not slot multiples), and a resident cell's extent covers
+    at least its row count — every ``u + base`` of a cached node lands
+    inside its own extent by construction. Quantum-pad rows inside an
+    extent hold -1 adjacency and are never addressed; ``_slot_of``'s
+    clip only guards the UNCACHED sentinel arithmetic, whose lanes are
+    masked off before use.
     """
     intra: jax.Array
     inter: jax.Array | None

@@ -17,6 +17,11 @@ arbitrary nb and is what we validate.
 
 Negative indices are "no neighbor" slots: the index_map clamps them to row
 0 and the body overwrites the result with +inf.
+
+Besides the traversal inner loop, this kernel also carries the device-side
+exact re-rank (runtime.exact_rerank_device): candidate fp32 rows upload as
+a scratch table and one gather->distance->k-select program replaces the
+per-query host loop.
 """
 
 from __future__ import annotations

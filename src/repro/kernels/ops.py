@@ -90,6 +90,19 @@ def topk_l2(q, v, k: int, bias=None):
     return vals, idx
 
 
+def k_select(scores, k: int):
+    """Row-wise ascending k-select over precomputed scores.
+
+    scores (B, n) f32 -> (vals (B, k), pos (B, k)) with vals ascending.
+    Ties resolve toward the *lower column index* (lax.top_k's documented
+    tie rule) — the contract the device-side exact re-rank relies on to
+    stay bit-identical with the host path's stable argsort. +inf rows
+    pass through (callers mask invalid slots to +inf and drop them by
+    ``isfinite``)."""
+    neg, pos = jax.lax.top_k(-scores, k)
+    return -neg, pos
+
+
 def int8_l2(qq, q_scale, vq, v_scale):
     """Quantized distance matrix. qq (B,d) i8, vq (N,d) i8, scales (B,)/(N,)."""
     if not config.use_pallas():

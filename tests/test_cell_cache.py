@@ -1,0 +1,144 @@
+"""Size-aware cell-cache arena (ISSUE 4): skewed-size packing beats the
+fixed-slot layout, eviction/compaction keep the id indirection exact,
+and hit-rate statistics behave on repeated workloads."""
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import (
+    ROW_QUANTUM, CellCache, cache_row_bytes, cache_slot_bytes,
+    cell_alloc_rows, plan_cache_rows)
+from repro.core.traversal import UNCACHED
+from repro.core.types import GMGConfig, GMGIndex
+
+
+def synth_index(sizes, deg=4, l=2, dim=8, seed=0):
+    """Minimal GMGIndex with hand-chosen (skewed) cell sizes."""
+    sizes = list(sizes)
+    n, S = sum(sizes), len(sizes)
+    rng = np.random.default_rng(seed)
+    cell_start = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return GMGIndex(
+        config=GMGConfig(seg_per_attr=(S,)),
+        vectors=rng.normal(size=(n, dim)).astype(np.float32),
+        attrs=rng.normal(size=(n, 1)).astype(np.float32),
+        perm=np.arange(n),
+        seg_bounds=[np.linspace(0, 1, S + 1).astype(np.float32)],
+        cell_of=np.repeat(np.arange(S), sizes).astype(np.int32),
+        cell_start=cell_start,
+        cell_lo=np.zeros((S, 1), np.float32),
+        cell_hi=np.ones((S, 1), np.float32),
+        intra_adj=rng.integers(-1, n, (n, deg)).astype(np.int32),
+        inter_adj=rng.integers(-1, n, (n, S, l)).astype(np.int32),
+        centroids=np.zeros((2, dim), np.float32),
+        hist=np.zeros((S, 2), np.float32))
+
+
+def assert_consistent(cache, index):
+    """Every resident cell's rows must read back exactly through the
+    cell_base indirection; absent cells must be UNCACHED."""
+    base = cache.cell_base()
+    intra = np.asarray(cache.intra_buf)
+    resident = cache.resident_cells()
+    for c in range(index.n_cells):
+        if c not in resident:
+            assert base[c] == UNCACHED
+            continue
+        s, e = int(index.cell_start[c]), int(index.cell_start[c + 1])
+        lo, hi = base[c] + s, base[c] + e
+        assert 0 <= lo and hi <= intra.shape[0]
+        np.testing.assert_array_equal(intra[lo:hi], index.intra_adj[s:e])
+
+
+def test_skewed_sizes_fit_more_cells_than_fixed_slots():
+    """One giant cell + many small ones: the arena keeps all the small
+    cells resident in a budget where the fixed layout holds just two
+    slots (every slot pays the giant cell's padding)."""
+    idx = synth_index([40, 8, 8, 8, 8, 8])
+    budget = 2 * cache_slot_bytes(idx)          # rows for 2 largest-cell slots
+    fixed = CellCache(idx, budget_bytes=budget, policy="fixed")
+    arena = CellCache(idx, budget_bytes=budget, policy="size_aware")
+    assert fixed.n_slots == 2
+    small = [1, 2, 3, 4, 5]
+    with pytest.raises(ValueError):
+        fixed.ensure(small)                     # 5 cells > 2 slots
+    arena.ensure(small)                         # 5 * 8 = 40 of 80 rows
+    assert arena.resident_cells() == frozenset(small)
+    assert_consistent(arena, idx)
+    # and the giant cell still fits alongside some of them
+    arena.ensure([0, 4, 5])
+    assert {0, 4, 5} <= arena.resident_cells()
+    assert_consistent(arena, idx)
+
+
+def test_eviction_keeps_ids_consistent():
+    """Random ensure waves under a tight budget: after every call the
+    cell_base indirection must read back the exact adjacency rows."""
+    idx = synth_index([24, 16, 8, 32, 8, 16, 8, 24], seed=1)
+    rows = cell_alloc_rows(idx)
+    cap = int(rows.sum()) // 2
+    cache = CellCache(idx, budget_bytes=cap * cache_row_bytes(idx))
+    rng = np.random.default_rng(2)
+    for _ in range(30):
+        wave = []
+        budget = cache.cap_rows
+        for c in rng.permutation(idx.n_cells):
+            if rows[c] <= budget:
+                wave.append(int(c))
+                budget -= int(rows[c])
+        cache.ensure(wave)
+        assert {int(c) for c in wave} <= cache.resident_cells()
+        assert_consistent(cache, idx)
+    assert cache.evictions > 0                  # the regime actually churns
+
+
+def test_compaction_defragments_pinned_extents():
+    """A wave whose cells are all wanted but fragmented around pinned
+    extents triggers a compaction, not a failure."""
+    idx = synth_index([16, 8, 24, 8, 16])
+    cap_rows = 48
+    cache = CellCache(idx, budget_bytes=cap_rows * cache_row_bytes(idx))
+    assert cache.cap_rows == cap_rows
+    cache.ensure([0, 1, 3])          # layout: 0@[0,16) 1@[16,24) 3@[24,32)
+    cache.ensure([1, 3, 2])          # 2 needs 24 contiguous rows: evicting
+    #                                  0 leaves (0,16)+(32,16) split ->
+    #                                  compact 1,3 to the front, place 2
+    assert cache.compactions == 1
+    assert cache.resident_cells() == frozenset({1, 2, 3})
+    assert_consistent(cache, idx)
+
+
+def test_hit_rate_monotone_on_repeated_workload():
+    """Re-ensuring a fitting wave is all hits: misses stop growing after
+    the cold pass and the lifetime hit rate rises monotonically."""
+    idx = synth_index([16, 8, 8, 16])
+    cache = CellCache(idx, budget_bytes=None)   # everything fits
+    wave = [0, 1, 2, 3]
+    cache.ensure(wave)
+    assert cache.hits == 0 and cache.misses == 4
+    last = cache.hit_rate()
+    for _ in range(5):
+        got = cache.ensure(wave)
+        assert got["misses"] == 0 and got["bytes"] == 0
+        assert cache.hit_rate() >= last
+        last = cache.hit_rate()
+    assert cache.misses == 4
+    assert last == pytest.approx(20 / 24)
+
+
+def test_capacity_checks_and_policy_validation():
+    idx = synth_index([16, 8, 8])
+    with pytest.raises(ValueError):
+        CellCache(idx, policy="bogus")
+    cache = CellCache(idx, budget_bytes=1)      # clamps to the largest cell
+    assert cache.cap_rows == max(cell_alloc_rows(idx))
+    with pytest.raises(ValueError):
+        cache.ensure([0, 1, 2])                 # 32 rows > 16-row arena
+    assert plan_cache_rows(idx, None) == int(cell_alloc_rows(idx).sum())
+
+
+def test_alloc_rows_quantized():
+    idx = synth_index([13, 1, 8])
+    rows = cell_alloc_rows(idx)
+    assert rows.tolist() == [16, 8, 8]
+    assert all(r % ROW_QUANTUM == 0 for r in rows)

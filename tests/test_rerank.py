@@ -1,0 +1,111 @@
+"""Device-side exact re-rank (ISSUE 4): the fused gather->distance->
+k-select program must return bit-identical ids to the host numpy loop
+across every engine mode, through the Collection facade, and under
+disjunctive (qmap-folded) plans."""
+
+import numpy as np
+import pytest
+
+from repro.api import Collection, F
+from repro.core.hybrid import HybridEngine
+from repro.core.pipeline import OutOfCoreEngine
+from repro.core.types import SearchParams
+
+
+@pytest.mark.parametrize("engine_cls", [HybridEngine, OutOfCoreEngine])
+def test_device_host_rerank_bit_identical(engine_cls, small_index,
+                                          small_queries):
+    wl = small_queries
+    params = SearchParams(k=10, ef=64)
+    ids_h, d_h = engine_cls(small_index, rerank="host").search(
+        wl.q, wl.lo, wl.hi, params)
+    ids_d, d_d = engine_cls(small_index, rerank="device").search(
+        wl.q, wl.lo, wl.hi, params)
+    np.testing.assert_array_equal(ids_h, ids_d)
+    finite = np.isfinite(d_h)
+    np.testing.assert_array_equal(finite, np.isfinite(d_d))
+    np.testing.assert_allclose(d_h[finite], d_d[finite],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_parity_through_collection_all_modes(small_collection,
+                                                    small_queries):
+    """Engine parity across the three modes: flipping the Collection's
+    rerank knob never changes the returned ids (incore has no rerank
+    stage — trivially identical — hybrid/ooc run the two paths)."""
+    wl = small_queries
+    col = small_collection
+    budget = col.hybrid_min_bytes() + (1 << 18)
+    for mode in ("incore", "hybrid", "ooc"):
+        res = {}
+        for rr in ("host", "device"):
+            c = Collection(index=col.index, schema=col.schema,
+                           device_budget_bytes=budget, mode=mode,
+                           rerank=rr)
+            res[rr] = c.search(wl.q, filters=(wl.lo, wl.hi),
+                               params=SearchParams(k=10, ef=64))
+            assert res[rr].engine == mode
+        np.testing.assert_array_equal(res["host"].ids, res["device"].ids)
+
+
+def test_rerank_parity_disjunctive(small_collection, small_data,
+                                   small_queries):
+    """The segment-aware top-k fold consumes rerank output — identical
+    ids must survive a box-batched disjunctive pass too."""
+    v, a = small_data
+    wl = small_queries
+    col = small_collection
+    p10, p90 = np.quantile(a[:, 0], [0.10, 0.90])
+    union = (F("price") < float(p10)) | (F("price") > float(p90))
+    budget = col.hybrid_min_bytes() + (1 << 18)
+    res = {}
+    for rr in ("host", "device"):
+        c = Collection(index=col.index, schema=col.schema,
+                       device_budget_bytes=budget, mode="hybrid", rerank=rr)
+        res[rr] = c.search(wl.q, filters=union, k=10, ef=64)
+    np.testing.assert_array_equal(res["host"].ids, res["device"].ids)
+
+
+def test_device_rerank_k_wider_than_pool(small_index, small_queries):
+    """k > ef: the candidate pool is narrower than k — the device path
+    must pad short rows with -1/inf exactly like the host loop instead
+    of feeding an oversized k to lax.top_k."""
+    wl = small_queries
+    params = SearchParams(k=40, ef=24)
+    ids_h, d_h = HybridEngine(small_index, rerank="host").search(
+        wl.q, wl.lo, wl.hi, params)
+    ids_d, d_d = HybridEngine(small_index, rerank="device").search(
+        wl.q, wl.lo, wl.hi, params)
+    assert ids_d.shape == (len(wl.q), 40)
+    np.testing.assert_array_equal(ids_h, ids_d)
+    assert (ids_d[:, 24:] == -1).all() and np.isinf(d_d[:, 24:]).all()
+
+
+def test_rerank_rejects_unknown_path(small_index):
+    with pytest.raises(ValueError):
+        HybridEngine(small_index, rerank="gpu")
+    with pytest.raises(ValueError):
+        OutOfCoreEngine(small_index, rerank="gpu")
+
+
+def test_knobs_save_load_round_trip(tmp_path, small_collection):
+    """cache_policy / rerank ride through save -> load like mode does."""
+    col = Collection(index=small_collection.index,
+                     schema=small_collection.schema,
+                     device_budget_bytes=1 << 26, mode="hybrid",
+                     cache_policy="fixed", rerank="host")
+    path = str(tmp_path / "col.npz")
+    col.save(path)
+    back = Collection.load(path)
+    assert back.mode == "hybrid"
+    assert back.cache_policy == "fixed"
+    assert back.rerank == "host"
+    assert back.device_budget_bytes == 1 << 26
+    # overrides still win
+    over = Collection.load(path, cache_policy="size_aware", rerank="device")
+    assert over.cache_policy == "size_aware" and over.rerank == "device"
+    # validation happens at construction
+    with pytest.raises(ValueError):
+        Collection(index=col.index, schema=col.schema, cache_policy="huge")
+    with pytest.raises(ValueError):
+        Collection(index=col.index, schema=col.schema, rerank="gpu")

@@ -74,6 +74,111 @@ def test_schedule_reproducible_across_runs(seed):
     assert plans[0] == plans[1] == plans[2]
 
 
+def _reference_schedule_cells(incidence, batch_size, cells=None):
+    """The pre-incremental implementation (recomputes each batch's
+    active count with a full O(m) mask sum after every placement) —
+    the oracle for the incremental-update bugfix."""
+    m, n = incidence.shape
+    if cells is None:
+        cells = [c for c in range(n) if incidence[:, c].any()]
+    cells = sorted(int(c) for c in cells)
+    n_batches = max(1, -(-len(cells) // batch_size))
+    batches = [[] for _ in range(n_batches)]
+    active_mask = [np.zeros(m, dtype=bool) for _ in range(n_batches)]
+    active_cnt = [0] * n_batches
+    for c in cells:
+        col = incidence[:, c]
+        best_k, best_key = -1, None
+        for k in range(n_batches):
+            if len(batches[k]) >= batch_size:
+                continue
+            inc = int((col & ~active_mask[k]).sum())
+            cand = (inc, active_cnt[k], k)
+            if best_key is None or cand < best_key:
+                best_k, best_key = k, cand
+        batches[best_k].append(c)
+        active_mask[best_k] |= col
+        active_cnt[best_k] = int(active_mask[best_k].sum())
+    return [b for b in batches if b]
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+@settings(max_examples=40, deadline=None)
+def test_incremental_active_count_byte_identical(seed, b):
+    """The incremental active_cnt update (+= the placement's own gain)
+    must reproduce the full-recompute schedule exactly, placement for
+    placement."""
+    rng = np.random.default_rng(seed)
+    m, n = rng.integers(2, 24), rng.integers(1, 14)
+    inc = rng.random((m, n)) < rng.uniform(0.1, 0.6)
+    assert scheduler.schedule_cells(inc, b) == \
+        _reference_schedule_cells(inc, b)
+
+
+def test_resident_cells_prefer_earliest_wave():
+    """Cache affinity: under equal gain a resident cell steers into the
+    earliest wave (it executes before LRU eviction claims its rows),
+    overriding the least-active tie-break; without a resident set the
+    plan is byte-identical to pure Alg. 5."""
+    inc = np.zeros((4, 3), bool)
+    inc[0, 0] = inc[1, 0] = True      # two queries pin cell 0
+    inc[2, 1] = True
+    inc[3, 2] = True
+    base = scheduler.schedule_cells(inc, 2)
+    assert base == [[0], [1, 2]]      # cell 2 ties on gain, picks less
+    #                                   active wave 1 (pure Alg. 5)
+    aware = scheduler.schedule_cells(inc, 2, resident={2})
+    assert aware == [[0, 2], [1]]     # resident cell 2 takes wave 0
+    # an empty resident set must not perturb the plan at all
+    assert scheduler.schedule_cells(inc, 2, resident=set()) == base
+
+
+def test_coaccessed_neighbor_affinity():
+    """A non-resident cell breaks a gain tie toward the wave whose
+    resident members share its queries (co-accessed cells travel
+    together), even against the least-active tie-break."""
+    inc = np.zeros((3, 3), bool)
+    inc[0, 0] = inc[1, 0] = True      # cell 0: queries 0, 1
+    inc[2, 1] = True                  # cell 1: query 2
+    inc[0, 2] = inc[2, 2] = True      # cell 2 co-accessed with cell 0
+    blind = scheduler.schedule_cells(inc, 2)
+    assert blind == [[0], [1, 2]]
+    aware = scheduler.schedule_cells(inc, 2, resident={0})
+    assert aware == [[0, 2], [1]]
+
+
+def test_order_waves_runs_resident_first_and_keeps_objective():
+    rng = np.random.default_rng(7)
+    inc = rng.random((16, 12)) < 0.3
+    waves = scheduler.schedule_cells(inc, 3)
+    assert scheduler.order_waves(waves, None) == waves
+    reordered = scheduler.order_waves(waves, resident=set(waves[-1]))
+    assert reordered[0] == waves[-1]
+    assert sorted(map(tuple, reordered)) == sorted(map(tuple, waves))
+    # Eq. 3's objective is order-invariant — reordering is free
+    assert scheduler.total_active(inc, reordered) == \
+        scheduler.total_active(inc, waves)
+    # rows-weighted residency: the wave with more resident *rows* wins
+    w = np.arange(12) * 10 + 1
+    hv = scheduler.order_waves([[0, 1], [11]], resident={1, 11}, weights=w)
+    assert hv[0] == [11]
+
+
+def test_weighted_capacity_packs_and_appends():
+    """Arena rows as weights: waves never exceed the capacity, extra
+    waves append deterministically, oversized single cells fail fast."""
+    inc = np.ones((4, 5), bool)
+    w = np.array([30, 30, 30, 30, 30])
+    waves = scheduler.schedule_cells(inc, 5, weights=w, capacity=60)
+    assert all(sum(w[c] for c in wave) <= 60 for wave in waves)
+    assert sorted(c for wave in waves for c in wave) == list(range(5))
+    assert len(waves) == 3            # 2 + 2 + 1
+    with np.testing.assert_raises(ValueError):
+        scheduler.schedule_cells(inc, 5, weights=w, capacity=20)
+    with np.testing.assert_raises(ValueError):
+        scheduler.schedule_cells(inc, 5, weights=w)   # capacity required
+
+
 def test_multihost_plan_covers_cells():
     from repro.core.pipeline import multihost_plan
     rng = np.random.default_rng(0)
