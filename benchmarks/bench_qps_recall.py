@@ -3,7 +3,6 @@ attributes, Garfield vs GPU-Pre / CAGRA-Post / inline-filter."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core.baselines import (inline_filter_search, postfilter_search,

@@ -1,0 +1,143 @@
+"""Streaming mutability bench (ISSUE 5): insert throughput, recall vs
+fraction inserted, delete correctness, compaction cost.
+
+Acceptance regime, asserted here so the rows cannot silently stop
+meaning anything (the CI gate additionally tracks the recall columns
+against the committed baseline):
+
+  - build on 80% of the 5k smoke dataset, insert the remaining 20%
+    through ``Collection.insert`` + ``flush``: recall@10 within 0.02 of
+    a from-scratch full rebuild at identical SearchParams, in all three
+    engine modes;
+  - delete a random 5% of ids: zero deleted ids across >= 1k filtered
+    queries, conjunctive AND disjunctive (the tombstone mask must hold
+    under qmap folding), across all three modes;
+  - ``compact()``: behaviorally identical to a fresh build on the
+    surviving rows (recall parity asserted).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.api import AttrSchema, Collection, F
+from repro.core.search import ground_truth, recall_at_k
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_dataset, make_queries
+
+PARITY_TOL = 0.02
+
+
+def run(scale: str = "smoke"):
+    n, nq = (5000, 32) if scale == "smoke" else (20000, 64)
+    ds = "sift"
+    v, a = make_dataset(ds, n, seed=3)
+    schema = AttrSchema.generic(a.shape[1])
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16, n_clusters=32)
+    n80 = int(0.8 * n)
+    rows = []
+
+    wl = make_queries(v, a, nq, 2, seed=77)
+    tids, _ = ground_truth(v, a, wl.q, wl.lo, wl.hi, 10)
+    p = SearchParams(k=10, ef=96)
+
+    col = Collection.build(v[:n80], a[:n80], schema=schema, config=cfg,
+                           seed=0)
+    col.buffer_rows_per_cell = 10 ** 9      # measure the buffered regime
+    full = Collection.build(v, a, schema=schema, config=cfg, seed=0)
+
+    # -- insert throughput + recall vs fraction inserted (buffered) ----------
+    chunk = max((n - n80) // 4, 1)
+    inserted = 0
+    t_insert = 0.0
+    while inserted < n - n80:
+        s = n80 + inserted
+        e = min(s + chunk, n)
+        t0 = time.perf_counter()
+        col.insert(v[s:e], a[s:e])
+        t_insert += time.perf_counter() - t0
+        inserted = e - n80
+        res = col.search(wl.q, filters=(wl.lo, wl.hi), params=p)
+        rows.append(dict(
+            bench="updates", dataset=ds, phase="recall_vs_fraction",
+            fraction=round(inserted / n, 3),
+            recall=round(recall_at_k(res.ids, tids), 4)))
+    rows.append(dict(
+        bench="updates", dataset=ds, phase="insert_throughput",
+        n_inserted=inserted,
+        rows_per_s=round(inserted / max(t_insert, 1e-9), 1)))
+
+    # -- flush + per-mode recall parity vs the full rebuild ------------------
+    t0 = time.perf_counter()
+    col.flush()
+    t_flush = time.perf_counter() - t0
+    rows.append(dict(bench="updates", dataset=ds, phase="flush",
+                     n_flushed=inserted, seconds=round(t_flush, 3)))
+    for mode in ("incore", "hybrid", "ooc"):
+        res_i = col.search(wl.q, filters=(wl.lo, wl.hi), params=p,
+                           engine=mode)
+        qps, _ = common.timed_qps(
+            lambda: col.search(wl.q, filters=(wl.lo, wl.hi), params=p,
+                               engine=mode), nq, warmup=0, iters=2)
+        res_f = full.search(wl.q, filters=(wl.lo, wl.hi), params=p,
+                            engine=mode)
+        r_inc = recall_at_k(res_i.ids, tids)
+        r_full = recall_at_k(res_f.ids, tids)
+        assert r_full - r_inc <= PARITY_TOL, (
+            f"incremental {mode} recall {r_inc:.4f} fell more than "
+            f"{PARITY_TOL} below the full rebuild's {r_full:.4f}")
+        rows.append(dict(
+            bench="updates", dataset=ds, phase="incremental", mode=mode,
+            recall=round(r_inc, 4), recall_full=round(r_full, 4),
+            qps=round(qps, 1)))
+
+    # -- deletes: zero tombstoned ids across >= 1k filtered queries ----------
+    rng = np.random.default_rng(5)
+    dead = rng.choice(n, n // 20, replace=False)
+    t0 = time.perf_counter()
+    col.delete(dead)
+    t_del = time.perf_counter() - t0
+    nq_del = 512
+    wl_d = make_queries(v, a, nq_del, 1, seed=78)
+    p10, p90 = np.quantile(a[:, 0], [0.10, 0.90])
+    expr = (F("attr0") < float(p10)) | (F("attr0") > float(p90))
+    for mode in ("incore", "hybrid", "ooc"):
+        hits = 0
+        res = col.search(wl_d.q, filters=(wl_d.lo, wl_d.hi),
+                         params=p, engine=mode)
+        hits += np.intersect1d(res.ids[res.ids >= 0], dead).size
+        res = col.search(wl_d.q, filters=expr, params=p, engine=mode)
+        hits += np.intersect1d(res.ids[res.ids >= 0], dead).size
+        assert hits == 0, (
+            f"{mode}: {hits} deleted ids surfaced across "
+            f"{2 * nq_del} filtered queries")
+        rows.append(dict(
+            bench="updates", dataset=ds, phase="delete", mode=mode,
+            n_queries=2 * nq_del, n_deleted=len(dead), deleted_hits=hits,
+            delete_seconds=round(t_del, 4)))
+
+    # -- compaction: cost + parity with a fresh build on the survivors -------
+    live_v, live_a, live_ids = col._live_view()
+    t0 = time.perf_counter()
+    col.compact(seed=0)
+    t_comp = time.perf_counter() - t0
+    fresh = Collection.build(live_v, live_a, schema=schema, config=cfg,
+                             seed=0)
+    t_pos, _ = ground_truth(live_v, live_a, wl.q, wl.lo, wl.hi, 10)
+    t_live = np.where(t_pos >= 0, live_ids[np.maximum(t_pos, 0)], -1)
+    res_c = col.search(wl.q, filters=(wl.lo, wl.hi), params=p)
+    res_f = fresh.search(wl.q, filters=(wl.lo, wl.hi), params=p)
+    mapped = np.where(res_f.ids >= 0,
+                      live_ids[np.maximum(res_f.ids, 0)], -1)
+    assert np.array_equal(res_c.ids, mapped), (
+        "compact() must behave identically to a fresh build on the "
+        "surviving rows")
+    rows.append(dict(
+        bench="updates", dataset=ds, phase="compact",
+        seconds=round(t_comp, 2), rows_after=col.n,
+        recall=round(recall_at_k(res_c.ids, t_live), 4),
+        recall_fresh=round(recall_at_k(mapped, t_live), 4)))
+    return rows

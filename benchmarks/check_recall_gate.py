@@ -91,6 +91,14 @@ def tracked_metrics(results_dir: str) -> dict:
             for suffix in PERF_METRICS:
                 if suffix in r:
                     out[f"{base}:{suffix}"] = float(r[suffix])
+    for r in _load_rows(results_dir, "bench_updates"):
+        # the streaming-mutability regressions worth holding: incremental
+        # (insert 20% then flush) and post-compaction recall per mode
+        if r.get("phase") == "incremental" and float(r.get("recall", 0)) > 0:
+            out[f"updates:{r['dataset']}:incremental:{r['mode']}"] = \
+                float(r["recall"])
+        if r.get("phase") == "compact" and float(r.get("recall", 0)) > 0:
+            out[f"updates:{r['dataset']}:compact"] = float(r["recall"])
     return out
 
 

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.api import AttrSchema, Collection
 from repro.core.search import Searcher, ground_truth, recall_at_k  # noqa: F401
 from repro.core.types import GMGConfig, SearchParams  # noqa: F401

@@ -32,6 +32,7 @@ BENCHES = [
     "bench_outofcore",      # Figure 14 + Table 3
     "bench_disjunction",    # box-batched DNF planner vs per-box loop
     "bench_memory_budget",  # engine-mode sweep: incore / hybrid / ooc
+    "bench_updates",        # streaming inserts/deletes/compaction
     "bench_kernels",        # kernel microbench
 ]
 

@@ -88,14 +88,29 @@ def main():
     assert warm["hit_rate"] > 0
     col.device_budget_bytes = None          # back to in-core
 
-    print("8. save -> load -> search round-trip (mode rides along)")
+    print("8. streaming updates: insert -> search -> delete -> compact")
+    extra_v = vectors[:4] + 0.01
+    new_ids = col.insert(extra_v, attrs[:4])
+    res_new = col.search(extra_v, k=1)
+    assert np.array_equal(res_new.ids[:, 0], new_ids)   # buffered, found
+    col.delete(new_ids[:2])
+    res_del = col.search(extra_v[:2], k=1)
+    assert not np.isin(res_del.ids, new_ids[:2]).any()  # tombstoned
+    col.compact()                                       # reclaim + fold
+    print(f"   inserted {len(new_ids)}, deleted 2, compacted to "
+          f"{col.n} rows "
+          f"(pending={col.plan()['pending_rows']}, "
+          f"deleted={col.plan()['deleted_rows']})")
+
+    print("9. save -> load -> search round-trip (mode rides along)")
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "collection.npz")
         col.save(path)
         col2 = Collection.load(path)
         res2 = col2.search(wl.q, filters=F("ts") >= t0, k=10, ef=64)
     assert col2.mode == col.mode
-    assert np.array_equal(res_expr.ids, res2.ids)
+    res_expr2 = col.search(wl.q, filters=F("ts") >= t0, k=10, ef=64)
+    assert np.array_equal(res_expr2.ids, res2.ids)
     print("   identical results after reload")
     print("OK")
 

@@ -1,6 +1,10 @@
 """RAG serving: an LM embeds queries, Garfield retrieves range-filtered
 documents through the `Collection` API, the serving engine generates
-with batched requests.
+with batched requests. The corpus is ingested *incrementally* — a
+serving deployment never gets to rebuild from scratch: documents stream
+in through ``Collection.insert`` while queries run, and the cell
+maintenance machinery (auto-flush of overflowing append buffers) keeps
+the index healthy underneath.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -19,27 +23,41 @@ from repro.serve.rag import RagPipeline
 
 
 def main():
-    print("1. corpus: 8k docs with (year, views) attributes")
+    print("1. seed corpus: 6k of 8k docs with (year, views) attributes")
     vectors, attrs = make_dataset("dblp", 8000, seed=0, m=2)
+    n_seed = 6000
     col = Collection.build(
-        vectors, attrs, schema=AttrSchema(["year", "views"]),
+        vectors[:n_seed], attrs[:n_seed],
+        schema=AttrSchema(["year", "views"]),
         config=GMGConfig(seg_per_attr=(2, 2), intra_degree=12,
                          n_clusters=16),
         seed=0)
 
-    print("2. reduced llama3.2 as the embedder/generator")
+    print("2. live ingest: the remaining 2k docs arrive in batches "
+          "through Collection.insert")
+    col.buffer_rows_per_cell = 300        # overflowing cells self-flush
+    for s in range(n_seed, 8000, 500):
+        col.insert(vectors[s:s + 500], attrs[s:s + 500])
+    plan = col.plan()
+    print(f"   {col.live_count()} docs live "
+          f"({plan['pending_rows']} still buffered after "
+          f"{plan['mutation_epoch']} maintenance flushes) — "
+          "all searchable")
+    assert col.live_count() == 8000
+
+    print("3. reduced llama3.2 as the embedder/generator")
     cfg = get_reduced("llama3.2-3b")
     params = init_params(lm.lm_specs(cfg), jax.random.PRNGKey(0))
     rag = RagPipeline(params=params, cfg=cfg, collection=col)
 
-    print("3. retrieval with a year-range filter")
+    print("4. retrieval with a year-range filter (buffered docs fold in)")
     rng = np.random.default_rng(0)
     queries = rng.integers(1, cfg.vocab, size=(4, 12))
     recent = float(np.quantile(attrs[:, 0], 0.5))     # recent half only
     res = rag.retrieve(queries, filters=F("year") >= recent, k=3)
     print("   retrieved doc ids per query:", res.ids.tolist())
 
-    print("4. batched generation over the retrieved context")
+    print("5. batched generation over the retrieved context")
     eng = Engine(params, cfg, lanes=4, max_seq=64)
     for i in range(4):
         ids = res.ids[i]

@@ -29,9 +29,23 @@ execution engine per batch, so callers never touch ``build_gmg``,
                 ("device" fused gather->distance->top-k, or the "host"
                 numpy loop — bit-identical ids either way).
 
+  - mutate    — ``col.insert(vectors, attrs)`` routes new rows through
+                the frozen quantile grid into bounded per-cell append
+                buffers (immediately searchable — every query folds a
+                brute-force scan of the few buffered rows into the
+                engine's top-k); ``col.delete(ids)`` tombstones rows
+                (the bitmap is ANDed into the predicate mask at query
+                time, zero traversal change); ``col.flush()`` splices
+                buffers into the cell-contiguous index (local graph
+                link/rebuild + cross-cell edge repair, core.mutable);
+                ``col.compact()`` reclaims tombstones by rebuilding on
+                the surviving rows. An overflowing cell buffer flushes
+                itself (cell maintenance).
+
   - persist   — ``col.save(path)`` / ``Collection.load(path)`` round-trip
                 the entire built index, the chosen engine mode, device
-                budget, cache policy and rerank path through one
+                budget, cache policy, rerank path, pending append
+                buffers, tombstones and the mutation epoch through one
                 ``.npz`` file.
 """
 
@@ -47,12 +61,15 @@ from repro.api.planner import plan_queries
 from repro.api.result import QueryResult
 from repro.api.schema import AttrSchema
 from repro.core import gmg as gmg_mod
+from repro.core import mutable as mut_mod
 # the engines own the valid knob-value sets; imported for validation
 from repro.core.runtime import CACHE_POLICIES as _CACHE_POLICIES
 from repro.core.runtime import RERANKS as _RERANKS
 from repro.core.types import GMGConfig, GMGIndex, SearchParams
 
-_FORMAT_VERSION = 2
+# v3: + append buffers, tombstones, mutation epoch (ISSUE 5); v2 files
+# (and older) still load, with a fresh mutation state
+_FORMAT_VERSION = 3
 
 # GMGIndex array fields persisted 1:1 (seg_bounds, being a list, is
 # handled separately; None-able fields are skipped when absent).
@@ -90,6 +107,9 @@ class Collection:
     # fused gather->distance->k-select program) | "host" (numpy loop);
     # both return bit-identical ids
     rerank: str = "device"
+    # cell-maintenance bound: a cell holding more pending rows than this
+    # flushes itself at the end of the insert() that overflowed it
+    buffer_rows_per_cell: int = 256
 
     def __post_init__(self):
         if len(self.schema) != self.index.attrs.shape[1]:
@@ -103,12 +123,17 @@ class Collection:
         if self.rerank not in _RERANKS:
             raise ValueError(f"unknown rerank {self.rerank!r}; "
                              f"expected one of {_RERANKS}")
+        if int(self.buffer_rows_per_cell) < 1:
+            raise ValueError("buffer_rows_per_cell must be >= 1")
         self._in_core = None        # lazily-built Searcher
         self._hybrid = None         # lazily-built HybridEngine
         self._hybrid_key = None     # (budget, policy, rerank) it was built for
         self._out_of_core = None    # lazily-built OutOfCoreEngine
         self._out_of_core_key = None      # (budget, rerank) it was built for
-        self._inv_perm = None       # lazily-built original-order inverse
+        self._inv_perm = None       # lazily-built sorted-perm lookup
+        self._mut = None            # MutationState, created on first use
+        self._masked = None         # tombstone-masked engine index replica
+        self._masked_epoch = -1     # mutation epoch the replica reflects
         self.last_stats: dict = {}
 
     # -- lifecycle: build ---------------------------------------------------
@@ -204,10 +229,24 @@ class Collection:
             return "hybrid"
         return "ooc"
 
+    def _engine_index(self) -> GMGIndex:
+        """The index engines should run on: the pristine one, or (when
+        rows are tombstoned) a shallow replica whose attrs mask deleted
+        rows to NaN so no predicate can admit them."""
+        mut = self._mut
+        if mut is None or mut.tombstone is None or not mut.tombstone.any():
+            return self.index
+        if self._masked is None or self._masked_epoch != mut.epoch:
+            self._masked = dataclasses.replace(
+                self.index, attrs=mut_mod.masked_attrs(self.index,
+                                                       mut.tombstone))
+            self._masked_epoch = mut.epoch
+        return self._masked
+
     def _searcher(self):
         if self._in_core is None:
             from repro.core.search import Searcher
-            self._in_core = Searcher(self.index)
+            self._in_core = Searcher(self._engine_index())
         return self._in_core
 
     def _hybrid_cache_budget(self) -> Optional[int]:
@@ -225,7 +264,8 @@ class Collection:
         if self._hybrid is None or self._hybrid_key != key:
             from repro.core.hybrid import HybridEngine
             self._hybrid = HybridEngine(
-                self.index, cache_budget_bytes=self._hybrid_cache_budget(),
+                self._engine_index(),
+                cache_budget_bytes=self._hybrid_cache_budget(),
                 cache_policy=self.cache_policy, rerank=self.rerank)
             self._hybrid_key = key
         return self._hybrid
@@ -241,7 +281,8 @@ class Collection:
                 window = max(self.device_budget_bytes
                              - self.out_of_core_resident_bytes(), 1)
             self._out_of_core = OutOfCoreEngine(
-                self.index, hbm_budget_bytes=window, rerank=self.rerank)
+                self._engine_index(), hbm_budget_bytes=window,
+                rerank=self.rerank)
             self._out_of_core_key = key
         return self._out_of_core
 
@@ -287,7 +328,200 @@ class Collection:
                 info["cache_bytes"] = n_slots * cache_slot_bytes(self.index)
         if which == "ooc":
             info["cells_per_batch"] = self._streamer().cells_per_batch()
+        mut = self._mut
+        info["mutation_epoch"] = 0 if mut is None else mut.epoch
+        info["pending_rows"] = 0 if mut is None else mut.pending_rows
+        info["deleted_rows"] = 0 if mut is None else mut.deleted_rows
+        info["oversized_cells"] = mut_mod.oversized_cells(self.index, mut)
         return info
+
+    # -- streaming mutability (ISSUE 5; machinery in repro.core.mutable) ----
+
+    def _mutation(self) -> "mut_mod.MutationState":
+        if self._mut is None:
+            self._mut = mut_mod.MutationState.fresh(self.index)
+        return self._mut
+
+    def live_count(self) -> int:
+        """Rows a query can currently return: base rows minus tombstones
+        plus pending buffered rows."""
+        mut = self._mut
+        if mut is None:
+            return self.index.n
+        return self.index.n - mut.deleted_rows + mut.pending_rows
+
+    def _drop_engines(self) -> None:
+        """Layout changed (flush/compact): every engine and cached view
+        is stale and rebuilds lazily."""
+        self._in_core = None
+        self._hybrid = None
+        self._hybrid_key = None
+        self._out_of_core = None
+        self._out_of_core_key = None
+        self._inv_perm = None
+        self._masked = None
+        self._masked_epoch = -1
+
+    def _refresh_engine_attrs(self) -> None:
+        """Delete path: push the tombstone-masked attr table into every
+        already-built engine in place — caches stay warm, nothing else
+        re-uploads."""
+        replica = self._engine_index()
+        for eng in (self._in_core, self._hybrid, self._out_of_core):
+            if eng is not None:
+                eng.refresh_index(replica)
+
+    def _perm_lookup(self):
+        """(sorted original ids, internal rows in that order); cached —
+        invalidated whenever the layout changes."""
+        if self._inv_perm is None:
+            order = np.argsort(self.index.perm, kind="stable")
+            self._inv_perm = (self.index.perm[order], order)
+        return self._inv_perm
+
+    def insert(self, vectors: np.ndarray,
+               attrs: Union[np.ndarray, Mapping[str, np.ndarray]]
+               ) -> np.ndarray:
+        """Add rows; returns their newly-assigned ids ((nb,) int64).
+
+        Rows route through the frozen quantile grid into per-cell append
+        buffers and are immediately searchable (the buffered few are
+        brute-force folded into every query's top-k). A cell whose
+        buffer exceeds ``buffer_rows_per_cell`` flushes itself before
+        this call returns.
+        """
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        if isinstance(attrs, Mapping):
+            cols = [np.atleast_1d(np.asarray(attrs[name], np.float32))
+                    for name in self.schema]
+            attr_arr = np.stack(cols, axis=1)
+        else:
+            attr_arr = np.atleast_2d(np.asarray(attrs, np.float32))
+        if vectors.shape[0] != attr_arr.shape[0]:
+            raise ValueError(
+                f"{vectors.shape[0]} vectors vs {attr_arr.shape[0]} "
+                "attribute rows")
+        if vectors.shape[1] != self.dim:
+            raise ValueError(
+                f"vector dim {vectors.shape[1]} != index dim {self.dim}")
+        if attr_arr.shape[1] != len(self.schema):
+            raise ValueError(
+                f"{attr_arr.shape[1]} attribute columns vs schema of "
+                f"{len(self.schema)}")
+        mut = self._mutation()
+        cells = mut_mod.route_rows(self.index, attr_arr)
+        ids = mut.append(vectors, attr_arr, cells)
+        # cell maintenance: flush any cell whose buffer overflowed
+        counts = mut.pending_per_cell(self.index.n_cells)
+        over = np.nonzero(counts > int(self.buffer_rows_per_cell))[0]
+        if len(over):
+            self.flush(cells=[int(c) for c in over])
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by original id; returns how many were newly
+        deleted (already-deleted ids are a no-op, unknown ids raise).
+
+        Base rows stay in the graph as navigation waypoints — their
+        attrs read NaN on every engine, which no range admits, so they
+        can never re-enter a result. Space is reclaimed by compact().
+        """
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        if ids.size == 0:
+            return 0
+        mut = self._mutation()
+        # classify every id BEFORE mutating anything, so a bad batch
+        # raises without partially applying: never-allocated ids are the
+        # only error; allocated-but-gone ids (tombstoned, previously
+        # dropped from the buffer, or reclaimed by compact) are no-ops
+        if ids.min() < 0 or ids.max() >= mut.next_id:
+            bad = ids[(ids < 0) | (ids >= mut.next_id)]
+            raise KeyError(f"unknown ids {bad[:8].tolist()}")
+        in_buf = np.isin(ids, mut.buf_ids)
+        rest = ids[~in_buf]
+        sorted_ids, rows = self._perm_lookup()
+        pos = np.searchsorted(sorted_ids, rest)
+        in_base = (pos < len(sorted_ids)) & (sorted_ids[np.minimum(
+            pos, len(sorted_ids) - 1)] == rest)
+        # pending buffered rows: physically dropped, no engine change
+        newly = int(in_buf.sum())
+        if newly:
+            mut.drop_buffered(~np.isin(mut.buf_ids, ids[in_buf]))
+        if in_base.any():
+            tomb = mut.ensure_tombstone(self.index.n)
+            target = rows[pos[in_base]]
+            fresh = ~tomb[target]
+            if fresh.any():
+                tomb[target[fresh]] = True
+                newly += int(fresh.sum())
+                mut.epoch += 1
+                self._refresh_engine_attrs()
+        return newly
+
+    def flush(self, cells=None, graph: str = "auto") -> int:
+        """Splice pending buffered rows (of ``cells``, default all) into
+        the cell-contiguous index: int8-quantized, linked into their
+        cell's local graph (device-side batched greedy insert, or a
+        local rebuild for large batches — ``graph``: "auto" | "greedy" |
+        "rebuild"), cross-cell edges repaired for the touched cells.
+        Returns the number of rows flushed."""
+        mut = self._mut
+        if mut is None or mut.pending_rows == 0:
+            return 0
+        if cells is None:
+            sel = np.ones(mut.pending_rows, bool)
+        else:
+            sel = np.isin(mut.buf_cells, np.asarray(list(cells), np.int32))
+        n_flush = int(sel.sum())
+        if n_flush == 0:
+            return 0
+        new_index, old_to_new = mut_mod.flush_index(
+            self.index, mut.buf_vectors[sel], mut.buf_attrs[sel],
+            mut.buf_ids[sel], mut.buf_cells[sel],
+            seed=mut.epoch, graph_mode=graph)
+        if mut.tombstone is not None:
+            tomb2 = np.zeros(new_index.n, bool)
+            tomb2[old_to_new] = mut.tombstone
+            mut.tombstone = tomb2
+        self.index = new_index
+        mut.drop_buffered(~sel)
+        mut.epoch += 1
+        self._drop_engines()
+        return n_flush
+
+    def compact(self, seed: int = 0) -> dict:
+        """Reclaim tombstones and fold in any pending buffers by
+        rebuilding on the surviving rows — behaviorally identical to a
+        fresh build on them (same row order/config/seed), ids preserved.
+        Also the rebalance point for cells that outgrew the cache
+        arena's slot quantum. Returns a summary dict."""
+        mut = self._mutation()
+        dropped, pending = mut.deleted_rows, mut.pending_rows
+        self.index = mut_mod.compact_index(self.index, mut, seed=seed)
+        mut.drop_buffered(np.zeros(mut.pending_rows, bool))
+        mut.tombstone = None
+        mut.epoch += 1
+        self._drop_engines()
+        return {"rows": self.index.n, "reclaimed": dropped,
+                "flushed": pending, "epoch": mut.epoch}
+
+    def _fold_buffer(self, q: np.ndarray, plan, ids: np.ndarray,
+                     d: np.ndarray, k: int):
+        """Fold the brute-force scan of pending buffered rows into the
+        engine's per-query top-k — same deterministic segment merge the
+        disjunctive planner uses, one extra candidate row per plan box."""
+        mut = self._mut
+        if mut is None or mut.pending_rows == 0 or plan.n_boxes == 0:
+            return ids, d
+        from repro.core.runtime import merge_segment_topk
+        qrows = q if plan.trivial else q[plan.qmap]
+        bi, bd = mut_mod.scan_buffer(mut, qrows, plan.lo, plan.hi, k)
+        B = plan.n_queries
+        all_ids = np.concatenate([ids, bi], axis=0)
+        all_d = np.concatenate([d, bd], axis=0)
+        qmap = np.concatenate([np.arange(B, dtype=np.int64), plan.qmap])
+        self.last_stats["buffered_rows"] = mut.pending_rows
+        return merge_segment_topk(all_ids, all_d, qmap, B, k)
 
     # -- search -------------------------------------------------------------
 
@@ -326,6 +560,7 @@ class Collection:
             ids, d = eng.search(q, plan.lo, plan.hi, params)
             if which != "incore":
                 self.last_stats = dict(eng.stats)
+            ids, d = self._fold_buffer(q, plan, ids, d, params.k)
             return QueryResult(ids=ids, distances=d, engine=which)
         # box-batched disjunctive pass
         self.last_stats["planner"] = dict(plan.stats)
@@ -339,6 +574,7 @@ class Collection:
                             qmap=plan.qmap, n_queries=B)
         if which != "incore":
             self.last_stats.update(eng.stats)
+        ids, d = self._fold_buffer(q, plan, ids, d, params.k)
         return QueryResult(ids=ids, distances=d, engine=which)
 
     def ground_truth(self, q: np.ndarray, filters=None,
@@ -354,35 +590,28 @@ class Collection:
         q = np.atleast_2d(np.asarray(q, np.float32))
         B = q.shape[0]
         plan = plan_queries(filters, self.schema, B)
+        v, a, id_of = self._live_view()
         if plan.trivial:
-            ids, _ = ground_truth(self._original_vectors(),
-                                  self._original_attrs(), q,
-                                  plan.lo, plan.hi, k)
-            return ids
+            ids, _ = ground_truth(v, a, q, plan.lo, plan.hi, k)
+            return np.where(ids >= 0, id_of[np.maximum(ids, 0)], -1)
         if plan.n_boxes == 0:
             return np.full((B, k), -1, np.int64)
-        ids, d = ground_truth(self._original_vectors(),
-                              self._original_attrs(), q[plan.qmap],
-                              plan.lo, plan.hi, k)
+        ids, d = ground_truth(v, a, q[plan.qmap], plan.lo, plan.hi, k)
+        ids = np.where(ids >= 0, id_of[np.maximum(ids, 0)], -1)
         ids, _ = merge_segment_topk(ids, d, plan.qmap, B, k)
         return ids
 
-    def _inv(self) -> np.ndarray:
-        """original id -> internal row; cached (index is immutable)."""
-        if self._inv_perm is None:
-            self._inv_perm = np.argsort(self.index.perm)
-        return self._inv_perm
-
-    def _original_vectors(self) -> np.ndarray:
-        return self.index.vectors[self._inv()]
-
-    def _original_attrs(self) -> np.ndarray:
-        return self.index.attrs[self._inv()]
+    def _live_view(self):
+        """(vectors, attrs, original ids) over every live row — base
+        rows minus tombstones plus pending buffers, in original-id
+        order (== the pre-mutation original layout when untouched)."""
+        return mut_mod.live_rows(self.index, self._mut)
 
     # -- lifecycle: persist -------------------------------------------------
 
     def save(self, path: str) -> None:
-        """Serialize the built index + schema + engine-mode choice to one
+        """Serialize the built index + schema + engine-mode choice +
+        mutation state (pending buffers, tombstones, epoch) to one
         ``.npz`` file."""
         idx = self.index
         payload = {}
@@ -401,7 +630,19 @@ class Collection:
             "device_budget_bytes": self.device_budget_bytes,
             "cache_policy": self.cache_policy,
             "rerank": self.rerank,
+            "buffer_rows_per_cell": int(self.buffer_rows_per_cell),
         }
+        mut = self._mut
+        if mut is not None:
+            meta["next_id"] = int(mut.next_id)
+            meta["mutation_epoch"] = int(mut.epoch)
+            if mut.pending_rows:
+                payload["mut_buf_vectors"] = mut.buf_vectors
+                payload["mut_buf_attrs"] = mut.buf_attrs
+                payload["mut_buf_ids"] = mut.buf_ids
+                payload["mut_buf_cells"] = mut.buf_cells
+            if mut.tombstone is not None and mut.tombstone.any():
+                payload["mut_tombstone"] = mut.tombstone.astype(np.uint8)
         payload["meta_json"] = np.frombuffer(
             json.dumps(meta).encode(), dtype=np.uint8)
         np.savez(path, **payload)
@@ -418,7 +659,9 @@ class Collection:
         path are restored so the loaded collection rebuilds the same
         engine; pass ``device_budget_bytes`` / ``mode`` /
         ``cache_policy`` / ``rerank`` to override (files written before
-        these knobs existed load with today's defaults).
+        these knobs existed load with today's defaults). v3 files also
+        restore the mutation state — pending append buffers, tombstones
+        and the mutation epoch; v2 files load with a fresh one.
         """
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
@@ -435,6 +678,11 @@ class Collection:
             for name in _INDEX_ARRAYS:
                 fields[name] = z[name] if name in z.files else None
             index = GMGIndex(**fields)
+            buf = {name: z[f"mut_{name}"] for name in
+                   ("buf_vectors", "buf_attrs", "buf_ids", "buf_cells")
+                   if f"mut_{name}" in z.files}
+            tomb = (z["mut_tombstone"].astype(bool)
+                    if "mut_tombstone" in z.files else None)
         if device_budget_bytes is None:
             device_budget_bytes = meta.get("device_budget_bytes")
         if mode is None:
@@ -444,6 +692,20 @@ class Collection:
             cache_policy = meta.get("cache_policy", cls.cache_policy)
         if rerank is None:
             rerank = meta.get("rerank", cls.rerank)
-        return cls(index=index, schema=AttrSchema(meta["schema"]),
-                   device_budget_bytes=device_budget_bytes, mode=mode,
-                   cache_policy=cache_policy, rerank=rerank)
+        col = cls(index=index, schema=AttrSchema(meta["schema"]),
+                  device_budget_bytes=device_budget_bytes, mode=mode,
+                  cache_policy=cache_policy, rerank=rerank,
+                  buffer_rows_per_cell=meta.get("buffer_rows_per_cell",
+                                                cls.buffer_rows_per_cell))
+        if "next_id" in meta or buf or tomb is not None:
+            mut = col._mutation()
+            mut.next_id = max(mut.next_id, int(meta.get("next_id", 0)))
+            mut.epoch = int(meta.get("mutation_epoch", 0))
+            if buf:
+                mut.buf_vectors = buf["buf_vectors"].astype(np.float32)
+                mut.buf_attrs = buf["buf_attrs"].astype(np.float32)
+                mut.buf_ids = buf["buf_ids"].astype(np.int64)
+                mut.buf_cells = buf["buf_cells"].astype(np.int32)
+            if tomb is not None:
+                mut.tombstone = tomb
+        return col

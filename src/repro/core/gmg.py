@@ -21,6 +21,28 @@ from repro.core.types import GMGConfig, GMGIndex
 log = logging.getLogger(__name__)
 
 
+def cell_graph(vectors_cell: np.ndarray, config: GMGConfig,
+               seed: int = 0) -> np.ndarray:
+    """Single-cell intra graph (Alg. 1 lines 6-9) under the config's
+    build knobs — the per-cell build entry point, shared by the full
+    offline build and streaming cell maintenance (core.mutable)."""
+    return graph_mod.build_cell_graph(
+        vectors_cell, config.intra_degree,
+        exact_threshold=config.exact_build_threshold,
+        nn_iters=config.nn_descent_iters, alpha=config.prune_alpha,
+        seed=seed)
+
+
+def attr_quantile_grid(attrs: np.ndarray, n_grid: int = 1024) -> np.ndarray:
+    """(m, n_grid + 1) empirical per-attribute CDF grid — the
+    selectivity estimator's table, recomputed after mutations so the
+    adaptive dense path keeps seeing live statistics."""
+    qs = np.linspace(0.0, 1.0, n_grid + 1)
+    return np.stack(
+        [np.quantile(attrs[:, j].astype(np.float64), qs)
+         for j in range(attrs.shape[1])]).astype(np.float32)
+
+
 def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
               config: GMGConfig | None = None, seed: int = 0,
               verbose: bool = False) -> GMGIndex:
@@ -49,11 +71,7 @@ def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
         s, e = int(cell_start[c]), int(cell_start[c + 1])
         if e <= s:
             continue
-        adj_local = graph_mod.build_cell_graph(
-            vectors[s:e], config.intra_degree,
-            exact_threshold=config.exact_build_threshold,
-            nn_iters=config.nn_descent_iters, alpha=config.prune_alpha,
-            seed=seed + c)
+        adj_local = cell_graph(vectors[s:e], config, seed=seed + c)
         intra[s:e] = np.where(adj_local >= 0, adj_local + s, -1)
     t_intra = time.perf_counter()
 
@@ -71,10 +89,7 @@ def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
 
     # --- per-attribute CDF grid (selectivity estimator for the adaptive
     # dense path; covers ALL m attributes, not just the p partitioned) ---
-    qs = np.linspace(0.0, 1.0, 1025)
-    attr_quantiles = np.stack(
-        [np.quantile(attrs_s[:, j].astype(np.float64), qs)
-         for j in range(m)]).astype(np.float32)
+    attr_quantiles = attr_quantile_grid(attrs_s)
 
     # --- quantized resident copy (Section 5.1) ---
     vq = vscale = None

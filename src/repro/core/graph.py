@@ -232,6 +232,63 @@ def prune_and_reverse(vectors: np.ndarray, knn: np.ndarray, degree: int,
     return kept
 
 
+def insert_nodes(vectors: np.ndarray, adj: np.ndarray,
+                 new_ids: np.ndarray, cand_ids: np.ndarray,
+                 alpha: float = 1.2) -> np.ndarray:
+    """Greedy incremental insertion into one cell's local graph.
+
+    ``vectors`` (n_c, dim) holds *all* cell rows (existing + new);
+    ``adj`` (n_c, degree) local-id adjacency whose new rows are -1;
+    ``new_ids`` (n_new,) local ids to link; ``cand_ids`` (n_new, C)
+    neighbor candidates from a nearest-neighbor search (-1 padded).
+    Each new node's candidates are occlusion-pruned to ``degree`` (the
+    same Vamana/CAGRA rule the builder applies), then reverse edges
+    attach it to its kept neighbors — a free slot when one exists, else
+    the neighbor's farthest edge is replaced when the new node is
+    closer. Existing edges are otherwise untouched, which is what keeps
+    the pass cheap; a cell absorbing a large batch should rebuild
+    instead (see core.mutable.flush_index's ``graph_mode``).
+    """
+    n, degree = adj.shape
+    adj = adj.copy()
+    v = vectors
+    for i, u in enumerate(np.asarray(new_ids, np.int64)):
+        cands = cand_ids[i][cand_ids[i] >= 0]
+        cands = cands[cands != u]
+        if len(cands) == 0:
+            continue
+        du = ((v[cands] - v[u]) ** 2).sum(axis=1)
+        order = np.argsort(du, kind="stable")
+        sel: list[int] = []
+        for oi in order:
+            if len(sel) >= degree:
+                break
+            c = int(cands[oi])
+            if c in sel:
+                continue
+            if sel:
+                dw = ((v[sel] - v[c]) ** 2).sum(axis=1)
+                if np.any(alpha * dw < du[oi]):
+                    continue  # detourable edge — CAGRA/Vamana occlusion
+            sel.append(c)
+        adj[u, :len(sel)] = sel
+        # reverse link: free slot first, else displace the farthest edge
+        for c in sel:
+            row = adj[c]
+            if u in row:
+                continue
+            slots = np.nonzero(row < 0)[0]
+            if len(slots):
+                adj[c, slots[0]] = u
+                continue
+            dc = ((v[row] - v[c]) ** 2).sum(axis=1)
+            worst = int(np.argmax(dc))
+            d_uc = float(((v[u] - v[c]) ** 2).sum())
+            if d_uc < dc[worst]:
+                adj[c, worst] = u
+    return adj
+
+
 def build_cell_graph(vectors: np.ndarray, degree: int,
                      exact_threshold: int = 16384,
                      nn_iters: int = 10, alpha: float = 1.2,

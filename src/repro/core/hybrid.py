@@ -89,6 +89,13 @@ class HybridEngine:
                                policy=self.cache_policy)
         self.stats: dict = {}
 
+    def refresh_index(self, index: GMGIndex) -> None:
+        """Delete path (core.mutable): adopt a same-layout index whose
+        attrs carry tombstone NaN masks. The LRU cell cache stays warm —
+        deletes change no adjacency, only the predicate table."""
+        self.index = index
+        self.rt.refresh_index(index)
+
     def resident_bytes(self) -> int:
         """Device footprint: int8 residents + the graph cache buffers."""
         idx = self.index

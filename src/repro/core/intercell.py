@@ -4,6 +4,13 @@ Every node queries every *other* cell's local graph for its top-l ANN
 (Alg. 1 lines 10-12), batched. We reuse the batched traversal engine with
 a single-cell itinerary and no predicate; tiny cells fall back to exact
 top-l (cheaper than a graph walk).
+
+Two entry points share one per-cell core (:func:`_cell_topl`):
+``build_inter_edges`` (the full offline build) and
+``inter_edges_for_queries`` (edges into a *subset* of cells for an
+arbitrary query set — the streaming-mutability repair path: recompute
+the touched cells' columns after a flush, and give freshly inserted
+rows their edges into the untouched cells).
 """
 
 from __future__ import annotations
@@ -16,6 +23,45 @@ from repro.core.traversal import multi_cell_search
 from repro.kernels import ops
 
 
+def _cell_topl(v_dev, a_dev, adj_dev, no_inter, cs_dev, cell_start,
+               c: int, q_dev, l: int, *, ef: int, exact_threshold: int,
+               max_iters: int, key):
+    """Top-l ANN of each query among cell ``c``'s rows (global ids).
+
+    Returns ((B, l) int32 numpy, next_key); -1-padded when the cell
+    holds fewer than l rows. Small cells take the exact MXU path, large
+    ones a predicate-free single-cell traversal. ``no_inter`` is the
+    caller-hoisted (n, S, 1) all--1 dummy inter adjacency (allocated
+    once per entry point, not per cell/chunk).
+    """
+    s, e = int(cell_start[c]), int(cell_start[c + 1])
+    n_c = e - s
+    B = q_dev.shape[0]
+    if n_c == 0:
+        return -np.ones((B, l), np.int32), key
+    if n_c <= exact_threshold:
+        _, idx = ops.topk_l2(q_dev, v_dev[s:e], min(l, n_c))
+        ids = np.asarray(idx)
+        ids = np.where(ids >= 0, ids + s, -1).astype(np.int32)
+        if ids.shape[1] < l:
+            ids = np.concatenate(
+                [ids, -np.ones((B, l - ids.shape[1]), np.int32)], 1)
+    else:
+        m = a_dev.shape[1]
+        lo = jnp.full((B, m), -jnp.inf, jnp.float32)
+        hi = jnp.full((B, m), jnp.inf, jnp.float32)
+        itinerary = jnp.full((B, 1), c, jnp.int32)
+        key, sub = jax.random.split(key)
+        ids_j, _ = multi_cell_search(
+            v_dev, a_dev, adj_dev, no_inter, cs_dev,
+            q_dev, lo, hi, itinerary, sub,
+            k=l, ef=ef, entry_width=min(ef, 16),
+            entry_random=min(ef, 16), entry_beam_l=1,
+            max_iters=max_iters, use_inter=False)
+        ids = np.asarray(ids_j, np.int32)
+    return ids[:, :l], key
+
+
 def build_inter_edges(vectors: np.ndarray, attrs: np.ndarray,
                       intra_adj: np.ndarray, cell_start: np.ndarray,
                       l: int, ef: int = 32, chunk: int = 4096,
@@ -24,7 +70,6 @@ def build_inter_edges(vectors: np.ndarray, attrs: np.ndarray,
     """Returns inter_adj (n, S, l) int32 (own-cell column = -1)."""
     n, dim = vectors.shape
     S = len(cell_start) - 1
-    m = attrs.shape[1]
     inter = -np.ones((n, S, l), dtype=np.int32)
 
     v_dev = jnp.asarray(vectors)
@@ -37,35 +82,60 @@ def build_inter_edges(vectors: np.ndarray, attrs: np.ndarray,
     key = jax.random.PRNGKey(seed)
     for c in range(S):
         s, e = int(cell_start[c]), int(cell_start[c + 1])
-        n_c = e - s
-        if n_c == 0:
+        if e <= s:
             continue
         for qs in range(0, n, chunk):
             qe = min(qs + chunk, n)
-            B = qe - qs
-            q = v_dev[qs:qe]
-            if n_c <= exact_threshold:
-                _, idx = ops.topk_l2(q, v_dev[s:e], min(l, n_c))
-                ids = np.asarray(idx)
-                ids = np.where(ids >= 0, ids + s, -1)
-                if ids.shape[1] < l:
-                    ids = np.concatenate(
-                        [ids, -np.ones((B, l - ids.shape[1]), np.int32)], 1)
-            else:
-                lo = jnp.full((B, m), -jnp.inf, jnp.float32)
-                hi = jnp.full((B, m), jnp.inf, jnp.float32)
-                itinerary = jnp.full((B, 1), c, jnp.int32)
-                key, sub = jax.random.split(key)
-                ids_j, _ = multi_cell_search(
-                    v_dev, a_dev, adj_dev, no_inter, cs_dev,
-                    q, lo, hi, itinerary, sub,
-                    k=l, ef=ef, entry_width=min(ef, 16),
-                    entry_random=min(ef, 16), entry_beam_l=1,
-                    max_iters=max_iters, use_inter=False)
-                ids = np.asarray(ids_j)
-            inter[qs:qe, c, :] = ids[:, :l]
+            ids, key = _cell_topl(
+                v_dev, a_dev, adj_dev, no_inter, cs_dev, cell_start, c,
+                v_dev[qs:qe], l, ef=ef, exact_threshold=exact_threshold,
+                max_iters=max_iters, key=key)
+            inter[qs:qe, c, :] = ids
 
         # own-cell column: a node must not point at itself; simplest is to
         # blank the whole own-cell column (paper: edges to *other* cells).
         inter[s:e, c, :] = -1
     return inter
+
+
+def inter_edges_for_queries(vectors: np.ndarray, attrs: np.ndarray,
+                            intra_adj: np.ndarray, cell_start: np.ndarray,
+                            q: np.ndarray, l: int, *, cells=None,
+                            ef: int = 32, chunk: int = 4096,
+                            exact_threshold: int = 512, seed: int = 0,
+                            max_iters: int = 64) -> np.ndarray:
+    """Top-l edges from each query row into each cell of ``cells``.
+
+    The single-cell repair entry point beneath streaming mutability:
+    after a flush splices rows into a cell, every row's column for that
+    cell is re-resolved here (and new rows get their columns into the
+    untouched cells). Returns (nq, len(cells), l) int32 *global* ids;
+    own-cell blanking is the caller's business (it knows which query
+    rows live in which cell).
+    """
+    S = len(cell_start) - 1
+    if cells is None:
+        cells = list(range(S))
+    nq = q.shape[0]
+    out = -np.ones((nq, len(cells), l), np.int32)
+    if nq == 0 or not cells:
+        return out
+
+    v_dev = jnp.asarray(vectors)
+    a_dev = jnp.asarray(attrs)
+    adj_dev = jnp.asarray(intra_adj)
+    cs_dev = jnp.asarray(np.asarray(cell_start, np.int32))
+    no_inter = jnp.zeros((vectors.shape[0], S, 1), jnp.int32) - 1
+    q_dev = jnp.asarray(np.asarray(q, np.float32))   # one upload, sliced
+
+    key = jax.random.PRNGKey(seed)
+    for j, c in enumerate(cells):
+        for qs in range(0, nq, chunk):
+            qe = min(qs + chunk, nq)
+            ids, key = _cell_topl(
+                v_dev, a_dev, adj_dev, no_inter, cs_dev, cell_start,
+                int(c), q_dev[qs:qe], l,
+                ef=ef, exact_threshold=exact_threshold,
+                max_iters=max_iters, key=key)
+            out[qs:qe, j, :] = ids
+    return out

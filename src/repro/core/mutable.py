@@ -1,0 +1,392 @@
+"""Streaming mutability: append buffers, tombstones, cell maintenance.
+
+The batch-built GMG index (ISSUE 5 tentpole) becomes incrementally
+updatable without giving up any engine mode:
+
+  insert  — new rows are *routed* through the existing quantile grid
+            (``grid.assign_cells`` on the frozen ``seg_bounds``) into a
+            bounded per-cell **append buffer** held host-side. Buffered
+            rows are immediately searchable: every query brute-force
+            scans the (few, by construction) buffered rows and folds
+            them into the engine's top-k through the same deterministic
+            ``merge_segment_topk`` path the disjunctive planner uses —
+            incremental state never changes recall semantics.
+  delete  — a **tombstone bitmap** over internal rows. At query time the
+            tombstone is folded into the predicate mask (deleted rows'
+            attributes read as NaN on the engine's resident attribute
+            table, so no range can admit them): zero traversal change,
+            graph connectivity intact. Space is reclaimed at compaction.
+  flush   — buffered rows are spliced into the cell-contiguous layout
+            (each cell's new rows append to its own dense range; every
+            stored global id is remapped by a cumulative shift),
+            quantized to int8, and linked into the cell's local graph —
+            either a **device-side batched greedy-insert** pass (the
+            same exact-kNN / traversal kernels the builder uses propose
+            neighbors; an occlusion prune + reverse link attaches them)
+            or a full local cell rebuild when the batch is a large
+            fraction of the cell. Cross-cell edges are repaired via
+            ``intercell`` for just the touched cells.
+  compact — drop tombstoned rows and rebuild from the surviving rows
+            (original-id order, same config/seed), so the compacted
+            collection behaves identically to a fresh build on the
+            survivors; external ids are preserved through ``perm``.
+
+A cell whose buffer exceeds its bound triggers maintenance (flush of
+that cell) automatically; cells that outgrow the cache arena's slot
+quantum are reported (``oversized_cells``) and rebalanced at the next
+``compact()`` — the split policy itself is deferred (see ROADMAP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import gmg as gmg_mod
+from repro.core import grid as grid_mod
+from repro.core import graph as graph_mod
+from repro.core import intercell, ordering, quantize
+from repro.core.types import GMGIndex
+
+
+@dataclasses.dataclass
+class MutationState:
+    """Host-side mutable companion of one (immutable-layout) GMGIndex."""
+
+    next_id: int                      # next original id to hand out
+    epoch: int = 0                    # bumps on every engine-visible change
+    buf_vectors: np.ndarray = None    # (nb, dim) f32 pending rows
+    buf_attrs: np.ndarray = None      # (nb, m) f32
+    buf_ids: np.ndarray = None        # (nb,) i64 assigned original ids
+    buf_cells: np.ndarray = None      # (nb,) i32 routed grid cell
+    tombstone: np.ndarray = None      # (n,) bool over internal rows, lazy
+
+    @classmethod
+    def fresh(cls, index: GMGIndex) -> "MutationState":
+        nid = int(index.perm.max()) + 1 if index.n else 0
+        st = cls(next_id=nid)
+        st.buf_vectors = np.empty((0, index.dim), np.float32)
+        st.buf_attrs = np.empty((0, index.attrs.shape[1]), np.float32)
+        st.buf_ids = np.empty(0, np.int64)
+        st.buf_cells = np.empty(0, np.int32)
+        return st
+
+    @property
+    def pending_rows(self) -> int:
+        return int(self.buf_ids.shape[0])
+
+    @property
+    def deleted_rows(self) -> int:
+        return 0 if self.tombstone is None else int(self.tombstone.sum())
+
+    def pending_per_cell(self, n_cells: int) -> np.ndarray:
+        return np.bincount(self.buf_cells, minlength=n_cells)
+
+    def ensure_tombstone(self, n: int) -> np.ndarray:
+        if self.tombstone is None:
+            self.tombstone = np.zeros(n, bool)
+        return self.tombstone
+
+    def append(self, vectors: np.ndarray, attrs: np.ndarray,
+               cells: np.ndarray) -> np.ndarray:
+        """Buffer routed rows; returns their newly-assigned original ids."""
+        nb = vectors.shape[0]
+        ids = np.arange(self.next_id, self.next_id + nb, dtype=np.int64)
+        self.next_id += nb
+        self.buf_vectors = np.concatenate([self.buf_vectors, vectors])
+        self.buf_attrs = np.concatenate([self.buf_attrs, attrs])
+        self.buf_ids = np.concatenate([self.buf_ids, ids])
+        self.buf_cells = np.concatenate(
+            [self.buf_cells, cells.astype(np.int32)])
+        return ids
+
+    def drop_buffered(self, keep: np.ndarray) -> None:
+        self.buf_vectors = self.buf_vectors[keep]
+        self.buf_attrs = self.buf_attrs[keep]
+        self.buf_ids = self.buf_ids[keep]
+        self.buf_cells = self.buf_cells[keep]
+
+
+def route_rows(index: GMGIndex, attrs: np.ndarray) -> np.ndarray:
+    """Grid cell per new row via the frozen quantile segment bounds."""
+    return grid_mod.assign_cells(np.asarray(attrs, np.float64),
+                                 index.seg_bounds,
+                                 index.config.seg_per_attr)
+
+
+def masked_attrs(index: GMGIndex, tombstone: np.ndarray) -> np.ndarray:
+    """Attribute table with tombstoned rows masked to NaN — NaN fails
+    every range comparison, so deleted rows can never enter a result
+    pool (traversal, dense scan, re-rank) while the graph still walks
+    *through* them. This is the query-time AND of the tombstone bitmap
+    into the predicate mask."""
+    return np.where(tombstone[:, None], np.nan,
+                    index.attrs).astype(np.float32)
+
+
+# -- query-side fold of the append buffer -------------------------------------
+
+def scan_buffer(state: MutationState, q: np.ndarray, lo: np.ndarray,
+                hi: np.ndarray, k: int):
+    """Brute-force top-k over the pending rows, one row per plan box.
+
+    q/lo/hi are (T, ...) *plan* rows (already replicated per box for
+    disjunctive plans). Returns ((T, k) i64 ids, (T, k) f32 exact d2),
+    padded with -1/+inf, candidates ordered (distance, id) to match the
+    deterministic segment merge downstream.
+    """
+    T = q.shape[0]
+    out_i = np.full((T, k), -1, np.int64)
+    out_d = np.full((T, k), np.inf, np.float32)
+    nb = state.pending_rows
+    if nb == 0 or T == 0:
+        return out_i, out_d
+    bv, ba, bids = state.buf_vectors, state.buf_attrs, state.buf_ids
+    diff = q[:, None, :].astype(np.float32) - bv[None]
+    d2 = (diff * diff).sum(axis=2).astype(np.float32)        # (T, nb)
+    ok = ((ba[None] >= lo[:, None, :]) &
+          (ba[None] <= hi[:, None, :])).all(axis=2)
+    d2 = np.where(ok, d2, np.inf)
+    # (distance, id) order so boundary ties resolve like the merge does
+    order = np.lexsort((np.broadcast_to(bids, (T, nb)), d2), axis=1)
+    kk = min(k, nb)
+    top = order[:, :kk]
+    td = np.take_along_axis(d2, top, axis=1)
+    ti = np.where(np.isfinite(td), bids[top], -1)
+    out_i[:, :kk] = ti
+    out_d[:, :kk] = np.where(np.isfinite(td), td, np.inf)
+    return out_i, out_d
+
+
+# -- flush: splice buffered rows into the cell-contiguous layout --------------
+
+def _greedy_link_cell(vectors_cell: np.ndarray, adj_local: np.ndarray,
+                      n_old: int, config, seed: int) -> np.ndarray:
+    """Link the cell's trailing new rows into its existing local graph.
+
+    Neighbor candidates come from the same device kernels the builder
+    uses — exact MXU top-k for cells under the exact-build threshold, a
+    single-cell traversal (the batched greedy-insert pass) above it —
+    then ``graph.insert_nodes`` occlusion-prunes and reverse-links.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.traversal import multi_cell_search
+    from repro.kernels import ops
+
+    n_c = vectors_cell.shape[0]
+    n_new = n_c - n_old
+    new_local = np.arange(n_old, n_c, dtype=np.int32)
+    degree = adj_local.shape[1]
+    k_cand = min(2 * degree, n_old)
+    q_new = jnp.asarray(vectors_cell[n_old:])
+    if n_old <= config.exact_build_threshold:
+        _, idx = ops.topk_l2(q_new, jnp.asarray(vectors_cell[:n_old]),
+                             k_cand)
+        cand = np.asarray(idx, np.int32)
+    else:
+        m = 1   # predicate-free search: one dummy attribute column
+        v_old = jnp.asarray(vectors_cell[:n_old])
+        a_old = jnp.zeros((n_old, m), jnp.float32)
+        adj_old = jnp.asarray(np.where(adj_local[:n_old] >= 0,
+                                       adj_local[:n_old], -1))
+        no_inter = jnp.full((n_old, 1, 1), -1, jnp.int32)
+        cs = jnp.asarray(np.array([0, n_old], np.int32))
+        lo = jnp.full((n_new, m), -jnp.inf, jnp.float32)
+        hi = jnp.full((n_new, m), jnp.inf, jnp.float32)
+        itin = jnp.zeros((n_new, 1), jnp.int32)
+        ids_j, _ = multi_cell_search(
+            v_old, a_old, adj_old, no_inter, cs, q_new, lo, hi, itin,
+            jax.random.PRNGKey(seed), k=k_cand, ef=config.build_ef,
+            entry_width=min(config.build_ef, 16),
+            entry_random=min(config.build_ef, 16), entry_beam_l=1,
+            max_iters=config.max_iters_per_cell, use_inter=False)
+        cand = np.asarray(ids_j, np.int32)
+    return graph_mod.insert_nodes(vectors_cell, adj_local, new_local,
+                                  cand, alpha=config.prune_alpha)
+
+
+def flush_index(index: GMGIndex, vec_new: np.ndarray, attrs_new: np.ndarray,
+                ids_new: np.ndarray, cells_new: np.ndarray, *,
+                seed: int = 0, graph_mode: str = "auto",
+                greedy_frac: float = 0.05, repair_inter: bool = True):
+    """Splice buffered rows into the index. Returns (new_index,
+    old_to_new) where ``old_to_new`` maps old internal rows to their new
+    positions (tombstones ride along on it).
+
+    ``graph_mode``: "greedy" links new rows into the existing cell
+    graphs (cheap, local), "rebuild" rebuilds each touched cell's graph
+    from scratch (builder-quality), "auto" picks greedy only when the
+    batch is a small fraction (< ``greedy_frac``) of the cell. A cell
+    with no pre-existing rows always rebuilds — greedy candidates come
+    from the old rows, so there is nothing to link into — which keeps
+    the explicit "greedy" override from silently leaving rows
+    disconnected.
+    """
+    if graph_mode not in ("auto", "greedy", "rebuild"):
+        raise ValueError(f"unknown graph_mode {graph_mode!r}")
+    cfg = index.config
+    n, dim = index.vectors.shape
+    S = index.n_cells
+    n_new = int(vec_new.shape[0])
+    if n_new == 0:
+        return index, np.arange(n, dtype=np.int64)
+
+    add = np.bincount(cells_new, minlength=S).astype(np.int64)
+    shift_before = np.zeros(S, np.int64)
+    np.cumsum(add[:-1], out=shift_before[1:])
+    old_to_new = np.arange(n, dtype=np.int64) + shift_before[index.cell_of]
+    cell_start2 = index.cell_start.astype(np.int64).copy()
+    cell_start2[1:] += np.cumsum(add)
+
+    # new rows land at the tail of their cell's (shifted) range,
+    # insertion order preserved within a cell
+    order_new = np.argsort(cells_new, kind="stable")
+    pos_new = np.empty(n_new, np.int64)
+    cursor = 0
+    touched = np.nonzero(add)[0]
+    for c in touched:
+        k_c = int(add[c])
+        end = cell_start2[c + 1]
+        pos_new[order_new[cursor:cursor + k_c]] = np.arange(end - k_c, end)
+        cursor += k_c
+
+    n2 = n + n_new
+    vectors2 = np.empty((n2, dim), np.float32)
+    vectors2[old_to_new] = index.vectors
+    vectors2[pos_new] = np.asarray(vec_new, np.float32)
+    attrs2 = np.empty((n2, index.attrs.shape[1]), np.float32)
+    attrs2[old_to_new] = index.attrs
+    attrs2[pos_new] = np.asarray(attrs_new, np.float32)
+    perm2 = np.empty(n2, np.int64)
+    perm2[old_to_new] = index.perm
+    perm2[pos_new] = np.asarray(ids_new, np.int64)
+    cell_of2 = np.empty(n2, np.int32)
+    cell_of2[old_to_new] = index.cell_of
+    cell_of2[pos_new] = cells_new.astype(np.int32)
+
+    def remap(a: np.ndarray) -> np.ndarray:
+        safe = np.maximum(a, 0)
+        shifted = safe + shift_before[index.cell_of[safe]]
+        return np.where(a >= 0, shifted, -1).astype(np.int32)
+
+    deg = index.intra_adj.shape[1]
+    l = index.inter_adj.shape[2]
+    intra2 = np.full((n2, deg), -1, np.int32)
+    intra2[old_to_new] = remap(index.intra_adj)
+    inter2 = np.full((n2, S, l), -1, np.int32)
+    inter2[old_to_new] = remap(index.inter_adj.reshape(n, -1)).reshape(
+        n, S, l)
+
+    # per touched cell: greedy-link or rebuild the local graph
+    for c in touched:
+        s2, e2 = int(cell_start2[c]), int(cell_start2[c + 1])
+        n_old_c = e2 - s2 - int(add[c])
+        cellv = vectors2[s2:e2]
+        adj_local = np.where(intra2[s2:e2] >= 0, intra2[s2:e2] - s2, -1)
+        rebuild = (graph_mode == "rebuild"
+                   or n_old_c == 0
+                   or (graph_mode == "auto"
+                       and add[c] > greedy_frac * n_old_c))
+        if rebuild:
+            adj_local = gmg_mod.cell_graph(cellv, cfg, seed=seed + int(c))
+        else:
+            adj_local = _greedy_link_cell(cellv, adj_local, n_old_c, cfg,
+                                          seed=seed + int(c))
+        intra2[s2:e2] = np.where(adj_local >= 0, adj_local + s2, -1)
+
+    # cross-cell edges: repaired columns for the touched cells (every
+    # row re-resolves its top-l into the changed cells), fresh columns
+    # into the untouched cells for the new rows only
+    if repair_inter:
+        cols = intercell.inter_edges_for_queries(
+            vectors2, attrs2, intra2, cell_start2, vectors2,
+            l, cells=list(touched), ef=cfg.search_ef, seed=seed)
+        for j, c in enumerate(touched):
+            inter2[:, c, :] = cols[:, j, :]
+            s2, e2 = int(cell_start2[c]), int(cell_start2[c + 1])
+            inter2[s2:e2, c, :] = -1
+    untouched = [int(c) for c in range(S) if add[c] == 0]
+    if untouched:
+        cols = intercell.inter_edges_for_queries(
+            vectors2, attrs2, intra2, cell_start2, vectors2[pos_new],
+            l, cells=untouched, ef=cfg.search_ef, seed=seed + 1)
+        for j, c in enumerate(untouched):
+            inter2[pos_new, c, :] = cols[:, j, :]
+
+    # ordering sketch: count new rows into their cell's histogram
+    hist2 = index.hist.copy()
+    assign = ordering.assign_clusters(np.asarray(vec_new, np.float32),
+                                      index.centroids)
+    np.add.at(hist2, (cells_new.astype(np.int64), assign), 1.0)
+
+    vq2 = vscale2 = None
+    if index.vq is not None:
+        qn, sn = quantize.quantize(np.asarray(vec_new, np.float32))
+        vq2 = np.empty((n2, dim), np.int8)
+        vq2[old_to_new] = index.vq
+        vq2[pos_new] = qn
+        vscale2 = np.empty(n2, np.float32)
+        vscale2[old_to_new] = index.vscale
+        vscale2[pos_new] = sn
+
+    new_index = GMGIndex(
+        config=cfg, vectors=vectors2, attrs=attrs2, perm=perm2,
+        seg_bounds=index.seg_bounds, cell_of=cell_of2,
+        cell_start=cell_start2.astype(np.int32),
+        cell_lo=index.cell_lo, cell_hi=index.cell_hi,
+        intra_adj=intra2, inter_adj=inter2,
+        centroids=index.centroids, hist=hist2,
+        attr_quantiles=gmg_mod.attr_quantile_grid(attrs2),
+        vq=vq2, vscale=vscale2)
+    return new_index, old_to_new
+
+
+# -- compaction: rebuild on the surviving rows --------------------------------
+
+def live_rows(index: GMGIndex, state: MutationState | None):
+    """(vectors, attrs, original ids) of every live row — surviving base
+    rows plus pending buffered rows — sorted by original id, i.e. the
+    exact input a fresh build on the survivors would see."""
+    if state is not None and state.tombstone is not None:
+        keep = np.nonzero(~state.tombstone)[0]
+    else:
+        keep = np.arange(index.n)
+    v = index.vectors[keep]
+    a = index.attrs[keep]
+    ids = index.perm[keep]
+    if state is not None and state.pending_rows:
+        v = np.concatenate([v, state.buf_vectors])
+        a = np.concatenate([a, state.buf_attrs])
+        ids = np.concatenate([ids, state.buf_ids])
+    order = np.argsort(ids, kind="stable")
+    return v[order], a[order], ids[order]
+
+
+def compact_index(index: GMGIndex, state: MutationState | None,
+                  seed: int = 0) -> GMGIndex:
+    """Drop tombstoned rows, fold in pending buffers, rebuild. The
+    result behaves identically to a fresh ``build_gmg`` on the surviving
+    rows (same row order, config and seed); original ids survive through
+    ``perm`` composition."""
+    v, a, ids = live_rows(index, state)
+    if v.shape[0] == 0:
+        raise ValueError("cannot compact an empty collection")
+    new_index = gmg_mod.build_gmg(v, a, index.config, seed=seed)
+    new_index.perm = ids[new_index.perm]
+    return new_index
+
+
+def oversized_cells(index: GMGIndex,
+                    state: MutationState | None = None) -> list:
+    """Cells whose row count (incl. pending) exceeds the slot quantum
+    the cache arena packs by (the build-time largest cell, rounded up) —
+    rebalanced by the next ``compact()``; an in-place split policy is
+    deferred (ROADMAP)."""
+    from repro.core.runtime import cache_slot_rows
+    sizes = np.diff(index.cell_start).astype(np.int64)
+    if state is not None and state.pending_rows:
+        sizes = sizes + state.pending_per_cell(index.n_cells)
+    quantum = cache_slot_rows(index)
+    return [int(c) for c in np.nonzero(sizes > quantum)[0]]

@@ -52,6 +52,20 @@ def kmeans(vectors: np.ndarray, n_clusters: int, iters: int = 10,
     return np.asarray(cent)
 
 
+def assign_clusters(vectors: np.ndarray, centroids: np.ndarray,
+                    chunk: int = 16384) -> np.ndarray:
+    """(n,) nearest-centroid id per vector — the histogram's assignment
+    half, exposed so streaming inserts can count new rows into ``H``
+    without rebuilding it."""
+    cent = jnp.asarray(centroids)
+    out = np.empty(len(vectors), np.int64)
+    for s in range(0, len(vectors), chunk):
+        v = jnp.asarray(vectors[s:s + chunk])
+        out[s:s + chunk] = np.asarray(
+            jnp.argmin(ops.pairwise_l2(v, cent), axis=1))
+    return out
+
+
 def build_histogram(vectors: np.ndarray, cell_of: np.ndarray,
                     centroids: np.ndarray, n_cells: int,
                     chunk: int = 16384) -> np.ndarray:

@@ -153,6 +153,14 @@ class OutOfCoreEngine:
         self.attrs_dev = self.rt.attrs_dev          # attrs ride along (f32)
         self.stats: dict = {}
 
+    def refresh_index(self, index: GMGIndex) -> None:
+        """Delete path (core.mutable): adopt a same-layout index whose
+        attrs carry tombstone NaN masks — one attr re-upload, the int8
+        residents and streaming plans are unaffected."""
+        self.index = index
+        self.rt.refresh_index(index)
+        self.attrs_dev = self.rt.attrs_dev
+
     # -- batch size under an explicit HBM constraint ------------------------
 
     def cells_per_batch(self) -> int:

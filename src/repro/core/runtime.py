@@ -592,6 +592,21 @@ class CellRuntime:
         self._resident_graph = None
         self._global_graph = None
 
+    def refresh_index(self, index: GMGIndex) -> None:
+        """Swap to a same-layout index whose *attribute table* changed —
+        the delete path: tombstoned rows read NaN, which no range
+        admits, so one attr re-upload folds the tombstone bitmap into
+        every predicate check. Vectors, graph views and any cell cache
+        built on this runtime stay resident (layout is unchanged), so
+        deletes never cold-start the engines."""
+        if index.attrs.shape != self.index.attrs.shape:
+            raise ValueError(
+                "refresh_index is for same-layout attr updates; a flush/"
+                "compact (row count changed) must rebuild the engine")
+        self.index = index
+        self.attrs_dev = jnp.asarray(index.attrs)
+        self.store = self.store._replace(attrs=self.attrs_dev)
+
     # -- graph views ---------------------------------------------------------
 
     def resident_graph(self) -> GraphView:

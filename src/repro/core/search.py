@@ -74,6 +74,14 @@ class Searcher:
         self.centroids = jnp.asarray(idx.centroids)
         self.hist = jnp.asarray(idx.hist)
 
+    def refresh_index(self, index: GMGIndex) -> None:
+        """Delete path (core.mutable): adopt a same-layout index whose
+        attrs carry tombstone NaN masks — one attr re-upload, resident
+        vectors/graph untouched."""
+        self.index = index
+        self.rt.refresh_index(index)
+        self.attrs = self.rt.store.attrs
+
     # -- device half: one fixed-shape program per (B, knobs) ---------------
 
     def _traverse(self, q, lo, hi, params: SearchParams, key):

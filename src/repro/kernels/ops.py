@@ -14,11 +14,8 @@ and slices results back.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import config, ref
 from repro.kernels import pairwise_l2 as _pl2

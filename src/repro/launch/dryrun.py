@@ -18,14 +18,12 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry

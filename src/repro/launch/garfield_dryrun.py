@@ -25,14 +25,12 @@ Usage:
 """
 
 import argparse
-import functools
 import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import dryrun as dr
 from repro.launch.mesh import make_production_mesh

@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ParamSpec, apply_rope, dense
+from repro.models.common import ParamSpec, apply_rope
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,7 @@ state, keep shapes static" principle.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.data.tokens import TokenPipeline

@@ -14,8 +14,6 @@ the compiled HLO.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device
 (the dry-run sets its own flag in its own process)."""
 
-import numpy as np
 import pytest
 
 from repro.api import AttrSchema, Collection

@@ -1,7 +1,6 @@
 """Dry-run machinery smoke (deliverable e, reduced configs, subprocess —
 the 512-device flag must not leak into this test process)."""
 
-import json
 import os
 import subprocess
 import sys

@@ -13,7 +13,7 @@ except ImportError:      # minimal container: deterministic fallback
 
 from repro.kernels import config as kcfg
 from repro.kernels import ops, ref
-from repro.kernels.sort_network import bitonic_sort, bitonic_merge, merge_topk
+from repro.kernels.sort_network import bitonic_sort, merge_topk
 
 
 RNG = np.random.default_rng(0)

@@ -1,7 +1,6 @@
 """Cluster-guided cell ordering (paper Section 4.2 / Alg. 3)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import ordering
