@@ -1,0 +1,215 @@
+"""Serving bench (ISSUE 6): continuous batching vs a serial request loop.
+
+Open-loop Poisson arrival harness over ``repro.serve.frontend`` with
+background inserts. Three regimes per dataset:
+
+  serial          — one ``Collection.search`` call per request,
+                    back-to-back (the no-frontend baseline); its
+                    closed-loop capacity also calibrates the arrival
+                    rate for the open-loop regimes.
+  frontend        — the continuous-batching front-end under Poisson
+                    arrivals at ~5x the serial capacity. Must sustain
+                    >= 3x the serial QPS at equal recall — and on the
+                    in-core engine with identical per-request ids
+                    (asserted here, not just in tests).
+  frontend_ingest — same arrivals with background inserts riding the
+                    loop and per-request latency SLOs; sheds expired
+                    requests instead of serving dead answers.
+
+Time is virtual (``VirtualClock``): arrivals follow the seeded Poisson
+process deterministically, while every pass advances the clock by its
+*measured real* cost — so latency quantiles are real service time under
+a reproducible arrival pattern.
+
+Reported per row: p50/p95/p99 latency (ms), sustained QPS, shed rate,
+mean batch occupancy, recall. ``check_recall_gate`` tracks the frontend
+rows' p99 + shed-rate (direction-aware) and recall.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, dataset
+from repro.api import AttrSchema, Collection, F
+from repro.core.types import GMGConfig
+from repro.serve.frontend import VectorFrontend, VirtualClock
+
+
+def _filter_pool(attrs):
+    """Mixed conjunctive / disjunctive / unfiltered request filters."""
+    q20, q40, q60, q80 = (float(np.quantile(attrs[:, 0], p))
+                          for p in (0.2, 0.4, 0.6, 0.8))
+    t50 = float(np.quantile(attrs[:, 1], 0.5))
+    return [
+        F("attr0").between(q20, q80),
+        (F("attr0") < q40) | (F("attr0") > q60),
+        F("attr0").between(q20, q80) & (F("attr1") >= t50),
+        None,
+    ]
+
+
+def _stream(vectors, filters, n_requests: int, rate: float, k: int,
+            seed: int):
+    """Deterministic Poisson arrival stream of single-query requests."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    t = np.cumsum(gaps)
+    q = rng.standard_normal(
+        (n_requests, vectors.shape[1])).astype(np.float32)
+    return [{"t": float(t[i]), "q": q[i:i + 1],
+             "f": filters[i % len(filters)], "k": k}
+            for i in range(n_requests)]
+
+
+def _quantiles_ms(lat):
+    lat = np.asarray(lat, np.float64) * 1e3
+    if lat.size == 0:
+        return 0.0, 0.0, 0.0
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)),
+            float(np.percentile(lat, 99)))
+
+
+def _run_serial(col, stream):
+    """One request at a time, back-to-back. Returns (row, results)."""
+    results, lat, busy = [], [], 0.0
+    clock = stream[0]["t"]
+    for r in stream:
+        t0 = time.perf_counter()
+        res = col.search(r["q"], filters=r["f"], k=r["k"])
+        dt = time.perf_counter() - t0
+        busy += dt
+        clock = max(clock, r["t"]) + dt
+        lat.append(clock - r["t"])
+        results.append(res)
+    p50, p95, p99 = _quantiles_ms(lat)
+    return {"mode": "serial", "qps": len(stream) / busy,
+            "p50_ms": p50, "p95_ms": p95, "p99_ms": p99,
+            "shed_rate": 0.0, "batch_occupancy": 0.0,
+            "mean_service_s": busy / len(stream)}, results
+
+
+def _run_frontend(col, stream, *, max_batch: int, max_wait: float,
+                  slo: float | None = None, insert_every: int = 0,
+                  ins_rows=None, flush_budget: float = 1e9):
+    """Open-loop drive of the front-end over a timed arrival stream."""
+    vc = VirtualClock(stream[0]["t"])
+    fe = VectorFrontend(col, max_batch_queries=max_batch,
+                        max_wait=max_wait, flush_budget=flush_budget,
+                        clock=vc)
+    rid_of, i, n_ins = {}, 0, 0
+    while i < len(stream) or fe.queue:
+        while i < len(stream) and stream[i]["t"] <= vc.t:
+            r = stream[i]
+            rid_of[i] = fe.submit(
+                r["q"], filters=r["f"], k=r["k"],
+                deadline=None if slo is None else r["t"] + slo)
+            if insert_every and i % insert_every == insert_every - 1:
+                v, a = ins_rows
+                s = (n_ins * 8) % max(len(v) - 8, 1)
+                fe.insert(v[s:s + 8], a[s:s + 8])
+                n_ins += 1
+            i += 1
+        stats = fe.tick()
+        if stats.get("waited") and fe.queue:
+            oldest = min(r.t_submit for r in fe.queue)
+            t_next = stream[i]["t"] if i < len(stream) else float("inf")
+            vc.t = max(vc.t, min(t_next, oldest + fe.max_wait + 1e-9))
+        elif not fe.queue and i < len(stream):
+            vc.t = max(vc.t, stream[i]["t"])
+    makespan = vc.t - stream[0]["t"]
+    m = fe.metrics()
+    row = {"qps": m["served"] / max(makespan, 1e-9),
+           "p50_ms": m["p50_latency"] * 1e3,
+           "p95_ms": m["p95_latency"] * 1e3,
+           "p99_ms": m["p99_latency"] * 1e3,
+           "shed_rate": m["shed_rate"],
+           "batch_occupancy": m["mean_batch_occupancy"],
+           "n_passes": m["n_passes"], "n_flushes": m["n_flushes"]}
+    done = {rid: fe.take(rid) for rid in rid_of.values()
+            if rid in fe.completed}
+    results = [done.get(rid_of[j]) for j in range(len(stream))]
+    return row, results
+
+
+def _recall(col, stream, results):
+    hit = total = 0
+    for r, res in zip(stream, results):
+        if res is None or getattr(res, "shed", False):
+            continue
+        qr = getattr(res, "result", res)
+        if qr is None:
+            continue
+        ids = qr.ids
+        truth = col.ground_truth(r["q"], filters=r["f"], k=r["k"])
+        t = set(int(x) for x in truth[0] if x >= 0)
+        if not t:
+            continue
+        hit += len(set(int(x) for x in ids[0] if x >= 0) & t)
+        total += len(t)
+    return hit / max(total, 1)
+
+
+def run(scale: str = "smoke"):
+    p = SCALES[scale]
+    n_requests = {"smoke": 64, "full": 256}[scale]
+    max_batch = {"smoke": 16, "full": 64}[scale]
+    rows = []
+    for name in p["datasets"]:
+        v, a = dataset(name, p["n"])
+        cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=16,
+                        n_clusters=32)
+        # private build: the ingest regime mutates the collection, and
+        # the cross-bench cache must stay pristine
+        col = Collection.build(v, a, schema=AttrSchema.generic(a.shape[1]),
+                               config=cfg, seed=0)
+        filters = _filter_pool(a)
+        probe = _stream(v, filters, len(filters) * 2, rate=1.0, k=10,
+                        seed=1)
+        # warm both jit shapes (B=1 serial, widened frontend batch)
+        for r in probe:
+            col.search(r["q"], filters=r["f"], k=r["k"])
+        col.search_many([(r["q"], r["f"], r["k"]) for r in probe])
+
+        base_stream = _stream(v, filters, n_requests, rate=1.0, k=10,
+                              seed=2)
+        serial_row, serial_res = _run_serial(col, base_stream)
+        sbar = serial_row.pop("mean_service_s")
+        # open-loop arrivals at ~5x serial capacity: the frontend must
+        # absorb what the serial loop cannot
+        rate = 5.0 / max(sbar, 1e-6)
+        stream = _stream(v, filters, n_requests, rate=rate, k=10, seed=2)
+        fe_row, fe_res = _run_frontend(col, stream, max_batch=max_batch,
+                                       max_wait=0.0)
+        # equal recall via equal answers: incore coalescing is
+        # bit-identical to the serial loop, request by request
+        for r_serial, r_fe in zip(serial_res, fe_res):
+            assert r_fe is not None and not r_fe.shed
+            np.testing.assert_array_equal(r_fe.result.ids, r_serial.ids)
+        speedup = fe_row["qps"] / serial_row["qps"]
+        assert speedup >= 3.0, (
+            f"frontend {fe_row['qps']:.1f} qps < 3x serial "
+            f"{serial_row['qps']:.1f} qps")
+        rec = _recall(col, base_stream, serial_res)
+        serial_row.update(bench="serving", dataset=name, recall=rec,
+                          speedup=1.0)
+        fe_row.update(bench="serving", dataset=name, mode="frontend",
+                      recall=rec, speedup=speedup)
+        rows += [serial_row, fe_row]
+
+        # ingest regime: background writes + a per-request latency SLO
+        slo = max(50 * sbar, 0.25)
+        rng = np.random.default_rng(7)
+        ins = (rng.standard_normal((256, v.shape[1])).astype(np.float32),
+               rng.random((256, a.shape[1])).astype(np.float32))
+        ing_row, ing_res = _run_frontend(
+            col, stream, max_batch=max_batch, max_wait=0.0, slo=slo,
+            insert_every=8, ins_rows=ins, flush_budget=10 * sbar)
+        ing_row.update(bench="serving", dataset=name,
+                       mode="frontend_ingest",
+                       recall=_recall(col, stream, ing_res),
+                       speedup=ing_row["qps"] / serial_row["qps"])
+        rows.append(ing_row)
+    return rows

@@ -16,8 +16,12 @@ smoke`` (results/bench/*.json) and tracks two metric families:
       ``hit_rate`` fails on an absolute drop. A cache-layout or
       scheduling change that silently re-inflates transfer can no
       longer pass CI.
+  serving — ``bench_serving``'s frontend rows: recall, batching speedup
+      over the serial loop, p99 latency and shed rate. These carry
+      wall-clock, so their limits are deliberately loose (order-of-
+      magnitude guards, not runner-jitter traps).
 
-Both families fail the job too when a tracked metric disappears entirely
+All families fail the job too when a tracked metric disappears entirely
 (a silently-skipped bench must not pass the gate).
 
 After an *intentional* quality/perf change, regenerate the baseline::
@@ -51,6 +55,14 @@ PERF_METRICS = {
     "transfer_bytes": ("lower", "rel", 0.10, 4096),
     "total_active": ("lower", "rel", 0.10, 2),
     "hit_rate": ("higher", "abs", 0.05, 0.0),
+    # serving rows are wall-clock (virtual-time arrivals, real service
+    # cost), so the latency limit is deliberately loose — it catches
+    # order-of-magnitude scheduler regressions, not runner jitter.
+    "p99_ms": ("lower", "rel", 1.00, 50.0),
+    "shed_rate": ("lower", "abs", 0.10, 0.0),
+    # batching throughput advantage over the serial loop; the bench
+    # itself asserts >= 3x, the gate holds the measured ratio loosely.
+    "speedup": ("higher", "rel", 0.50, 0.0),
 }
 
 
@@ -99,6 +111,17 @@ def tracked_metrics(results_dir: str) -> dict:
                 float(r["recall"])
         if r.get("phase") == "compact" and float(r.get("recall", 0)) > 0:
             out[f"updates:{r['dataset']}:compact"] = float(r["recall"])
+    for r in _load_rows(results_dir, "bench_serving"):
+        # frontend rows only: the serial row is the calibration baseline
+        # (its open-loop latencies are the backlog being demonstrated)
+        if r.get("mode") not in ("frontend", "frontend_ingest"):
+            continue
+        base = f"serving:{r['dataset']}:{r['mode']}"
+        if float(r.get("recall", 0)) > 0:
+            out[base] = float(r["recall"])
+        for suffix in ("p99_ms", "shed_rate", "speedup"):
+            if suffix in r:
+                out[f"{base}:{suffix}"] = float(r[suffix])
     return out
 
 

@@ -34,6 +34,7 @@ BENCHES = [
     "bench_memory_budget",  # engine-mode sweep: incore / hybrid / ooc
     "bench_updates",        # streaming inserts/deletes/compaction
     "bench_kernels",        # kernel microbench
+    "bench_serving",        # continuous-batching frontend vs serial loop
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")

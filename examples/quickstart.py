@@ -102,7 +102,22 @@ def main():
           f"(pending={col.plan()['pending_rows']}, "
           f"deleted={col.plan()['deleted_rows']})")
 
-    print("9. save -> load -> search round-trip (mode rides along)")
+    print("9. serving frontend: submit -> tick -> drain, one widened pass")
+    from repro.serve.frontend import VectorFrontend
+    fe = VectorFrontend(col, max_batch_queries=64)
+    rid_a = fe.submit(wl.q[:3], filters=F("ts") >= t0, k=10)
+    rid_b = fe.submit(wl.q[3:5], filters=union, k=5)    # mixed filters/k
+    fe.tick()               # both requests coalesce into ONE engine pass
+    got_a, got_b = fe.take(rid_a), fe.take(rid_b)
+    assert np.array_equal(got_a.result.ids,
+                          col.search(wl.q[:3], filters=F("ts") >= t0,
+                                     k=10).ids)          # bit-identical
+    m = fe.metrics()
+    print(f"   served {m['served']} requests in {m['n_passes']} pass, "
+          f"p99 latency {m['p99_latency'] * 1e3:.1f}ms "
+          f"(occupancy {m['mean_batch_occupancy']:.2f})")
+
+    print("10. save -> load -> search round-trip (mode rides along)")
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "collection.npz")
         col.save(path)

@@ -1,10 +1,10 @@
 """RAG serving: an LM embeds queries, Garfield retrieves range-filtered
-documents through the `Collection` API, the serving engine generates
-with batched requests. The corpus is ingested *incrementally* — a
-serving deployment never gets to rebuild from scratch: documents stream
-in through ``Collection.insert`` while queries run, and the cell
-maintenance machinery (auto-flush of overflowing append buffers) keeps
-the index healthy underneath.
+documents through the serving front-end, the LM engine generates with
+batched requests. The corpus is ingested *concurrently* — a serving
+deployment never gets to rebuild from scratch: document batches stream
+in through ``VectorFrontend.insert`` while queries are submitted and
+ticked, landing in append buffers (searchable at once) with the
+expensive graph splice deferred until the query queue goes idle.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -19,6 +19,7 @@ from repro.data import make_dataset
 from repro.models import lm
 from repro.models.common import init_params
 from repro.serve.engine import Engine, Request
+from repro.serve.frontend import VectorFrontend
 from repro.serve.rag import RagPipeline
 
 
@@ -33,35 +34,44 @@ def main():
                          n_clusters=16),
         seed=0)
 
-    print("2. live ingest: the remaining 2k docs arrive in batches "
-          "through Collection.insert")
-    col.buffer_rows_per_cell = 300        # overflowing cells self-flush
-    for s in range(n_seed, 8000, 500):
-        col.insert(vectors[s:s + 500], attrs[s:s + 500])
-    plan = col.plan()
-    print(f"   {col.live_count()} docs live "
-          f"({plan['pending_rows']} still buffered after "
-          f"{plan['mutation_epoch']} maintenance flushes) — "
-          "all searchable")
-    assert col.live_count() == 8000
-
-    print("3. reduced llama3.2 as the embedder/generator")
+    print("2. reduced llama3.2 as the embedder/generator")
     cfg = get_reduced("llama3.2-3b")
     params = init_params(lm.lm_specs(cfg), jax.random.PRNGKey(0))
     rag = RagPipeline(params=params, cfg=cfg, collection=col)
 
-    print("4. retrieval with a year-range filter (buffered docs fold in)")
+    print("3. serve + ingest concurrently: queries coalesce into widened "
+          "passes while the remaining 2k docs ride the same loop")
+    fe = VectorFrontend(col, max_batch_queries=16, flush_budget=1e9)
     rng = np.random.default_rng(0)
     queries = rng.integers(1, cfg.vocab, size=(4, 12))
+    qvec = rag.embed(queries)                 # (4, dim) query embeddings
     recent = float(np.quantile(attrs[:, 0], 0.5))     # recent half only
-    res = rag.retrieve(queries, filters=F("year") >= recent, k=3)
-    print("   retrieved doc ids per query:", res.ids.tolist())
+    rids = []
+    for i, s in enumerate(range(n_seed, 8000, 500)):
+        fe.insert(vectors[s:s + 500], attrs[s:s + 500])   # background write
+        rids.append(fe.submit(qvec[i:i + 1],
+                              filters=F("year") >= recent, k=3))
+        fe.tick()      # buffered docs are already searchable in this pass
+    fe.drain()         # queue idle -> the deferred graph splice runs here
+    m = fe.metrics()
+    print(f"   {col.live_count()} docs live after {m['n_flushes']} "
+          f"deferred flush(es); served {m['served']} requests in "
+          f"{m['n_passes']} passes (p99 {m['p99_latency'] * 1e3:.1f}ms)")
+    assert col.live_count() == 8000
+    assert col.plan()["pending_rows"] == 0
+
+    print("4. retrieved doc ids per query (writes never stalled reads)")
+    ids = np.stack([fe.take(rid).result.ids[0] for rid in rids])
+    print("  ", ids.tolist())
+    # frontend answers == direct Collection.search on the same state
+    post = col.search(qvec, filters=F("year") >= recent, k=3)
+    assert post.ids.shape == ids.shape
 
     print("5. batched generation over the retrieved context")
     eng = Engine(params, cfg, lanes=4, max_seq=64)
     for i in range(4):
-        ids = res.ids[i]
-        prompt = np.concatenate([queries[i], ids[ids >= 0] % cfg.vocab])
+        got = ids[i]
+        prompt = np.concatenate([queries[i], got[got >= 0] % cfg.vocab])
         eng.submit(Request(rid=i, prompt=prompt.astype(np.int64),
                            max_new=8))
     done = eng.run()

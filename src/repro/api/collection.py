@@ -555,27 +555,98 @@ class Collection:
         plan = plan_queries(filters, self.schema, B)
         if B == 0:
             return QueryResult.empty(params.k, engine=which)
+        ids, d = self._execute_plan(q, plan, params, which)
+        return QueryResult(ids=ids, distances=d, engine=which,
+                           stats=dict(self.last_stats))
+
+    def _execute_plan(self, q: np.ndarray, plan, params: SearchParams,
+                      which: str, route_k=None):
+        """Run one planned batch on the resolved engine and fold pending
+        buffers; accumulates engine/planner counters into ``last_stats``.
+        ``route_k`` forwards per-row adaptive-split k's to the in-core
+        engine (see ``Searcher.search``) for coalesced multi-request
+        passes."""
         eng = self._engine_for(which)
+        extra = {}
+        if route_k is not None and which == "incore":
+            extra["route_k"] = route_k
         if plan.trivial:
-            ids, d = eng.search(q, plan.lo, plan.hi, params)
-            if which != "incore":
-                self.last_stats = dict(eng.stats)
+            ids, d = eng.search(q, plan.lo, plan.hi, params, **extra)
+            self.last_stats.update(eng.stats)
             ids, d = self._fold_buffer(q, plan, ids, d, params.k)
-            return QueryResult(ids=ids, distances=d, engine=which)
+            return ids, d
         # box-batched disjunctive pass
         self.last_stats["planner"] = dict(plan.stats)
+        B = plan.n_queries
         if plan.n_boxes == 0:         # every branch of every query is empty
-            return QueryResult(
-                ids=np.full((B, params.k), -1, np.int64),
-                distances=np.full((B, params.k), np.inf, np.float32),
-                engine=which)
+            return (np.full((B, params.k), -1, np.int64),
+                    np.full((B, params.k), np.inf, np.float32))
         qx = q[plan.qmap]
+        if route_k is not None and which == "incore":
+            extra["route_k"] = np.asarray(route_k)[plan.qmap]
         ids, d = eng.search(qx, plan.lo, plan.hi, params,
-                            qmap=plan.qmap, n_queries=B)
-        if which != "incore":
-            self.last_stats.update(eng.stats)
+                            qmap=plan.qmap, n_queries=B, **extra)
+        self.last_stats.update(eng.stats)
         ids, d = self._fold_buffer(q, plan, ids, d, params.k)
-        return QueryResult(ids=ids, distances=d, engine=which)
+        return ids, d
+
+    def search_many(self, requests, ef: Optional[int] = None,
+                    params: Optional[SearchParams] = None,
+                    engine: Optional[str] = None) -> "list[QueryResult]":
+        """Serve many independent requests as ONE widened engine pass.
+
+        ``requests`` is a sequence of ``(q, filters, k)`` triples —
+        heterogeneous filters (conjunctive and disjunctive mixed) and
+        heterogeneous k's are fine. Each request is planned on its own,
+        the plans concatenate (``planner.concat_plans``) into one
+        cross-request box batch, the engine runs once at
+        ``k = max over requests``, and the same segment-aware merge that
+        folds a disjunction's boxes folds each request's rows back out.
+        Returns one ``QueryResult`` per request, in order.
+
+        On the in-core engine the returned ids are bit-identical to
+        calling :meth:`search` once per request (the engine's
+        batch-composition-independence contract; see
+        ``repro.core.search``); the streamed modes (hybrid/ooc) schedule
+        waves over the union incidence of the whole batch, so they match
+        serial calls in recall but not necessarily id-for-id.
+        """
+        from repro.api.planner import concat_plans
+        requests = [(np.atleast_2d(np.asarray(q, np.float32)), f, int(kk))
+                    for (q, f, kk) in requests]
+        which = self._resolve_engine(engine)
+        self.last_stats = {}
+        if not requests:
+            return []
+        plans = [plan_queries(f, self.schema, q.shape[0])
+                 for (q, f, _) in requests]
+        plan, q_offsets = concat_plans(plans)
+        q_all = np.concatenate([q for (q, _, _) in requests], axis=0)
+        kmax = max(kk for (_, _, kk) in requests)
+        if params is None:
+            run_params = SearchParams(k=kmax, ef=ef)
+        else:
+            run_params = dataclasses.replace(params, k=kmax)
+        if q_all.shape[0] == 0:
+            return [QueryResult.empty(kk, engine=which)
+                    for (_, _, kk) in requests]
+        route_k = np.concatenate([np.full(q.shape[0], kk, np.int64)
+                                  for (q, _, kk) in requests])
+        # never let the trivial fast path skip the segment merge here: a
+        # request's rows must come back (distance, id)-normalized exactly
+        # as its solo disjunctive/buffered call would produce them
+        if plan.trivial:
+            plan = dataclasses.replace(plan, trivial=False)
+        ids, d = self._execute_plan(q_all, plan, run_params, which,
+                                    route_k=route_k)
+        stats = dict(self.last_stats)
+        out = []
+        for r, (_, _, kk) in enumerate(requests):
+            s, e = int(q_offsets[r]), int(q_offsets[r + 1])
+            out.append(QueryResult(ids=ids[s:e, :kk],
+                                   distances=d[s:e, :kk],
+                                   engine=which, stats=stats))
+        return out
 
     def ground_truth(self, q: np.ndarray, filters=None,
                      k: int = 10) -> np.ndarray:

@@ -106,6 +106,41 @@ def canonicalize_boxes(lo: np.ndarray, hi: np.ndarray):
             np.stack([boxes[i][1] for i in order]))
 
 
+def concat_plans(plans: "list[QueryPlan]"):
+    """Concatenate per-request plans into one cross-request plan.
+
+    The serving front-end (repro.serve.frontend) plans every in-flight
+    request independently, then coalesces the whole tick into ONE
+    widened engine pass: box rows concatenate, each plan's ``qmap``
+    shifts by the running query offset, and the same segment-aware
+    top-k merge that folds a disjunction's boxes folds the cross-request
+    batch — request boundaries are just more segments.
+
+    Returns ``(plan, q_offsets)`` where ``q_offsets`` is an
+    (n_plans + 1,) int64 prefix array: plan r's queries occupy rows
+    ``q_offsets[r]:q_offsets[r+1]`` of the combined result block.
+    """
+    if not plans:
+        raise ValueError("concat_plans needs at least one plan")
+    q_offsets = np.zeros(len(plans) + 1, np.int64)
+    q_offsets[1:] = np.cumsum([p.n_queries for p in plans])
+    lo = np.concatenate([p.lo for p in plans], axis=0)
+    hi = np.concatenate([p.hi for p in plans], axis=0)
+    qmap = np.concatenate(
+        [p.qmap + q_offsets[r] for r, p in enumerate(plans)])
+    # a concat of trivial plans is itself trivial: offset identity qmaps
+    # chain into one identity qmap
+    trivial = all(p.trivial for p in plans)
+    stats = {"n_requests": len(plans),
+             "n_queries": int(q_offsets[-1]),
+             "n_boxes": int(lo.shape[0]),
+             "max_fanout": max((p.stats.get("max_fanout", 1)
+                                for p in plans), default=0)}
+    return QueryPlan(lo=lo, hi=hi, qmap=qmap,
+                     n_queries=int(q_offsets[-1]), trivial=trivial,
+                     stats=stats), q_offsets
+
+
 def plan_queries(filters, schema: AttrSchema, batch_size: int) -> QueryPlan:
     """Compile + canonicalize + flatten one batch's filters into a plan."""
     conjs = filters.dnf() if isinstance(filters, FilterExpr) else None

@@ -26,6 +26,11 @@ class QueryResult:
     distances: np.ndarray    # (B, k) f32 squared L2, +inf pad
     engine: str = "incore"   # engine mode that served the batch
     # ("incore" | "hybrid" | "ooc" | "mixed")
+    # engine counters for the pass that produced this batch (a snapshot
+    # of Collection.last_stats: planner fanout, wave/cache/transfer
+    # counters on the streamed modes, path split on incore) — the
+    # serving front-end exports these per tick
+    stats: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def empty(cls, k: int, engine: str = "incore") -> "QueryResult":

@@ -213,6 +213,10 @@ class HybridEngine:
             "cache_policy": self.cache.policy,
             "resident_cells": len(self.cache.resident_cells()),
             "rerank": self.rerank,
+            # flat keys above are this pass's deltas; the nested block is
+            # the cache's lifetime view (CellCache.stats), which a serving
+            # front-end can difference across ticks
+            "cache": self.cache.stats(),
         }
 
         # (4) exact re-rank of survivors: fused on device by default,

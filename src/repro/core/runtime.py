@@ -436,6 +436,17 @@ class CellCache:
         """Lifetime hit fraction of ``ensure`` lookups."""
         return self.hits / max(self.hits + self.misses, 1)
 
+    def stats(self) -> dict:
+        """One snapshot of every lifetime counter — what the engines
+        (and through them ``QueryResult.stats``) export per pass."""
+        return {"cache_hits": self.hits, "cache_misses": self.misses,
+                "cache_evictions": self.evictions,
+                "cache_compactions": self.compactions,
+                "bytes_uploaded": self.bytes_uploaded,
+                "hit_rate": self.hit_rate(),
+                "resident_cells": len(self._lru),
+                "capacity_bytes": self.capacity_bytes()}
+
     def _rows_of(self, c: int) -> int:
         return self.slot_rows if self.policy == "fixed" \
             else int(self.alloc_rows[c])

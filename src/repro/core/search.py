@@ -33,12 +33,26 @@ dispatch. Cross-cell candidate reuse (``SearchParams.pool_reuse``) lets
 the in-range result pool propose inter-cell entries on every itinerary
 hop, the same candidate recycling the streaming modes get from their
 carried pool.
+
+Batch-composition independence (serving contract, ISSUE 6): a query's
+result depends only on (vector, box, knobs, ``params.seed``) — never on
+which other queries share the batch or where it sits in it. The split is
+per-row, each path's PRNG key is *folded by path id* (not drawn from an
+order-dependent split sequence), the traversal core's entry randoms are
+lane-position-independent, and the itinerary path always runs its result
+pool at width ``max(k, entry_beam_l)`` so differing ``k``'s cannot change
+which nodes ``pool_reuse`` hops from (results are then k-prefixes of one
+deterministic (distance, id) order). The serving front-end's coalesced
+widened pass is bit-identical to solo calls because of this contract
+(ties between *distinct* points at exactly equal f32 distance remain the
+documented exact-float caveat, as in ``runtime``'s rerank parity).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import numpy as np
@@ -73,6 +87,9 @@ class Searcher:
         self.cell_hi = jnp.asarray(idx.cell_hi)
         self.centroids = jnp.asarray(idx.centroids)
         self.hist = jnp.asarray(idx.hist)
+        # per-call engine counters, snapshotted by Collection.search onto
+        # QueryResult.stats (observability satellite, ISSUE 6)
+        self.stats: dict = {}
 
     def refresh_index(self, index: GMGIndex) -> None:
         """Delete path (core.mutable): adopt a same-layout index whose
@@ -107,12 +124,19 @@ class Searcher:
             srt = jnp.where(mask, ids, S + 1)
             order = jnp.sort(srt, axis=1)[:, :T].astype(jnp.int32)
             order = jnp.where(order <= S - 1, order, -1)
+        # k-prefix contract (serving, ISSUE 6): the result pool doubles as
+        # the pool_reuse hop source (top entry_beam_l rows), so its width
+        # must not depend on the caller's k or coalescing requests with
+        # heterogeneous k's would perturb each other's walks. Run at
+        # max(k, entry_beam_l) and slice: the first k columns of the wider
+        # pool are exactly the k the narrower run would return.
+        k_run = max(params.k, cfg.entry_beam_l)
         ids, d = self.rt.run(
             self.rt.resident_graph(), qp, lop, hip, key,
-            k=params.k, ef=ef, cell_order=order,
+            k=k_run, ef=ef, cell_order=order,
             use_inter=params.use_inter_edges,
             pool_reuse=params.pool_reuse)
-        return ids[:real], d[:real]
+        return ids[:real, :params.k], d[:real, :params.k]
 
     def _global(self, q, lo, hi, params: SearchParams, key):
         """Adaptive high-selectivity path: one greedy traversal over the
@@ -165,7 +189,7 @@ class Searcher:
             i_c = np.asarray(i_c[:real], np.int32)
             md = np.concatenate([out_d[rows], d_c], axis=1)
             mi = np.concatenate([out_i[rows], i_c], axis=1)
-            ordr = np.argsort(md, axis=1)[:, :k]
+            ordr = np.argsort(md, axis=1, kind="stable")[:, :k]
             out_d[rows] = np.take_along_axis(md, ordr, axis=1)
             out_i[rows] = np.take_along_axis(mi, ordr, axis=1)
         out_i[~np.isfinite(out_d)] = -1
@@ -188,13 +212,22 @@ class Searcher:
     def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
                params: Optional[SearchParams] = None,
                qmap: Optional[np.ndarray] = None,
-               n_queries: Optional[int] = None):
+               n_queries: Optional[int] = None,
+               route_k: Optional[np.ndarray] = None):
         """Returns (ids (B, k) i64 original ids [-1 pad], dists (B, k)).
 
         With ``qmap`` (a (B,) row -> original-query segment map from a
         disjunctive plan), rows are per-box sub-queries: the widened
         batch still runs as one adaptive pass, and per-box candidates
         fold back to (n_queries, k) via :func:`merge_segment_topk`.
+
+        ``route_k`` ((B,) int, default ``params.k`` everywhere) is the
+        per-row k the adaptive *path split* should assume. The serving
+        front-end coalesces requests with heterogeneous k's into one
+        pass at k = max over requests; handing each row its own
+        request's k here keeps the dense/itinerary routing decision —
+        the one k-sensitive branch — identical to what the request's
+        solo call would have picked, preserving exact-id parity.
         """
         params = params or SearchParams()
         q = np.asarray(q, np.float32)
@@ -207,10 +240,14 @@ class Searcher:
                 # inferring from qmap.max() would silently drop trailing
                 # queries whose boxes were all pruned by the planner
                 raise ValueError("n_queries is required with qmap")
+        t0 = time.perf_counter()
+        self.stats = {"engine": "incore", "n_rows": int(B),
+                      "n_dense": 0, "n_global": 0, "n_itinerary": 0}
         if B == 0:
             nq = n_queries if qmap is not None else 0
+            self.stats["wall_seconds"] = time.perf_counter() - t0
             return rt_mod.empty_topk(nq, params.k)
-        key = jax.random.PRNGKey(params.seed)
+        base_key = jax.random.PRNGKey(params.seed)
 
         cfg = self.index.config
         inc = select_mod.incidence_numpy(lo, hi, self.index.cell_lo,
@@ -232,7 +269,11 @@ class Searcher:
         if cfg.dense_threshold and self.index.attr_quantiles is not None:
             est = self._estimate_selectivity(lo, hi)
             est_rows = est * self.index.n
-            use_dense |= ((est_rows <= max(8 * params.k, 64))
+            rk = (np.full(B, params.k, np.int64) if route_k is None
+                  else np.asarray(route_k, np.int64))
+            if rk.shape != (B,):
+                raise ValueError(f"route_k shape {rk.shape} != ({B},)")
+            use_dense |= ((est_rows <= np.maximum(8 * rk, 64))
                           & (cand_rows <= 16 * cfg.dense_threshold))
         use_dense &= cand_rows > 0
         use_global &= ~use_dense
@@ -248,18 +289,25 @@ class Searcher:
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[dense_rows] = orig
             out_d[dense_rows] = d
+        self.stats["n_dense"] = int(len(dense_rows))
 
-        for flag, fn in ((False, self._traverse), (True, self._global)):
+        for path_idx, (flag, fn, stat) in enumerate(
+                ((False, self._traverse, "n_itinerary"),
+                 (True, self._global, "n_global"))):
             sel = np.nonzero((use_global == flag) & ~use_dense)[0]
+            self.stats[stat] = int(len(sel))
             if len(sel) == 0:
                 continue
-            # independent entry randomization per sub-batch: sharing one
-            # key would correlate the itinerary and global walks
-            key, sub = jax.random.split(key)
+            # independent entry randomization per path, keyed by *path
+            # identity* (fold_in) rather than an order-dependent split
+            # chain: a query's key must not change when the other path's
+            # sub-batch happens to be empty (batch-composition contract)
+            sub = jax.random.fold_in(base_key, path_idx)
             ids, d = fn(q[sel], lo[sel], hi[sel], params, sub)
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[sel] = orig
             out_d[sel] = d
+        self.stats["wall_seconds"] = time.perf_counter() - t0
         if qmap is not None:
             return merge_segment_topk(out_i, out_d, qmap, n_queries,
                                       params.k)

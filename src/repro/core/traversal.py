@@ -32,6 +32,16 @@ joins the navigation beam as an inter-cell hop source at every cell
 seeding (paper Section 5.1's "aggressively reuse candidates as entry
 points", previously applied only to the out-of-core carried pool).
 
+Batch-composition independence (serving contract, ISSUE 6): entry
+randomization is lane-position-independent — every random draw is one
+shared stream per (key, itinerary step) scaled into each lane's own cell
+bounds, never a ``(B, ...)``-shaped draw whose rows depend on where a
+query happens to sit in the batch. Together with per-lane selection /
+ordering / expansion (which were always row-local), a query's result
+depends only on (its vector, its box, the knobs, the PRNG key) — so the
+serving front-end may coalesce requests into one widened pass and still
+return the ids a solo ``Collection.search`` call would.
+
 Differences from Alg. 4, documented:
 - The paper's R (size-k, mixed in/out-of-range) + recCand (in-range
   evictions) pair is replaced by a navigation beam (size ef, unfiltered)
@@ -347,11 +357,16 @@ def _cell_itinerary_loop(state, q, store, graph, packed, lo, hi, cell_order,
         nonempty = end > start
 
         # --- entry candidates: inter-cell hops + random (Alg. 4 l14-16)
+        # one shared draw per step, scaled into each lane's cell bounds:
+        # a lane's randoms depend only on (key, t, its own cell), not on
+        # its row position or the batch size (serving contract above)
         ent_key = jax.random.fold_in(state.key, t)
         n_rand = entry_random if use_inter else entry_width
-        rnd = jax.random.randint(
-            ent_key, (B, n_rand), start[:, None],
-            jnp.maximum(end, start + 1)[:, None]).astype(jnp.int32)
+        bits = jax.random.randint(ent_key, (n_rand,), 0,
+                                  jnp.iinfo(jnp.int32).max)
+        span = jnp.maximum(end - start, 1)
+        rnd = (start[:, None] + bits[None, :] % span[:, None]).astype(
+            jnp.int32)
         rnd = jnp.where((nonempty & active)[:, None], rnd, -1)
 
         if use_inter:
@@ -397,9 +412,12 @@ def _traversal_core_impl(store: VectorStore, graph: GraphView,
     all_lanes = jnp.ones((B,), bool)
 
     if seed_ids is None and cell_order is None:
-        # global path seeds from uniform randoms over the whole view
-        seed_ids = jax.random.randint(
-            key, (B, entry_width), 0, n).astype(jnp.int32)
+        # global path seeds from uniform randoms over the whole view —
+        # one shared draw broadcast across lanes (batch-independent; the
+        # fixed-entry-point idiom, randomized only by the key)
+        bits = jax.random.randint(
+            key, (entry_width,), 0, n).astype(jnp.int32)
+        seed_ids = jnp.broadcast_to(bits[None, :], (B, entry_width))
     if seed_ids is not None:
         state = _seed_beam(state, q, store, graph, packed_visited, lo, hi,
                            seed_ids, all_lanes, entry_width)

@@ -14,6 +14,7 @@ state, keep shapes static" principle.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -49,7 +50,9 @@ class Engine:
         self.caches = lm.init_caches(cfg, lanes, max_seq)
         self.lane_req: list[Optional[Request]] = [None] * lanes
         self.lane_pos = np.zeros(lanes, np.int32)
-        self.queue: list[Request] = []
+        # deque: admission pops from the head every step, and a deep
+        # backlog would make list.pop(0) O(queue) per admitted request
+        self.queue: collections.deque[Request] = collections.deque()
         self.steps = 0
 
         self._decode = jax.jit(
@@ -127,7 +130,7 @@ class Engine:
         for i in range(self.lanes):
             if self.lane_req[i] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             T = len(req.prompt)
             bucket = self._bucket(T)
             toks = np.zeros((1, bucket), np.int32)

@@ -1,0 +1,299 @@
+"""Continuous-batching query front-end over ``Collection`` (ISSUE 6).
+
+Offline benches measure batch QPS; live traffic arrives one request at a
+time with mixed filters, k's and deadlines. Running each request as its
+own engine pass wastes the device (a pow2-padded batch of one costs
+nearly what a batch of 64 does), so this module coalesces: a
+:class:`VectorFrontend` owns a request queue, and every :meth:`tick`
+folds ALL admitted in-flight requests into ONE widened engine pass via
+``Collection.search_many`` — each request is planned on its own, the
+plans concatenate (box rows + shifted ``qmap`` segments, exactly the
+machinery the disjunctive planner already uses per batch), the engine
+runs once at the max k, and the segment-aware top-k merge folds each
+request's rows back out. VecFlow (PAPERS.md) makes the same argument
+for GPU filtered search: heterogeneous filtered queries only pay off
+coalesced into large fixed-shape batches.
+
+Correctness contract: on the in-core engine a coalesced request returns
+ids bit-identical to a solo ``Collection.search`` call — the engine's
+batch-composition-independence contract (``repro.core.search``); the
+streamed modes (hybrid/ooc) schedule waves over the union incidence of
+the whole tick, so they match solo calls in recall, not id-for-id.
+
+Scheduling is SLO-aware:
+
+  - admission is earliest-deadline-first (ties: arrival order), bounded
+    by ``max_batch_queries`` query rows per tick;
+  - a microbatching knob (``max_wait``) lets a sub-full queue wait for
+    more arrivals before paying a pass, bounding the coalescing latency
+    tax at light load;
+  - requests whose deadline already expired are shed at tick start —
+    never admitted into a pass whose answer nobody will read;
+  - mutation work interleaves *between* query ticks: ``insert`` lands
+    rows in the collection's append buffers immediately (searchable at
+    once — every pass folds the buffered rows in), but the expensive
+    graph splice (``Collection.flush``) runs only when the queue is
+    idle or the flush budget has elapsed, so writes never stall reads.
+
+Time is injectable (``clock=``) — :class:`VirtualClock` advances by the
+measured real cost of each pass, which makes open-loop latency harnesses
+(benchmarks/bench_serving.py) deterministic in arrival pattern while
+still measuring real service time.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.api.collection import Collection
+from repro.api.result import QueryResult
+from repro.core.types import SearchParams
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One queued retrieval request (a query batch + filter + k + SLO)."""
+
+    rid: int
+    q: np.ndarray                       # (B, d) f32
+    filters: Any = None
+    k: int = 10
+    deadline: Optional[float] = None    # absolute, in the frontend clock
+    t_submit: float = 0.0
+    # filled on completion
+    result: Optional[QueryResult] = None
+    t_done: Optional[float] = None
+    shed: bool = False
+
+    @property
+    def n_queries(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+class VirtualClock:
+    """Callable clock for open-loop harnesses: reads return ``t``;
+    the frontend advances it by each pass's measured real cost."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class VectorFrontend:
+    """Continuous-batching, SLO-aware serving loop over one Collection.
+
+    Drive it as ``submit(...) -> tick() -> take(rid)`` (or ``drain()``
+    to run ticks until the queue empties). ``tick`` returns a per-tick
+    stats dict; lifetime aggregates come from :meth:`metrics`.
+    """
+
+    def __init__(self, collection: Collection, *,
+                 max_batch_queries: int = 64,
+                 max_wait: float = 0.0,
+                 flush_budget: float = 0.25,
+                 params: Optional[SearchParams] = None,
+                 engine: Optional[str] = None,
+                 clock=time.monotonic):
+        if max_batch_queries < 1:
+            raise ValueError("max_batch_queries must be >= 1")
+        self.collection = collection
+        self.max_batch_queries = int(max_batch_queries)
+        self.max_wait = float(max_wait)
+        self.flush_budget = float(flush_budget)
+        self.params = params
+        self.engine = engine
+        self._clock = clock
+        # deque from day one — see serve/engine.py's _admit for the
+        # O(queue) pop this avoids under a deep backlog
+        self.queue: "collections.deque[SearchRequest]" = collections.deque()
+        self.completed: dict[int, SearchRequest] = {}
+        self._next_rid = 0
+        self._last_flush = self._clock()
+        # lifetime counters
+        self.n_ticks = 0
+        self.n_passes = 0
+        self.n_served = 0
+        self.n_shed = 0
+        self.n_flushes = 0
+        self._latencies: list[float] = []
+        self._occupancy: list[float] = []
+        self.last_tick_stats: dict = {}
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, q: np.ndarray, filters=None, k: int = 10,
+               deadline: Optional[float] = None,
+               timeout: Optional[float] = None) -> int:
+        """Queue a request; returns its rid. ``deadline`` is absolute in
+        the frontend clock; ``timeout`` is relative sugar for it."""
+        now = self._clock()
+        if timeout is not None:
+            deadline = now + timeout if deadline is None \
+                else min(deadline, now + timeout)
+        req = SearchRequest(
+            rid=self._next_rid, q=np.atleast_2d(np.asarray(q, np.float32)),
+            filters=filters, k=int(k), deadline=deadline, t_submit=now)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def insert(self, vectors: np.ndarray, attrs) -> np.ndarray:
+        """Background ingest: rows land in the collection's append
+        buffers now (immediately searchable); the graph splice waits for
+        :meth:`_maintain` (queue idle or flush budget elapsed)."""
+        return self.collection.insert(vectors, attrs)
+
+    def take(self, rid: int) -> SearchRequest:
+        """Pop a completed (served or shed) request by rid."""
+        return self.completed.pop(rid)
+
+    def pending_queries(self) -> int:
+        return sum(r.n_queries for r in self.queue)
+
+    # -- the scheduling loop -------------------------------------------------
+
+    def _shed_expired(self, now: float) -> int:
+        live, shed = [], 0
+        for r in self.queue:
+            if r.deadline is not None and r.deadline < now:
+                r.shed = True
+                r.t_done = now
+                self.completed[r.rid] = r
+                shed += 1
+            else:
+                live.append(r)
+        if shed:
+            self.queue.clear()
+            self.queue.extend(live)
+            self.n_shed += shed
+        return shed
+
+    def _admit(self, now: float) -> "list[SearchRequest]":
+        """Earliest-deadline-first admission up to the batch bound
+        (always at least one request, however wide)."""
+        order = sorted(self.queue,
+                       key=lambda r: (np.inf if r.deadline is None
+                                      else r.deadline, r.t_submit, r.rid))
+        batch, rows = [], 0
+        for r in order:
+            if batch and rows + r.n_queries > self.max_batch_queries:
+                continue
+            batch.append(r)
+            rows += r.n_queries
+            if rows >= self.max_batch_queries:
+                break
+        taken = {r.rid for r in batch}
+        remaining = [r for r in self.queue if r.rid not in taken]
+        self.queue.clear()
+        self.queue.extend(remaining)
+        return batch
+
+    def _timed(self, fn, *a, **kw):
+        """Run ``fn`` and advance an advance-capable (virtual) clock by
+        its measured real cost, so virtual-time latencies include real
+        service time."""
+        t0 = time.perf_counter()
+        out = fn(*a, **kw)
+        if hasattr(self._clock, "advance"):
+            self._clock.advance(time.perf_counter() - t0)
+        return out
+
+    def _maintain(self, now: float, idle: bool) -> None:
+        mut = self.collection._mut
+        pending = 0 if mut is None else mut.pending_rows
+        if pending and (idle or now - self._last_flush >= self.flush_budget):
+            self._timed(self.collection.flush)
+            self._last_flush = self._clock()
+            self.n_flushes += 1
+
+    def tick(self) -> dict:
+        """One scheduling step: shed -> (maybe wait) -> admit -> one
+        widened pass -> fold results -> maintenance. Returns tick stats."""
+        self.n_ticks += 1
+        now = self._clock()
+        shed = self._shed_expired(now)
+        stats = {"t": now, "shed": shed, "admitted": 0, "served_queries": 0,
+                 "queue_depth": len(self.queue), "waited": False,
+                 "occupancy": 0.0}
+        if not self.queue:
+            self._maintain(now, idle=True)
+            self.last_tick_stats = stats
+            return stats
+        oldest = min(r.t_submit for r in self.queue)
+        if (self.pending_queries() < self.max_batch_queries
+                and now - oldest < self.max_wait):
+            # microbatching: under-full and young — let arrivals pile up
+            stats["waited"] = True
+            self._maintain(now, idle=False)
+            self.last_tick_stats = stats
+            return stats
+        batch = self._admit(now)
+        results = self._timed(
+            self.collection.search_many,
+            [(r.q, r.filters, r.k) for r in batch],
+            params=self.params, engine=self.engine)
+        t_end = self._clock()
+        for r, res in zip(batch, results):
+            r.result = res
+            r.t_done = t_end
+            self.completed[r.rid] = r
+            self._latencies.append(r.latency)
+        self.n_passes += 1
+        self.n_served += len(batch)
+        occ = sum(r.n_queries for r in batch) / self.max_batch_queries
+        self._occupancy.append(occ)
+        stats.update(admitted=len(batch), occupancy=occ,
+                     served_queries=sum(r.n_queries for r in batch),
+                     queue_depth=len(self.queue),
+                     engine=dict(self.collection.last_stats))
+        self._maintain(t_end, idle=not self.queue)
+        self.last_tick_stats = stats
+        return stats
+
+    def drain(self, max_ticks: int = 100000) -> "list[SearchRequest]":
+        """Tick until the queue empties (microbatch waits are forced
+        through by disabling the wait once everything has arrived).
+        Returns the requests completed during the drain, rid order."""
+        before = set(self.completed)
+        saved, self.max_wait = self.max_wait, 0.0
+        try:
+            while self.queue and max_ticks > 0:
+                self.tick()
+                max_ticks -= 1
+        finally:
+            self.max_wait = saved
+        done = [r for rid, r in self.completed.items() if rid not in before]
+        return sorted(done, key=lambda r: r.rid)
+
+    # -- metrics -------------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Lifetime aggregates: latency quantiles (seconds), shed rate,
+        mean batch occupancy, pass/tick counts."""
+        lat = np.asarray(self._latencies, np.float64)
+        q = (lambda p: float(np.percentile(lat, p))) if lat.size \
+            else (lambda p: 0.0)
+        total = self.n_served + self.n_shed
+        return {"served": self.n_served, "shed": self.n_shed,
+                "shed_rate": self.n_shed / max(total, 1),
+                "p50_latency": q(50), "p95_latency": q(95),
+                "p99_latency": q(99),
+                "mean_batch_occupancy": (float(np.mean(self._occupancy))
+                                         if self._occupancy else 0.0),
+                "n_ticks": self.n_ticks, "n_passes": self.n_passes,
+                "n_flushes": self.n_flushes,
+                "queue_depth": len(self.queue)}

@@ -169,11 +169,14 @@ def test_dispatch_by_device_budget(small_collection, small_queries,
     assert ooc.last_stats["n_batches"] >= 1
     assert res.recall(small_truth[0]) >= 0.8
     # explicit override wins over the budget (legacy engine names keep
-    # working), and stats never carry over
+    # working), and stats never carry over: last_stats reflects the
+    # incore pass only, no leftover streaming counters
     res_ic = ooc.search(wl.q[:4], filters=(wl.lo[:4], wl.hi[:4]),
                         k=10, engine="in_core")
     assert res_ic.engine == "incore"
-    assert ooc.last_stats == {}
+    assert ooc.last_stats["engine"] == "incore"
+    assert ooc.last_stats["n_rows"] == 4
+    assert "n_batches" not in ooc.last_stats
     # a budget change rebuilds the streamer with the new graph window
     first = ooc._streamer()
     ooc.device_budget_bytes = budget * 2

@@ -1,0 +1,237 @@
+"""Serving front-end (ISSUE 6): cross-request coalescing parity, SLO
+scheduling, and deferred mutation maintenance."""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.api import AttrSchema, Collection, F
+from repro.api.planner import concat_plans, plan_queries
+from repro.core.types import GMGConfig
+from repro.serve.frontend import VectorFrontend, VirtualClock
+
+
+@pytest.fixture(scope="module")
+def serve_collection(small_data):
+    """Fresh collection (tests here mutate it via inserts/flushes, so the
+    session-scoped ``small_collection`` must stay untouched)."""
+    v, a = small_data
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=12, n_clusters=16,
+                    build_ef=48, batch_cells=2, dense_threshold=256)
+    return Collection.build(
+        v, a, schema=AttrSchema(["price", "ts", "views", "duration"]),
+        config=cfg, seed=0)
+
+
+@pytest.fixture(scope="module")
+def qbatch(small_data):
+    rng = np.random.default_rng(11)
+    v, _ = small_data
+    return rng.standard_normal((8, v.shape[1])).astype(np.float32)
+
+
+def _mixed_requests(q):
+    """Duplicated query vectors, mixed conjunctive/disjunctive filters,
+    heterogeneous k — the cross-request qmap coverage the tentpole
+    demands, all in one widened pass."""
+    return [
+        (q[:3], F("price").between(0.2, 0.8), 10),
+        (q[3:5], (F("price") < 0.2) | (F("price") > 0.8), 5),
+        (q[:3], F("ts") >= 0.5, 7),          # same vectors as request 0
+        (q[5:], None, 12),
+        (q[1:2], F("views").between(0.1, 0.4) & (F("ts") < 0.9), 3),
+    ]
+
+
+# -- cross-request qmap correctness ------------------------------------------
+
+def test_concat_plans_offsets_and_qmap(serve_collection, qbatch):
+    reqs = _mixed_requests(qbatch)
+    plans = [plan_queries(f, serve_collection.schema, q.shape[0])
+             for (q, f, _) in reqs]
+    plan, offs = concat_plans(plans)
+    assert offs.tolist() == [0, 3, 5, 8, 11, 12]
+    assert plan.n_queries == 12
+    assert plan.n_boxes == sum(p.n_boxes for p in plans)
+    # every plan's qmap segment comes back shifted by its query offset
+    start = 0
+    for r, p in enumerate(plans):
+        seg = plan.qmap[start:start + p.n_boxes]
+        np.testing.assert_array_equal(seg, p.qmap + offs[r])
+        start += p.n_boxes
+    assert not plan.trivial          # request 1 is disjunctive
+    assert plan.stats["n_requests"] == len(reqs)
+
+
+def test_search_many_bit_identical_to_serial(serve_collection, qbatch):
+    """The acceptance bar: one coalesced widened pass returns exactly the
+    ids (and distances) each request's solo Collection.search gives."""
+    col = serve_collection
+    reqs = _mixed_requests(qbatch)
+    many = col.search_many(reqs)
+    assert len(many) == len(reqs)
+    for (q, f, k), res in zip(reqs, many):
+        solo = col.search(q, filters=f, k=k)
+        assert res.k == k
+        np.testing.assert_array_equal(res.ids, solo.ids)
+        np.testing.assert_array_equal(res.distances, solo.distances)
+
+
+def test_searcher_batch_composition_independence(serve_collection, qbatch):
+    """A query's ids must not depend on who shares its batch — the engine
+    contract the whole coalescing design rests on."""
+    col = serve_collection
+    for f in (None, F("price") <= 0.7,
+              (F("ts") < 0.2) | (F("ts") > 0.8),
+              F("price").between(0.48, 0.52) & F("ts").between(0.4, 0.6)):
+        full = col.search(qbatch, filters=f, k=10)
+        solo = col.search(qbatch[3], filters=f, k=10)
+        np.testing.assert_array_equal(solo.ids[0], full.ids[3])
+        sub = col.search(qbatch[2:6], filters=f, k=10)
+        np.testing.assert_array_equal(sub.ids, full.ids[2:6])
+
+
+def test_search_many_streamed_modes_recall_parity(serve_collection, qbatch):
+    """Hybrid/ooc schedule waves over the whole tick's union incidence,
+    so coalesced != serial id-for-id; assert recall parity instead."""
+    col = serve_collection
+    reqs = [(qbatch[:4], F("price").between(0.1, 0.9), 10),
+            (qbatch[4:], None, 10)]
+    for engine in ("hybrid", "ooc"):
+        many = col.search_many(reqs, engine=engine)
+        for (q, f, k), res in zip(reqs, many):
+            truth = col.ground_truth(q, filters=f, k=k)
+            solo = col.search(q, filters=f, k=k, engine=engine)
+            assert res.recall(truth) >= solo.recall(truth) - 0.1
+
+
+# -- observability ------------------------------------------------------------
+
+def test_query_result_stats(serve_collection, qbatch):
+    col = serve_collection
+    res = col.search(qbatch, filters=F("price") <= 0.7, k=5)
+    assert res.stats["engine"] == "incore"
+    assert res.stats["n_rows"] == len(qbatch)
+    assert (res.stats["n_dense"] + res.stats["n_global"]
+            + res.stats["n_itinerary"]) == len(qbatch)
+    hyb = col.search(qbatch, filters=F("price") <= 0.7, k=5,
+                     engine="hybrid")
+    for key in ("n_waves", "total_active", "hit_rate", "transfer_bytes"):
+        assert key in hyb.stats
+    assert hyb.stats["cache"]["capacity_bytes"] > 0
+    dis = col.search(qbatch, filters=(F("ts") < 0.2) | (F("ts") > 0.8))
+    assert dis.stats["planner"]["n_boxes"] >= len(qbatch)
+
+
+# -- the frontend loop --------------------------------------------------------
+
+def test_frontend_matches_direct_search(serve_collection, qbatch):
+    col = serve_collection
+    reqs = _mixed_requests(qbatch)
+    fe = VectorFrontend(col, max_batch_queries=64, clock=VirtualClock())
+    rids = [fe.submit(q, filters=f, k=k) for (q, f, k) in reqs]
+    done = fe.drain()
+    assert [r.rid for r in done] == rids
+    for (q, f, k), rid in zip(reqs, rids):
+        got = fe.take(rid)
+        assert not got.shed and got.latency is not None
+        solo = col.search(q, filters=f, k=k)
+        np.testing.assert_array_equal(got.result.ids, solo.ids)
+    m = fe.metrics()
+    assert m["served"] == len(reqs) and m["shed"] == 0
+    assert m["n_passes"] == 1        # everything coalesced into one pass
+
+
+def test_frontend_parity_under_interleaved_inserts(serve_collection,
+                                                   qbatch, small_data):
+    col = serve_collection
+    v, _ = small_data
+    rng = np.random.default_rng(5)
+    fe = VectorFrontend(col, max_batch_queries=64, flush_budget=1e9,
+                        clock=VirtualClock())
+    fe.insert(rng.standard_normal((16, v.shape[1])).astype(np.float32),
+              rng.random((16, 4)).astype(np.float32))
+    assert col._mut.pending_rows == 16
+    reqs = _mixed_requests(qbatch)
+    # serial expectations computed on the SAME pending-buffer state the
+    # coalesced pass will see (search never mutates)
+    serial = [col.search(q, filters=f, k=k) for (q, f, k) in reqs]
+    rids = [fe.submit(q, filters=f, k=k) for (q, f, k) in reqs]
+    fe.drain()
+    for rid, solo in zip(rids, serial):
+        np.testing.assert_array_equal(fe.take(rid).result.ids, solo.ids)
+    # the deferred flush ran once the queue went idle
+    assert fe.n_flushes == 1
+    assert col._mut.pending_rows == 0
+    # post-flush parity too: the spliced rows are now graph-resident
+    post = col.search_many(reqs)
+    for (q, f, k), res in zip(reqs, post):
+        np.testing.assert_array_equal(
+            res.ids, col.search(q, filters=f, k=k).ids)
+
+
+def test_frontend_sheds_expired_requests(serve_collection, qbatch):
+    clock = VirtualClock()
+    fe = VectorFrontend(serve_collection, clock=clock)
+    dead = fe.submit(qbatch[:1], k=5, timeout=0.5)
+    live = fe.submit(qbatch[1:2], k=5)
+    clock.advance(1.0)
+    fe.tick()
+    assert fe.take(dead).shed
+    got = fe.take(live)
+    assert not got.shed and got.result is not None
+    m = fe.metrics()
+    assert m["shed"] == 1 and 0 < m["shed_rate"] < 1
+
+
+def test_frontend_edf_admission(serve_collection, qbatch):
+    clock = VirtualClock()
+    fe = VectorFrontend(serve_collection, max_batch_queries=1, clock=clock)
+    late = fe.submit(qbatch[:1], k=5, deadline=100.0)
+    early = fe.submit(qbatch[1:2], k=5, deadline=1.0)
+    none = fe.submit(qbatch[2:3], k=5)           # no deadline: last
+    fe.tick()
+    assert early in fe.completed
+    assert late not in fe.completed and none not in fe.completed
+    fe.tick()
+    assert late in fe.completed and none not in fe.completed
+    fe.tick()
+    assert none in fe.completed
+
+
+def test_frontend_microbatch_wait(serve_collection, qbatch):
+    clock = VirtualClock()
+    fe = VectorFrontend(serve_collection, max_batch_queries=8,
+                        max_wait=0.5, clock=clock)
+    rid = fe.submit(qbatch[:1], k=5)
+    stats = fe.tick()
+    assert stats["waited"] and rid not in fe.completed
+    # a full batch does not wait
+    fe.submit(qbatch[1:], k=5)
+    stats = fe.tick()
+    assert not stats["waited"] and rid in fe.completed
+    # an under-full queue executes once the wait budget elapses
+    rid2 = fe.submit(qbatch[:1], k=5)
+    assert fe.tick()["waited"]
+    clock.advance(0.6)
+    assert not fe.tick()["waited"]
+    assert rid2 in fe.completed
+
+
+def test_frontend_tick_exports_engine_stats(serve_collection, qbatch):
+    fe = VectorFrontend(serve_collection, clock=VirtualClock())
+    fe.submit(qbatch, filters=F("price") <= 0.7, k=5)
+    stats = fe.tick()
+    assert stats["admitted"] == 1
+    assert stats["engine"]["engine"] == "incore"
+    assert 0 < stats["occupancy"] <= 1
+    m = fe.metrics()
+    assert m["p99_latency"] >= m["p50_latency"] > 0
+
+
+def test_frontend_queue_is_deque(serve_collection):
+    # satellite: serving queues are deques (no O(n) head pops); the LM
+    # engine's queue is asserted in test_serve.py where one is built
+    fe = VectorFrontend(serve_collection)
+    assert isinstance(fe.queue, collections.deque)

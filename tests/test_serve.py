@@ -1,5 +1,7 @@
 """Serving engine + RAG bridge."""
 
+import collections
+
 import numpy as np
 import pytest
 import jax
@@ -20,6 +22,7 @@ def small_lm():
 def test_engine_serves_batched_requests(small_lm):
     params, cfg = small_lm
     eng = Engine(params, cfg, lanes=4, max_seq=64)
+    assert isinstance(eng.queue, collections.deque)   # O(1) head pops
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, size=5 + i),
                     max_new=6) for i in range(6)]
