@@ -42,8 +42,11 @@ def run(scale: str = "smoke"):
     ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
     v, a = common.dataset(ds, n)
     from repro.core import gmg
+    # dense_threshold pinned below bench scale: this bench measures the
+    # streaming tiers' cache/transfer behavior, which the cost model's
+    # dense route would bypass entirely at smoke n (see docs/tuning.md)
     cfg = GMGConfig(seg_per_attr=(2, 2, 2), intra_degree=16, n_clusters=32,
-                    batch_cells=3)
+                    batch_cells=3, dense_threshold=256)
     idx = gmg.build_gmg(v, a, cfg, seed=0)
     schema = AttrSchema.generic(a.shape[1])
     base = Collection(index=idx, schema=schema)

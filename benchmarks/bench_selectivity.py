@@ -1,48 +1,121 @@
-"""Paper Figure 8: fixed range widths 1/64, 1/16, 1/4 across m."""
+"""Selectivity sweep 1e-4 -> 1.0: the cost model's routing regimes.
+
+For each target selectivity the same workload runs twice on every
+engine mode (incore / hybrid / ooc) through the public ``Collection``
+facade: once with the per-box cost model ON (default ``SearchParams``)
+and once with ``CostModel.off()`` — the ablation arm that forces every
+box onto the traversal path, i.e. the pre-cost-model behavior.
+
+Regime gates (the acceptance contract of the cost-model PR):
+
+  - ultra-selective (target <= 1e-3): the fused masked-scan dense route
+    must actually engage (``n_dense > 0``), beat the traversal arm on
+    QPS (``speedup >= 1``) and give up no recall (within 0.02 — the
+    dense route is exact within the selected cells, so in practice it
+    *gains* recall here);
+  - broad (target >= 0.5): the cost model must be a no-op — routes all
+    broad, recall within 0.02, and QPS within wall-clock noise of the
+    ablation arm (loose 0.5x floor: same code path, the only delta is
+    the estimator's host-side pass).
+
+Mid-range targets between the two scale ``ef`` instead of switching
+algorithms; they are reported (route counts + recall both arms) but
+only recall-gated, since wider pools intentionally trade QPS for
+recall. Row estimates vs the dense scan's exact qualifying counts are
+reported as ``est_rel_err`` (the estimator-quality satellite).
+
+The recall gate (check_recall_gate.py) tracks each regime's cost-on
+recall and on/off speedup across commits.
+"""
 
 from __future__ import annotations
 
+import math
+
 from benchmarks import common
-from repro.core.baselines import postfilter_search, prefilter_search
 from repro.core.search import recall_at_k
-from repro.core.types import SearchParams
+from repro.core.selectivity import CostModel
+from repro.core.types import GMGConfig, SearchParams
 from repro.data import make_queries
+
+# target overall selectivities; <= 0.1 realized as m=2 conjunctions of
+# width sqrt(target) (the paper's multi-attribute regime), broader ones
+# as a single predicate (a 2-attr box at width ~0.7 would clip against
+# the domain edges and miss the target)
+TARGETS = (1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0)
+DENSE_REGIME = 1e-3      # targets <= this must win via the dense route
+BROAD_REGIME = 0.5       # targets >= this must be routing no-ops
+
+# 4x4 grid (500 rows/cell at smoke scale) with a dense threshold well
+# under n, so the sweep actually crosses the route boundaries instead
+# of degenerating to one regime; see docs/tuning.md
+_CFG = GMGConfig(seg_per_attr=(4, 4), intra_degree=16, n_clusters=32,
+                 dense_threshold=256)
+
+
+def _workload(v, a, nq, target):
+    if target >= BROAD_REGIME:
+        return make_queries(v, a, nq, 1, seed=60,
+                            fixed_width=min(target, 1.0))
+    return make_queries(v, a, nq, 2, seed=60,
+                        fixed_width=math.sqrt(target))
 
 
 def run(scale: str = "smoke"):
     sc = common.SCALES[scale]
     ds, n, nq = sc["datasets"][0], sc["n"], sc["n_queries"]
     v, a = common.dataset(ds, n)
-    idx = common.built_index(ds, n)
-    s = common.searcher_for(idx)
-    from repro.core.baselines import FlatBaseline
-    flat = common._CACHE.setdefault(("flat", ds, n),
-                                    FlatBaseline.build(v, a, degree=16))
+    col = common.built_collection(ds, n, cfg=_CFG)
+    on = SearchParams(k=10, ef=64)
+    off = SearchParams(k=10, ef=64, cost=CostModel.off())
     rows = []
-    for m in (1, 2):
-        for width in (1 / 64, 1 / 16, 1 / 4):
-            wl = make_queries(v, a, nq, m, seed=60, fixed_width=width)
-            tids, _ = common.truth(ds, n, wl)
-            p = SearchParams(k=10, ef=64)
-            ids, _ = s.search(wl.q, wl.lo, wl.hi, p)
-            qps, _ = common.timed_qps(
-                lambda: s.search(wl.q, wl.lo, wl.hi, p), nq)
-            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
-                             method="garfield",
-                             recall=round(recall_at_k(ids, tids), 4),
-                             qps=round(qps, 1)))
-            ids, _ = prefilter_search(flat, wl.q, wl.lo, wl.hi, 10)
-            qps, _ = common.timed_qps(
-                lambda: prefilter_search(flat, wl.q, wl.lo, wl.hi, 10), nq)
-            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
-                             method="gpu_pre",
-                             recall=round(recall_at_k(ids, tids), 4),
-                             qps=round(qps, 1)))
-            ids, _ = postfilter_search(flat, wl.q, wl.lo, wl.hi, 10)
-            qps, _ = common.timed_qps(
-                lambda: postfilter_search(flat, wl.q, wl.lo, wl.hi, 10), nq)
-            rows.append(dict(bench="selectivity", m=m, width=round(width, 4),
-                             method="cagra_post",
-                             recall=round(recall_at_k(ids, tids), 4),
-                             qps=round(qps, 1)))
+    wls = []                 # keep workloads alive: truth() caches by id()
+    for target in TARGETS:
+        wl = _workload(v, a, nq, target)
+        wls.append(wl)
+        tids, _ = common.truth(ds, n, wl)
+        for mode in ("incore", "hybrid", "ooc"):
+            res_on = col.search(wl.q, (wl.lo, wl.hi), params=on,
+                                engine=mode)
+            qps_on, _ = common.timed_qps(
+                lambda: col.search(wl.q, (wl.lo, wl.hi), params=on,
+                                   engine=mode), nq)
+            res_off = col.search(wl.q, (wl.lo, wl.hi), params=off,
+                                 engine=mode)
+            qps_off, _ = common.timed_qps(
+                lambda: col.search(wl.q, (wl.lo, wl.hi), params=off,
+                                   engine=mode), nq)
+            r_on = recall_at_k(res_on.ids, tids)
+            r_off = recall_at_k(res_off.ids, tids)
+            speedup = qps_on / max(qps_off, 1e-9)
+            st = res_on.stats
+            row = dict(bench="selectivity", dataset=ds, sel=target,
+                       mode=mode,
+                       recall=round(r_on, 4),
+                       recall_off=round(r_off, 4),
+                       qps=round(qps_on, 1), qps_off=round(qps_off, 1),
+                       speedup=round(speedup, 3),
+                       n_dense=int(st.get("n_dense", 0)),
+                       n_mid=int(st.get("n_mid", 0)),
+                       n_broad=int(st.get("n_broad", 0)))
+            if "est_rel_err_dense" in st:
+                row["est_rel_err"] = round(st["est_rel_err_dense"], 4)
+            rows.append(row)
+
+            # per-regime gates (see module docstring)
+            tag = f"sel={target} mode={mode}"
+            assert r_on >= r_off - 0.02, \
+                f"[{tag}] cost model lost recall: {r_on:.3f} < {r_off:.3f}"
+            if target <= DENSE_REGIME:
+                assert row["n_dense"] > 0, \
+                    f"[{tag}] dense route never engaged"
+                assert speedup >= 1.0, \
+                    f"[{tag}] dense route slower than traversal " \
+                    f"({qps_on:.0f} vs {qps_off:.0f} QPS)"
+            if target >= BROAD_REGIME:
+                assert row["n_dense"] == 0 and row["n_mid"] == 0, \
+                    f"[{tag}] broad workload mis-routed: {row}"
+                assert speedup >= 0.5, \
+                    f"[{tag}] routing overhead on broad regime " \
+                    f"({qps_on:.0f} vs {qps_off:.0f} QPS)"
     return rows

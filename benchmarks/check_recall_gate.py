@@ -4,9 +4,11 @@ Reads the per-bench JSON written by ``python -m benchmarks.run --scale
 smoke`` (results/bench/*.json) and tracks two metric families:
 
   quality — recall of Garfield's QPS/recall sweep rows, the disjunctive
-      box-batched rows and the engine-mode memory-budget sweep (incore /
-      hybrid / ooc). Fails when a recall drops more than ``tolerance``
-      below baseline.
+      box-batched rows, the engine-mode memory-budget sweep (incore /
+      hybrid / ooc) and the cost-model selectivity sweep (cost-on
+      recall per regime x mode, plus its on/off speedup under the loose
+      wall-clock rule). Fails when a recall drops more than
+      ``tolerance`` below baseline.
   perf — the streamed engines' scheduling/transfer counters from
       ``bench_memory_budget``: ``total_active`` (Alg. 5's objective),
       cache ``hit_rate`` and warm ``transfer_bytes``. These are
@@ -103,6 +105,16 @@ def tracked_metrics(results_dir: str) -> dict:
             for suffix in PERF_METRICS:
                 if suffix in r:
                     out[f"{base}:{suffix}"] = float(r[suffix])
+    for r in _load_rows(results_dir, "bench_selectivity"):
+        # cost-model sweep: cost-on recall per (selectivity, mode) regime
+        # plus the on/off speedup ratio (held to the loose wall-clock
+        # rule shared with serving — the bench's own asserts are the
+        # tight per-regime gate, this tracks drift across commits)
+        base = f"selectivity:{r['dataset']}:sel={r['sel']}:{r['mode']}"
+        if float(r.get("recall", 0)) > 0:
+            out[base] = float(r["recall"])
+        if "speedup" in r:
+            out[f"{base}:speedup"] = float(r["speedup"])
     for r in _load_rows(results_dir, "bench_updates"):
         # the streaming-mutability regressions worth holding: incremental
         # (insert 20% then flush) and post-compaction recall per mode

@@ -10,7 +10,12 @@ execution engine per batch, so callers never touch ``build_gmg``,
                 compiles to the dense batch arrays the kernels expect.
                 Filters compose with ``&`` *and* ``|``: disjunctions are
                 planned (repro.api.planner) into one box-batched engine
-                pass plus a segment-aware top-k merge.
+                pass plus a segment-aware top-k merge. Each planned box
+                is routed ONCE by the per-box cost model (annotated
+                qualifying-row estimate -> dense masked scan / scaled-ef
+                traversal / plain traversal; repro.core.selectivity) and
+                every engine mode consumes the same decision — knobs and
+                regime guidance in ``docs/tuning.md``.
   - dispatch  — an explicit ``mode`` ("auto" | "incore" | "hybrid" |
                 "ooc"); ``"auto"`` picks from the declared
                 ``device_budget_bytes``. All modes run the same
@@ -134,6 +139,8 @@ class Collection:
         self._mut = None            # MutationState, created on first use
         self._masked = None         # tombstone-masked engine index replica
         self._masked_epoch = -1     # mutation epoch the replica reflects
+        self._sel_est = None        # per-cell selectivity estimator ...
+        self._sel_est_for = None    # ... and the engine index it profiles
         self.last_stats: dict = {}
 
     # -- lifecycle: build ---------------------------------------------------
@@ -242,6 +249,37 @@ class Collection:
                                                        mut.tombstone))
             self._masked_epoch = mut.epoch
         return self._masked
+
+    def _estimator(self):
+        """Per-cell attribute-histogram selectivity estimator over the
+        current engine index (repro.core.selectivity); cached by index
+        identity, so it rebuilds exactly when the rows it profiled
+        change — flush/compact swap the index object, and the delete
+        path swaps the tombstone-masked replica (NaN attr rows drop out
+        of the histograms, keeping estimates live-row accurate)."""
+        idx = self._engine_index()
+        if self._sel_est is None or self._sel_est_for is not idx:
+            from repro.core.selectivity import SelectivityEstimator
+            self._sel_est = SelectivityEstimator(idx)
+            self._sel_est_for = idx
+        return self._sel_est
+
+    def _plan_routes(self, plan, params: SearchParams, route_k=None):
+        """Annotate ``plan`` with per-box qualifying-row estimates and
+        compute the ONE RouteDecision every engine mode consumes (the
+        tentpole contract: routing is planner-level, engines only
+        execute it). Returns ``(annotated_plan, routes)``."""
+        from repro.api import planner as planner_mod
+        from repro.core import selectivity as sel_mod
+        idx = self._engine_index()
+        est = self._estimator()
+        plan = planner_mod.annotate_plan(plan, idx, estimator=est)
+        rk = (np.full(plan.n_queries, params.k, np.int64)
+              if route_k is None else np.asarray(route_k, np.int64))
+        routes = sel_mod.route_boxes(
+            idx, plan.lo, plan.hi, rk[plan.qmap], cost=params.cost,
+            estimator=est, est_rows=plan.est_rows)
+        return plan, routes
 
     def _searcher(self):
         if self._in_core is None:
@@ -361,6 +399,8 @@ class Collection:
         self._inv_perm = None
         self._masked = None
         self._masked_epoch = -1
+        self._sel_est = None
+        self._sel_est_for = None
 
     def _refresh_engine_attrs(self) -> None:
         """Delete path: push the tombstone-masked attr table into every
@@ -563,29 +603,28 @@ class Collection:
                       which: str, route_k=None):
         """Run one planned batch on the resolved engine and fold pending
         buffers; accumulates engine/planner counters into ``last_stats``.
-        ``route_k`` forwards per-row adaptive-split k's to the in-core
-        engine (see ``Searcher.search``) for coalesced multi-request
-        passes."""
+
+        The per-box cost model runs HERE, once: the plan is annotated
+        with histogram-refined qualifying-row estimates
+        (``planner.annotate_plan``) and routed
+        (``selectivity.route_boxes``); every engine mode consumes the
+        same ``RouteDecision``. ``route_k`` carries per-row request k's
+        from coalesced multi-request passes so each row routes as its
+        solo call would."""
         eng = self._engine_for(which)
-        extra = {}
-        if route_k is not None and which == "incore":
-            extra["route_k"] = route_k
-        if plan.trivial:
-            ids, d = eng.search(q, plan.lo, plan.hi, params, **extra)
-            self.last_stats.update(eng.stats)
-            ids, d = self._fold_buffer(q, plan, ids, d, params.k)
-            return ids, d
-        # box-batched disjunctive pass
-        self.last_stats["planner"] = dict(plan.stats)
         B = plan.n_queries
-        if plan.n_boxes == 0:         # every branch of every query is empty
-            return (np.full((B, params.k), -1, np.int64),
-                    np.full((B, params.k), np.inf, np.float32))
-        qx = q[plan.qmap]
-        if route_k is not None and which == "incore":
-            extra["route_k"] = np.asarray(route_k)[plan.qmap]
-        ids, d = eng.search(qx, plan.lo, plan.hi, params,
-                            qmap=plan.qmap, n_queries=B, **extra)
+        if not plan.trivial:
+            # box-batched disjunctive pass
+            self.last_stats["planner"] = dict(plan.stats)
+            if plan.n_boxes == 0:     # every branch of every query is empty
+                return (np.full((B, params.k), -1, np.int64),
+                        np.full((B, params.k), np.inf, np.float32))
+        plan, routes = self._plan_routes(plan, params, route_k=route_k)
+        if plan.trivial:
+            ids, d = eng.search(q, plan.lo, plan.hi, params, routes=routes)
+        else:
+            ids, d = eng.search(q[plan.qmap], plan.lo, plan.hi, params,
+                                qmap=plan.qmap, n_queries=B, routes=routes)
         self.last_stats.update(eng.stats)
         ids, d = self._fold_buffer(q, plan, ids, d, params.k)
         return ids, d

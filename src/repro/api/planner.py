@@ -30,6 +30,7 @@ to the pre-planner behavior.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -40,7 +41,15 @@ from repro.api.schema import AttrSchema
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
-    """Flattened box-batched execution plan for one query batch."""
+    """Flattened box-batched execution plan for one query batch.
+
+    ``est_rows`` is the planner's per-box qualifying-row estimate
+    (:func:`annotate_plan` — per-attribute CDF product refined by
+    per-cell attribute histograms); engines use it through the per-box
+    cost model (``repro.core.selectivity.route_boxes``) to pick each
+    box's execution route. None on un-annotated plans (engines then
+    estimate from the index's global CDF grid themselves).
+    """
 
     lo: np.ndarray        # (T, m) f32 — all boxes, grouped by query
     hi: np.ndarray        # (T, m) f32
@@ -48,10 +57,34 @@ class QueryPlan:
     n_queries: int        # B of the original batch
     trivial: bool         # conjunctive fast path: identity qmap, T == B
     stats: dict = dataclasses.field(default_factory=dict)
+    est_rows: Optional[np.ndarray] = None  # (T,) f64 planner annotation
 
     @property
     def n_boxes(self) -> int:
         return self.lo.shape[0]
+
+
+def annotate_plan(plan: QueryPlan, index, estimator=None) -> QueryPlan:
+    """Annotate each plan box with an estimated qualifying-row count.
+
+    ``estimator`` (a ``repro.core.selectivity.SelectivityEstimator``)
+    refines the global per-attribute CDF product with per-cell attribute
+    histograms, so correlated attributes don't blow the estimate; without
+    one the global product (times the row count) is used. Idempotent on
+    already-annotated plans.
+    """
+    from repro.core import selectivity as sel_mod
+    if plan.est_rows is not None:
+        return plan
+    if estimator is not None:
+        from repro.core import select as select_mod
+        inc = select_mod.incidence_numpy(plan.lo, plan.hi,
+                                         index.cell_lo, index.cell_hi)
+        est_rows = estimator.estimate_rows(plan.lo, plan.hi, inc)
+    else:
+        est_rows = sel_mod.estimate_selectivity(
+            index, plan.lo, plan.hi) * index.n
+    return dataclasses.replace(plan, est_rows=est_rows)
 
 
 def canonicalize_boxes(lo: np.ndarray, hi: np.ndarray):
@@ -131,6 +164,11 @@ def concat_plans(plans: "list[QueryPlan]"):
     # a concat of trivial plans is itself trivial: offset identity qmaps
     # chain into one identity qmap
     trivial = all(p.trivial for p in plans)
+    # planner annotations survive the concat only when every constituent
+    # carries one (a single un-annotated plan would misalign the rows)
+    est_rows = None
+    if all(p.est_rows is not None for p in plans):
+        est_rows = np.concatenate([p.est_rows for p in plans])
     stats = {"n_requests": len(plans),
              "n_queries": int(q_offsets[-1]),
              "n_boxes": int(lo.shape[0]),
@@ -138,7 +176,7 @@ def concat_plans(plans: "list[QueryPlan]"):
                                 for p in plans), default=0)}
     return QueryPlan(lo=lo, hi=hi, qmap=qmap,
                      n_queries=int(q_offsets[-1]), trivial=trivial,
-                     stats=stats), q_offsets
+                     stats=stats, est_rows=est_rows), q_offsets
 
 
 def plan_queries(filters, schema: AttrSchema, batch_size: int) -> QueryPlan:

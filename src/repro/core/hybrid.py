@@ -63,6 +63,7 @@ import jax
 
 from repro.core import runtime as rt_mod
 from repro.core import select as select_mod
+from repro.core import selectivity as sel_mod
 from repro.core import scheduler as sched_mod
 from repro.core.runtime import CandidatePool, CellCache, CellRuntime
 from repro.core.types import GMGIndex, SearchParams
@@ -105,12 +106,21 @@ class HybridEngine:
     def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
                params: Optional[SearchParams] = None,
                qmap: Optional[np.ndarray] = None,
-               n_queries: Optional[int] = None):
+               n_queries: Optional[int] = None,
+               route_k: Optional[np.ndarray] = None,
+               routes: Optional[sel_mod.RouteDecision] = None):
         """Returns (ids (B, k) original ids, dists (B, k) exact fp32).
 
         With ``qmap`` (row -> original-query segment map from a
         disjunctive plan), rows are per-box sub-queries; survivors fold
         back to (n_queries, k) after the exact re-rank.
+
+        ``routes`` (or ``route_k`` + ``params.cost``, computed here)
+        splits rows by the per-box cost model: ultra-selective rows skip
+        the wave pipeline entirely — a fused masked scan over the
+        resident *int8* table fills their candidate pool, and the usual
+        exact fp32 re-rank finishes them like any traversed row.
+        Mid-range rows traverse with ``ef`` scaled per effort bucket.
         """
         params = params or SearchParams()
         idx = self.index
@@ -135,76 +145,106 @@ class HybridEngine:
         lo = np.asarray(lo, np.float32)
         hi = np.asarray(hi, np.float32)
 
-        # (1) selection + itinerary ranks (host)
+        # (1) selection + per-box routing (host)
         inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
-        rank = rt_mod.order_ranks(idx, q, inc)
-
-        # (2) wave scheduling: Alg. 5 bounded by the cache capacity, so
-        # every wave's cells are simultaneously resident. The size-aware
-        # arena packs waves against its row capacity (per-cell weights)
-        # and seeds the placement key with the cells still resident from
-        # the previous execution; the fixed policy keeps the PR-3
-        # cache-blind slot-count bound.
-        if self.cache.policy == "fixed":
-            waves = sched_mod.schedule_cells(inc, self.cache.n_slots)
-        else:
-            resident = self.cache.resident_cells()
-            waves = sched_mod.schedule_cells(
-                inc, idx.n_cells, resident=resident,
-                weights=self.cache.alloc_rows,
-                capacity=self.cache.cap_rows)
-            # total_active is order-invariant; run the most-resident
-            # wave first so it hits before later waves evict it
-            waves = sched_mod.order_waves(waves, resident,
-                                          weights=self.cache.alloc_rows)
-
-        # itinerary width: one jitted program per width — fixed slots pin
-        # it to the slot count, the arena pow2-pads the widest wave
-        if self.cache.policy == "fixed":
-            W = self.cache.n_slots
-        else:
-            W = max((len(w) for w in waves), default=1)
-            W = 1 << (W - 1).bit_length()
+        if routes is None:
+            rk = (np.full(B, k, np.int64) if route_k is None
+                  else np.asarray(route_k, np.int64))
+            routes = sel_mod.route_boxes(idx, lo, hi, rk,
+                                         cost=params.cost, inc=inc)
+        use_dense = routes.route == sel_mod.ROUTE_DENSE
 
         pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
         hits = misses = transfer = 0
+        n_waves = total_active = 0
+        est_err = None
 
-        for cells in waves:
-            act = np.nonzero(inc[:, cells].any(axis=1))[0]
-            if len(act) == 0:
-                continue
-            got = self.cache.ensure(cells)
-            hits += got["hits"]
-            misses += got["misses"]
-            transfer += got["bytes"]
-            graph = self.rt.cached_graph(self.cache)
+        # dense route: one fused int8 masked scan fills the pool — no
+        # wave scheduling, no cache traffic; the shared exact fp32
+        # re-rank below finishes these rows like any traversed row
+        dense_rows = np.nonzero(use_dense)[0]
+        if len(dense_rows) > 0:
+            ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
+                self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
+                inc[dense_rows], ef)
+            pool.merge(dense_rows, ids_d, d_d)
+            est_err = float(np.mean(
+                np.abs(routes.est_rows[dense_rows] - n_qual)
+                / np.maximum(n_qual, 1.0)))
 
-            # per-active-query itinerary over *global* cell ids;
-            # vectorized: selected cells sort by rank (stable, so rank
-            # ties keep ascending cell order), unselected pad with -1
-            cells_arr = np.asarray(cells, np.int64)
-            sel = inc[np.ix_(act, cells_arr)]            # (n_act, W)
-            key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
-                                np.iinfo(np.int32).max)
-            ordr = np.argsort(key_rank, axis=1, kind="stable")
-            itin = np.full((len(act), W), -1, np.int32)
-            itin[:, :len(cells)] = np.where(
-                np.take_along_axis(sel, ordr, axis=1),
-                cells_arr[ordr], -1).astype(np.int32)
+        graph_rows = ~use_dense & inc.any(axis=1)
+        rank = (rt_mod.order_ranks(idx, q, inc)
+                if graph_rows.any() else None)
+        for mult in np.unique(routes.ef_mult[graph_rows]):
+            rows_b = graph_rows & (routes.ef_mult == mult)
+            inc_b = inc & rows_b[:, None]
+            ef_run = ef * int(mult)
 
-            key, sub = jax.random.split(key)
-            # carried pool seeds directly: ids are global, no remap
-            ids, d = self.rt.run(
-                graph, q[act], lo[act], hi[act], sub,
-                k=max(k, min(ef, 2 * k)), ef=ef,
-                cell_order=itin, seeds=pool.ids[act],
-                packed_visited=True, pool_reuse=params.pool_reuse)
-            pool.merge(act, ids, d)
+            # (2) wave scheduling: Alg. 5 bounded by the cache capacity,
+            # so every wave's cells are simultaneously resident. The
+            # size-aware arena packs waves against its row capacity
+            # (per-cell weights) and seeds the placement key with the
+            # cells still resident from the previous execution; the
+            # fixed policy keeps the PR-3 cache-blind slot-count bound.
+            if self.cache.policy == "fixed":
+                waves = sched_mod.schedule_cells(inc_b, self.cache.n_slots)
+            else:
+                resident = self.cache.resident_cells()
+                waves = sched_mod.schedule_cells(
+                    inc_b, idx.n_cells, resident=resident,
+                    weights=self.cache.alloc_rows,
+                    capacity=self.cache.cap_rows)
+                # total_active is order-invariant; run the most-resident
+                # wave first so it hits before later waves evict it
+                waves = sched_mod.order_waves(waves, resident,
+                                              weights=self.cache.alloc_rows)
+            n_waves += len(waves)
+            total_active += sched_mod.total_active(inc_b, waves)
+
+            # itinerary width: one jitted program per width — fixed slots
+            # pin it to the slot count, the arena pow2-pads the widest wave
+            if self.cache.policy == "fixed":
+                W = self.cache.n_slots
+            else:
+                W = max((len(w) for w in waves), default=1)
+                W = 1 << (W - 1).bit_length()
+
+            for cells in waves:
+                act = np.nonzero(inc_b[:, cells].any(axis=1))[0]
+                if len(act) == 0:
+                    continue
+                got = self.cache.ensure(cells)
+                hits += got["hits"]
+                misses += got["misses"]
+                transfer += got["bytes"]
+                graph = self.rt.cached_graph(self.cache)
+
+                # per-active-query itinerary over *global* cell ids;
+                # vectorized: selected cells sort by rank (stable, so rank
+                # ties keep ascending cell order), unselected pad with -1
+                cells_arr = np.asarray(cells, np.int64)
+                sel = inc_b[np.ix_(act, cells_arr)]          # (n_act, W)
+                key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
+                                    np.iinfo(np.int32).max)
+                ordr = np.argsort(key_rank, axis=1, kind="stable")
+                itin = np.full((len(act), W), -1, np.int32)
+                itin[:, :len(cells)] = np.where(
+                    np.take_along_axis(sel, ordr, axis=1),
+                    cells_arr[ordr], -1).astype(np.int32)
+
+                key, sub = jax.random.split(key)
+                # carried pool seeds directly: ids are global, no remap
+                ids, d = self.rt.run(
+                    graph, q[act], lo[act], hi[act], sub,
+                    k=max(k, min(ef, 2 * k)), ef=ef_run,
+                    cell_order=itin, seeds=pool.ids[act],
+                    packed_visited=True, pool_reuse=params.pool_reuse)
+                pool.merge(act, ids, d)
 
         self.stats = {
-            "n_waves": len(waves),
-            "total_active": sched_mod.total_active(inc, waves),
+            "n_waves": n_waves,
+            "total_active": total_active,
             "cache_hits": hits,
             "cache_misses": misses,
             "hit_rate": hits / max(hits + misses, 1),
@@ -218,6 +258,9 @@ class HybridEngine:
             # front-end can difference across ticks
             "cache": self.cache.stats(),
         }
+        self.stats.update(routes.counts())
+        if est_err is not None:
+            self.stats["est_rel_err_dense"] = est_err
 
         # (4) exact re-rank of survivors: fused on device by default,
         # host loop for the legacy/ablation path — bit-identical ids

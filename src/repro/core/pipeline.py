@@ -53,6 +53,7 @@ import jax
 
 from repro.core import runtime as rt_mod
 from repro.core import select as select_mod
+from repro.core import selectivity as sel_mod
 from repro.core import scheduler as sched_mod
 from repro.core.runtime import CandidatePool, CellRuntime, round_up
 from repro.core.traversal import GraphView
@@ -180,13 +181,23 @@ class OutOfCoreEngine:
                params: Optional[SearchParams] = None,
                use_schedule: bool = True,
                qmap: Optional[np.ndarray] = None,
-               n_queries: Optional[int] = None):
+               n_queries: Optional[int] = None,
+               route_k: Optional[np.ndarray] = None,
+               routes: Optional[sel_mod.RouteDecision] = None):
         """Returns (ids (B, k) original ids, dists (B, k) exact fp32).
 
         With ``qmap`` (row -> original-query segment map from a
         disjunctive plan), rows are per-box sub-queries that stream
         through the cell batches as one widened batch; per-box survivors
         fold back to (n_queries, k) after the exact re-rank.
+
+        ``routes`` (or ``route_k`` + ``params.cost``, computed here)
+        splits rows by the per-box cost model: ultra-selective rows
+        never enter the streaming pipeline — a fused masked scan over
+        the resident int8 table fills their candidate pool directly (no
+        graph batches staged for them, no transfer), and the exact fp32
+        re-rank finishes them as usual. Mid-range rows stream with
+        ``ef`` scaled per effort bucket.
         """
         params = params or SearchParams()
         idx = self.index
@@ -208,52 +219,85 @@ class OutOfCoreEngine:
             return rt_mod.empty_topk(nq, k)
         t_start = time.perf_counter()
 
-        # (1) selection + ordering ranks (host)
+        # (1) selection + per-box routing (host)
         inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
-        rank = rt_mod.order_ranks(idx, q, inc)
-
-        # (2) scheduling (Alg. 5) vs naive (ablation Table 3)
-        b = self.cells_per_batch()
-        if use_schedule:
-            batches = sched_mod.schedule_cells(inc, b)
-        else:
-            batches = sched_mod.naive_schedule(inc, b)
-        self.stats = {
-            "n_batches": len(batches),
-            "total_active": sched_mod.total_active(inc, batches),
-            "cells_per_batch": b,
-            "rerank": self.rerank,
-        }
+        if routes is None:
+            rk = (np.full(B, k, np.int64) if route_k is None
+                  else np.asarray(route_k, np.int64))
+            routes = sel_mod.route_boxes(idx, lo, hi, rk,
+                                         cost=params.cost, inc=inc)
+        use_dense = routes.route == sel_mod.ROUTE_DENSE
 
         # carried per-query candidate pool (global internal ids + dists)
         pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
+        n_batches = total_active = transfer_bytes = 0
+        est_err = None
 
-        # (3)+(4) stage the first batch; inside the loop stage batch t+1
-        # before blocking on batch t's results => JAX's async dispatch
-        # overlaps the H2D copy with device compute (paper Fig. 5(b)).
-        plans = [_remap_plan(idx, cells, inc, rank, pad_cells=b)
-                 for cells in batches]
-        staged = self._stage(plans[0]) if plans else None
+        # dense route: one fused int8 masked scan fills the pool — these
+        # rows stage no graph batches and stream no bytes; the exact
+        # fp32 re-rank below finishes them like any streamed row
+        dense_rows = np.nonzero(use_dense)[0]
+        if len(dense_rows) > 0:
+            ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
+                self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
+                inc[dense_rows], ef)
+            pool.merge(dense_rows, ids_d, d_d)
+            est_err = float(np.mean(
+                np.abs(routes.est_rows[dense_rows] - n_qual)
+                / np.maximum(n_qual, 1.0)))
 
-        transfer_bytes = 0
-        for t, plan in enumerate(plans):
-            dev = staged
-            transfer_bytes += plan.intra.nbytes + plan.inter.nbytes
-            if t + 1 < len(plans):
-                staged = self._stage(plans[t + 1])   # prefetch next batch
+        b = self.cells_per_batch()
+        graph_rows = ~use_dense & inc.any(axis=1)
+        rank = (rt_mod.order_ranks(idx, q, inc)
+                if graph_rows.any() else None)
+        for mult in np.unique(routes.ef_mult[graph_rows]):
+            rows_b = graph_rows & (routes.ef_mult == mult)
+            inc_b = inc & rows_b[:, None]
+            ef_run = ef * int(mult)
 
-            if len(plan.active_queries) == 0:
-                continue
-            key, sub = jax.random.split(key)
-            got_ids, got_d = self._run_batch(plan, dev, q, lo, hi,
-                                             pool, k, ef, sub, params)
-            # (7) merge into carried pool (host, deterministic fold).
-            # Seeds re-found in later batches would otherwise duplicate
-            # and crowd the pool.
-            pool.merge(plan.active_queries, got_ids, got_d)
+            # (2) scheduling (Alg. 5) vs naive (ablation Table 3)
+            if use_schedule:
+                batches = sched_mod.schedule_cells(inc_b, b)
+            else:
+                batches = sched_mod.naive_schedule(inc_b, b)
+            n_batches += len(batches)
+            total_active += sched_mod.total_active(inc_b, batches)
 
-        self.stats["transfer_bytes"] = transfer_bytes
+            # (3)+(4) stage the first batch; inside the loop stage batch
+            # t+1 before blocking on batch t's results => JAX's async
+            # dispatch overlaps the H2D copy with device compute
+            # (paper Fig. 5(b)).
+            plans = [_remap_plan(idx, cells, inc_b, rank, pad_cells=b)
+                     for cells in batches]
+            staged = self._stage(plans[0]) if plans else None
+
+            for t, plan in enumerate(plans):
+                dev = staged
+                transfer_bytes += plan.intra.nbytes + plan.inter.nbytes
+                if t + 1 < len(plans):
+                    staged = self._stage(plans[t + 1])  # prefetch next
+                if len(plan.active_queries) == 0:
+                    continue
+                key, sub = jax.random.split(key)
+                got_ids, got_d = self._run_batch(
+                    plan, dev, q, lo, hi, pool, k, ef, sub, params,
+                    ef_run=ef_run)
+                # (7) merge into carried pool (host, deterministic
+                # fold). Seeds re-found in later batches would
+                # otherwise duplicate and crowd the pool.
+                pool.merge(plan.active_queries, got_ids, got_d)
+
+        self.stats = {
+            "n_batches": n_batches,
+            "total_active": total_active,
+            "cells_per_batch": b,
+            "rerank": self.rerank,
+            "transfer_bytes": transfer_bytes,
+        }
+        self.stats.update(routes.counts())
+        if est_err is not None:
+            self.stats["est_rel_err_dense"] = est_err
 
         # exact re-rank of survivors (paper step 7): fused on device by
         # default, host loop as the legacy/ablation path (identical ids)
@@ -288,9 +332,11 @@ class OutOfCoreEngine:
 
     def _run_batch(self, plan: BatchPlan, dev, q, lo, hi,
                    pool: CandidatePool, k: int, ef: int, key,
-                   params: SearchParams):
+                   params: SearchParams, ef_run: Optional[int] = None):
         """Device traversal of one batch (step 5-6). Returns candidate
-        (global ids, int8 distances) for the active queries."""
+        (global ids, int8 distances) for the active queries. ``ef_run``
+        widens the traversal pool for mid-range effort buckets; the
+        carried pool (and with it the re-rank width) stays at ``ef``."""
         idx = self.index
         act = plan.active_queries
 
@@ -312,7 +358,7 @@ class OutOfCoreEngine:
                           cell_start=dev["local_start"], rows=dev["rows"])
         ids_l, d_l = self.rt.run(
             graph, q[act], lo[act], hi[act], key,
-            k=max(k, min(ef, 2 * k)), ef=ef,
+            k=max(k, min(ef, 2 * k)), ef=ef_run or ef,
             cell_order=plan.itinerary, seeds=seed_local,
             pool_reuse=params.pool_reuse)
         ids_g = np.where(ids_l >= 0, plan.rows[np.maximum(ids_l, 0)], -1)

@@ -281,6 +281,230 @@ def exact_rerank_device(index: GMGIndex, attrs_dev, pool: CandidatePool,
     return out_i, out_d
 
 
+# -- the dense route: fused masked scan over qualifying candidates -----------
+
+def dense_candidates(index: GMGIndex, inc_row: np.ndarray) -> np.ndarray:
+    """Ascending internal ids inside the selected cells of one box.
+
+    Cells ascend and rows are cell-contiguous, so the concatenation is
+    globally ascending — the property that makes chunked k-select merges
+    come out (distance, id)-ordered like ``mutable.scan_buffer``."""
+    cells = np.nonzero(inc_row)[0]
+    if cells.size == 0:
+        return np.empty(0, np.int32)
+    cs = index.cell_start
+    return np.concatenate(
+        [np.arange(cs[c], cs[c + 1], dtype=np.int32) for c in cells])
+
+
+# per-row candidate count above which the fused gather kernel stops
+# paying: it materializes (B, width, d) gathered rows, so a broad box
+# over a small corpus (cand ~ n) costs B full-table copies, while the
+# cell-batched scan re-slices each selected cell once for every query
+# that wants it. True ultra-selective boxes stay under this and keep
+# the single-launch gather path.
+DENSE_GATHER_MAX = 2048
+
+
+@functools.partial(jax.jit, static_argnames=("w", "kk"))
+def _dense_cell_topk(vectors, attrs, q, lo, hi, start, end,
+                     w: int, kk: int):
+    """Exact top-kk of one contiguous f32 cell [start, end) for a query
+    batch, predicate folded in as +inf. The cell window is *dynamic*
+    (one compiled program per batch shape, not per cell): a fixed-width
+    slice of ``w`` rows is taken at a clamped offset and rows outside
+    [start, end) are masked out. Ties break to the lower row position
+    (= lower internal id, rows are cell-contiguous). Returns (vals,
+    global row ids)."""
+    from repro.kernels import ops
+    s0 = jnp.clip(start, 0, vectors.shape[0] - w)
+    vcell = jax.lax.dynamic_slice_in_dim(vectors, s0, w)
+    acell = jax.lax.dynamic_slice_in_dim(attrs, s0, w)
+    gpos = s0 + jnp.arange(w)
+    d2 = ops.pairwise_l2(q, vcell)
+    ok = (acell[None] >= lo[:, None, :]) & (acell[None] <= hi[:, None, :])
+    ok = jnp.all(ok, axis=2) & ((gpos >= start) & (gpos < end))[None]
+    d2 = jnp.where(ok, d2, jnp.inf)
+    vals, pos = ops.k_select(d2, kk)
+    return vals, gpos[pos]
+
+
+@functools.partial(jax.jit, static_argnames=("w", "kk"))
+def _dense_cell_topk_q(vq, vscale, attrs, q, lo, hi, start, end,
+                       w: int, kk: int):
+    """Int8 twin of :func:`_dense_cell_topk`: dequantizes the cell slice
+    (scale * int8) before the same masked exact scan."""
+    from repro.kernels import ops
+    s0 = jnp.clip(start, 0, vq.shape[0] - w)
+    rows = (jax.lax.dynamic_slice_in_dim(vq, s0, w).astype(jnp.float32)
+            * jax.lax.dynamic_slice_in_dim(
+                vscale.reshape(-1), s0, w).reshape(-1, 1))
+    acell = jax.lax.dynamic_slice_in_dim(attrs, s0, w)
+    gpos = s0 + jnp.arange(w)
+    d2 = ops.pairwise_l2(q, rows)
+    ok = (acell[None] >= lo[:, None, :]) & (acell[None] <= hi[:, None, :])
+    ok = jnp.all(ok, axis=2) & ((gpos >= start) & (gpos < end))[None]
+    d2 = jnp.where(ok, d2, jnp.inf)
+    vals, pos = ops.k_select(d2, kk)
+    return vals, gpos[pos]
+
+
+def _cell_scan(rt: "CellRuntime", q, lo, hi, inc, k: int):
+    """Shared-slice dense strategy: every cell any row selected is
+    scanned once for the whole batch, winners merge on the host. Rows
+    that did not select a cell are unaffected — no member of a
+    non-selected cell can pass the row's own predicate (cell bounds
+    cover members), so the mask alone keeps results exact. Cells ascend
+    and the merge argsort is stable, so the output is (distance,
+    id)-ordered exactly like the gather strategy."""
+    index = rt.index
+    B = q.shape[0]
+    out_i = np.full((B, k), -1, np.int32)
+    out_d = np.full((B, k), np.inf, np.float32)
+    starts = index.cell_start
+    n = int(starts[-1])
+    # static window: pow2 of the widest cell, capped at the table
+    w = min(1 << max(3, int(np.diff(starts).max(initial=1) - 1)
+                     .bit_length()), n)
+    kk = min(k, w)
+    qs, real = pad_pow2(np.asarray(q, np.float32))
+    los, _ = pad_pow2(np.asarray(lo, np.float32))
+    his, _ = pad_pow2(np.asarray(hi, np.float32))
+    qd = jnp.asarray(qs)
+    lod, hid = jnp.asarray(los), jnp.asarray(his)
+    for cell in np.nonzero(inc.any(axis=0))[0]:
+        s, e = int(starts[cell]), int(starts[cell + 1])
+        if e <= s:
+            continue
+        if rt.storage == "f32":
+            vals, gpos = _dense_cell_topk(rt.store.vectors, rt.attrs_dev,
+                                          qd, lod, hid, s, e, w, kk)
+        else:
+            vals, gpos = _dense_cell_topk_q(rt.store.vq, rt.store.vscale,
+                                            rt.attrs_dev, qd, lod, hid,
+                                            s, e, w, kk)
+        vals = np.asarray(vals[:real])
+        ids = np.asarray(gpos[:real], np.int32)
+        ids = np.where(np.isfinite(vals), ids, -1)
+        vals = np.where(ids >= 0, vals, np.inf).astype(np.float32)
+        md = np.concatenate([out_d, vals], axis=1)
+        mi = np.concatenate([out_i, ids], axis=1)
+        o = np.argsort(md, axis=1, kind="stable")[:, :k]
+        out_d = np.take_along_axis(md, o, axis=1)
+        out_i = np.take_along_axis(mi, o, axis=1)
+    return out_i, out_d
+
+
+def masked_dense_scan(rt: "CellRuntime", q: np.ndarray, lo: np.ndarray,
+                      hi: np.ndarray, inc: np.ndarray, k: int,
+                      chunk: int = 8192):
+    """Brute-force the dense route's rows over the resident table.
+
+    Each query row enumerates the candidate ids inside its selected
+    cells, then one of two exact strategies runs — chosen per row from
+    its *own* candidate count (a pure function of (box, index), so batch
+    composition can never flip it):
+
+      - cand <= ``DENSE_GATHER_MAX``: the fused gather->predicate->
+        distance->k-select scan (``kernels.masked_scan``) in fixed-width
+        chunks, merging chunk winners by a stable (distance-first) sort.
+      - larger: the cell-batched scan — each selected cell is sliced
+        once and scanned for the whole sub-batch selecting it, so broad
+        boxes never pay per-row gathered copies of the table.
+
+    Uses whatever table the runtime keeps resident: exact f32 distances
+    in-core, dequantized int8 in hybrid/ooc (callers re-rank those in
+    fp32 as usual).
+
+    Returns ((B, k) i32 *internal* ids with -1 pads, (B, k) f32
+    distances with +inf pads, (B,) i64 exact qualifying-row counts —
+    the estimator-error ground truth reported in stats).
+
+    Determinism: candidates ascend per row, chunks/cells ascend,
+    ``k_select`` ties break to the lower column, and every merge is a
+    stable argsort — both strategies emit the same (distance, id)
+    ordering, depending only on (vector, box), never on batch
+    composition.
+    """
+    index = rt.index
+    B = q.shape[0]
+    out_i = np.full((B, k), -1, np.int32)
+    out_d = np.full((B, k), np.inf, np.float32)
+    n_qual = np.zeros(B, np.int64)
+    if B == 0:
+        return out_i, out_d, n_qual
+    cands = [dense_candidates(index, inc[t]) for t in range(B)]
+    sizes = np.array([c.size for c in cands], np.int64)
+    if sizes.max(initial=0) == 0:
+        return out_i, out_d, n_qual
+    # exact qualifying counts (host, cheap at dense-route sizes); NaN
+    # attrs (tombstones) fail the predicate like everywhere else
+    for t in range(B):
+        if cands[t].size:
+            a = index.attrs[cands[t]]
+            with np.errstate(invalid="ignore"):
+                ok = ((a >= lo[t]) & (a <= hi[t])).all(axis=1)
+            n_qual[t] = int(ok.sum())
+    big = np.nonzero(sizes > DENSE_GATHER_MAX)[0]
+    if len(big):
+        ids_b, d_b = _cell_scan(rt, q[big], lo[big], hi[big], inc[big], k)
+        out_i[big], out_d[big] = ids_b, d_b
+    small = np.nonzero((sizes > 0) & (sizes <= DENSE_GATHER_MAX))[0]
+    if len(small) == 0:
+        return out_i, out_d, n_qual
+    ids_s, d_s = _gather_scan(rt, q[small], lo[small], hi[small],
+                              [cands[t] for t in small], k, chunk)
+    out_i[small], out_d[small] = ids_s, d_s
+    return out_i, out_d, n_qual
+
+
+def _gather_scan(rt: "CellRuntime", q, lo, hi, cands, k: int, chunk: int):
+    """Fused-kernel dense strategy (see :func:`masked_dense_scan`)."""
+    from repro.kernels import masked_scan as ms
+    B = q.shape[0]
+    out_i = np.full((B, k), -1, np.int32)
+    out_d = np.full((B, k), np.inf, np.float32)
+    max_l = max(c.size for c in cands)
+    qp, real = pad_pow2(np.asarray(q, np.float32))
+    lop, _ = pad_pow2(np.asarray(lo, np.float32))
+    hip, _ = pad_pow2(np.asarray(hi, np.float32))
+    P = qp.shape[0]
+    qd, lod, hid = jnp.asarray(qp), jnp.asarray(lop), jnp.asarray(hip)
+    n_chunks = (max_l + chunk - 1) // chunk
+    # pow2 width below one chunk: bounded set of jitted program shapes
+    width = chunk if n_chunks > 1 else 1 << max(3, (max_l - 1).bit_length())
+    for ci in range(n_chunks):
+        idx = np.full((P, width), -1, np.int32)
+        for t in range(B):
+            part = cands[t][ci * chunk:(ci + 1) * chunk]
+            idx[t, :part.size] = part
+        if ci and not (idx >= 0).any():
+            break
+        kk = min(k, width)
+        if rt.storage == "f32":
+            vals, pos = ms.masked_topk(
+                qd, rt.store.vectors, rt.attrs_dev, lod, hid,
+                jnp.asarray(idx), kk)
+        else:
+            vals, pos = ms.masked_topk_q(
+                qd, rt.store.vq, rt.store.vscale, rt.attrs_dev, lod, hid,
+                jnp.asarray(idx), kk)
+        vals = np.asarray(vals[:real])
+        pos = np.asarray(pos[:real])
+        ids = np.take_along_axis(idx[:real], pos, axis=1)
+        ids = np.where(np.isfinite(vals), ids, -1)
+        vals = np.where(ids >= 0, vals, np.inf).astype(np.float32)
+        if ci == 0 and kk == k:
+            out_i, out_d = ids, vals
+            continue
+        ci_all = np.concatenate([out_i, ids], axis=1)
+        cd_all = np.concatenate([out_d, vals], axis=1)
+        o = np.argsort(cd_all, axis=1, kind="stable")[:, :k]
+        out_i = np.take_along_axis(ci_all, o, axis=1)
+        out_d = np.take_along_axis(cd_all, o, axis=1)
+    return out_i.astype(np.int32), out_d
+
+
 # -- the bounded LRU graph-cell cache (hybrid middle tier) -------------------
 
 # donate the buffer: the caller always rebinds to the result, so the

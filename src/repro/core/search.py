@@ -51,7 +51,6 @@ documented exact-float caveat, as in ``runtime``'s rerank parity).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -61,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.core import runtime as rt_mod
 from repro.core import select as select_mod
+from repro.core import selectivity as sel_mod
 from repro.core.ordering import order_cells
 from repro.core.runtime import merge_segment_topk  # noqa: F401  (re-export)
 from repro.core.runtime import CellRuntime, pad_pow2
@@ -101,12 +101,18 @@ class Searcher:
 
     # -- device half: one fixed-shape program per (B, knobs) ---------------
 
-    def _traverse(self, q, lo, hi, params: SearchParams, key):
+    def _traverse(self, q, lo, hi, params: SearchParams, key,
+                  ef_mult: int = 1):
         """Itinerary path over the fully-resident graph. Takes numpy
         sub-batch arrays; pow2-pads once so selection, ordering and the
-        traversal core all see the same stable shape."""
+        traversal core all see the same stable shape. ``ef_mult`` is the
+        cost model's mid-range effort factor: it widens the candidate
+        pool and the entry beam together (range-aware effort instead of
+        a fixed ef; see docs/tuning.md)."""
         cfg = self.index.config
-        ef = params.ef or cfg.search_ef
+        ef = (params.ef or cfg.search_ef) * ef_mult
+        beam = cfg.entry_beam_l if ef_mult == 1 \
+            else min(cfg.entry_beam_l * ef_mult, ef)
         qp, real = pad_pow2(np.asarray(q, np.float32))
         lop, _ = pad_pow2(np.asarray(lo, np.float32))
         hip, _ = pad_pow2(np.asarray(hi, np.float32))
@@ -128,21 +134,24 @@ class Searcher:
         # the pool_reuse hop source (top entry_beam_l rows), so its width
         # must not depend on the caller's k or coalescing requests with
         # heterogeneous k's would perturb each other's walks. Run at
-        # max(k, entry_beam_l) and slice: the first k columns of the wider
-        # pool are exactly the k the narrower run would return.
-        k_run = max(params.k, cfg.entry_beam_l)
+        # max(k, beam) and slice: the first k columns of the wider
+        # pool are exactly the k the narrower run would return. (ef_mult
+        # is route-derived per row, so the width stays batch-independent.)
+        k_run = max(params.k, beam)
         ids, d = self.rt.run(
             self.rt.resident_graph(), qp, lop, hip, key,
             k=k_run, ef=ef, cell_order=order,
+            entry_beam_l=beam,
             use_inter=params.use_inter_edges,
             pool_reuse=params.pool_reuse)
         return ids[:real, :params.k], d[:real, :params.k]
 
-    def _global(self, q, lo, hi, params: SearchParams, key):
+    def _global(self, q, lo, hi, params: SearchParams, key,
+                ef_mult: int = 1):
         """Adaptive high-selectivity path: one greedy traversal over the
         whole graph, predicate enforced on the result pool only."""
         cfg = self.index.config
-        ef = params.ef or cfg.search_ef
+        ef = (params.ef or cfg.search_ef) * ef_mult
         return self.rt.run(
             self.rt.global_graph(), q, lo, hi, key,
             k=params.k, ef=ef, cell_order=None, seeds=None,
@@ -150,62 +159,22 @@ class Searcher:
             max_iters=cfg.max_iters_per_cell * 4)
 
     def _dense_scan(self, q, lo, hi, inc, k: int):
-        """Exact MXU scan over the selected cells (adaptive low-candidate
-        path). For each cell, the sub-batch of queries selecting it scans
-        the cell's contiguous rows with the predicate folded in as +inf
-        bias; winners merge on the host. Exact within the selected cells.
-        Returns (ids (B, k) internal, d (B, k))."""
-        from repro.kernels import ops
-        B = q.shape[0]
-        out_i = np.full((B, k), -1, np.int32)
-        out_d = np.full((B, k), np.inf, np.float32)
-        starts = self.index.cell_start
-
-        @functools.partial(jax.jit, static_argnames=("s", "e", "kk"))
-        def scan_cell(qs, los, his, s: int, e: int, kk: int):
-            vcell = jax.lax.slice_in_dim(self.vectors, s, e)
-            acell = jax.lax.slice_in_dim(self.attrs, s, e)
-            d2 = ops.pairwise_l2(qs, vcell)
-            ok = (acell[None] >= los[:, None, :]) & \
-                 (acell[None] <= his[:, None, :])
-            d2 = jnp.where(ok.all(axis=2), d2, jnp.inf)
-            neg, pos = jax.lax.top_k(-d2, kk)
-            return -neg, pos + s
-
-        for c in range(self.index.n_cells):
-            rows = np.nonzero(inc[:, c])[0]
-            if len(rows) == 0:
-                continue
-            s, e = int(starts[c]), int(starts[c + 1])
-            if e <= s:
-                continue
-            qs, real = pad_pow2(q[rows])
-            los, _ = pad_pow2(lo[rows])
-            his, _ = pad_pow2(hi[rows])
-            kk = min(k, e - s)
-            d_c, i_c = scan_cell(jnp.asarray(qs), jnp.asarray(los),
-                                 jnp.asarray(his), s, e, kk)
-            d_c = np.asarray(d_c[:real])
-            i_c = np.asarray(i_c[:real], np.int32)
-            md = np.concatenate([out_d[rows], d_c], axis=1)
-            mi = np.concatenate([out_i[rows], i_c], axis=1)
-            ordr = np.argsort(md, axis=1, kind="stable")[:, :k]
-            out_d[rows] = np.take_along_axis(md, ordr, axis=1)
-            out_i[rows] = np.take_along_axis(mi, ordr, axis=1)
-        out_i[~np.isfinite(out_d)] = -1
-        return out_i, out_d
+        """Dense route: fused gather->predicate->distance->k-select scan
+        over the selected cells' rows (``runtime.masked_dense_scan`` on
+        the resident f32 table — exact within the selected cells).
+        Returns (ids (B, k) internal, d (B, k)); also stashes the exact
+        qualifying counts for the estimator-error stat."""
+        ids, d, n_qual = rt_mod.masked_dense_scan(
+            self.rt, q, lo, hi, inc, k)
+        self._last_dense_qual = n_qual
+        return ids, d
 
     def _estimate_selectivity(self, lo, hi):
-        """(B,) product of per-attribute selectivities from the stored
-        empirical CDF grids (the conjunction-independence estimate)."""
-        qgrid = self.index.attr_quantiles        # (m, n_grid)
-        ng = qgrid.shape[1] - 1
-        est = np.ones(lo.shape[0], np.float64)
-        for j in range(qgrid.shape[0]):
-            cdf_lo = np.searchsorted(qgrid[j], lo[:, j], side="left") / ng
-            cdf_hi = np.searchsorted(qgrid[j], hi[:, j], side="right") / ng
-            est *= np.clip(cdf_hi - cdf_lo, 0.0, 1.0)
-        return est
+        """(B,) clamped product of per-attribute selectivities from the
+        stored empirical CDF grids (the conjunction-independence
+        estimate). Thin wrapper over the public
+        :func:`repro.core.selectivity.estimate_selectivity`."""
+        return sel_mod.estimate_selectivity(self.index, lo, hi)
 
     # -- host half: adaptive split + id mapping ----------------------------
 
@@ -213,7 +182,8 @@ class Searcher:
                params: Optional[SearchParams] = None,
                qmap: Optional[np.ndarray] = None,
                n_queries: Optional[int] = None,
-               route_k: Optional[np.ndarray] = None):
+               route_k: Optional[np.ndarray] = None,
+               routes: Optional[sel_mod.RouteDecision] = None):
         """Returns (ids (B, k) i64 original ids [-1 pad], dists (B, k)).
 
         With ``qmap`` (a (B,) row -> original-query segment map from a
@@ -222,12 +192,19 @@ class Searcher:
         fold back to (n_queries, k) via :func:`merge_segment_topk`.
 
         ``route_k`` ((B,) int, default ``params.k`` everywhere) is the
-        per-row k the adaptive *path split* should assume. The serving
-        front-end coalesces requests with heterogeneous k's into one
-        pass at k = max over requests; handing each row its own
-        request's k here keeps the dense/itinerary routing decision —
-        the one k-sensitive branch — identical to what the request's
+        per-row k the cost model's *route split* should assume. The
+        serving front-end coalesces requests with heterogeneous k's
+        into one pass at k = max over requests; handing each row its
+        own request's k here keeps the dense/itinerary routing decision
+        — the one k-sensitive branch — identical to what the request's
         solo call would have picked, preserving exact-id parity.
+
+        ``routes`` is a precomputed per-box
+        :class:`~repro.core.selectivity.RouteDecision` (the Collection
+        passes the planner's histogram-refined one); None computes it
+        here from the global CDF product and ``params.cost``. Routing
+        is per-row and estimate-driven, so it never breaks the
+        batch-composition contract.
         """
         params = params or SearchParams()
         q = np.asarray(q, np.float32)
@@ -242,7 +219,8 @@ class Searcher:
                 raise ValueError("n_queries is required with qmap")
         t0 = time.perf_counter()
         self.stats = {"engine": "incore", "n_rows": int(B),
-                      "n_dense": 0, "n_global": 0, "n_itinerary": 0}
+                      "n_dense": 0, "n_mid": 0, "n_broad": 0,
+                      "n_global": 0, "n_itinerary": 0}
         if B == 0:
             nq = n_queries if qmap is not None else 0
             self.stats["wall_seconds"] = time.perf_counter() - t0
@@ -252,31 +230,18 @@ class Searcher:
         cfg = self.index.config
         inc = select_mod.incidence_numpy(lo, hi, self.index.cell_lo,
                                          self.index.cell_hi)
-        sizes = np.diff(self.index.cell_start)
-        cand_rows = inc @ sizes                 # rows inside selected cells
+        if routes is None:
+            rk = (np.full(B, params.k, np.int64) if route_k is None
+                  else np.asarray(route_k, np.int64))
+            routes = sel_mod.route_boxes(self.index, lo, hi, rk,
+                                         cost=params.cost, inc=inc)
+        use_dense = routes.route == sel_mod.ROUTE_DENSE
         if params.adaptive_global:
             use_global = inc.sum(axis=1) > cfg.s_thre
         else:
             use_global = np.zeros(B, bool)
-        # adaptive dense path (Alg. 2 extended; DESIGN.md §2): tiny
-        # candidate sets are cheaper as one exact MXU pass than any walk.
-        use_dense = (cand_rows <= cfg.dense_threshold) \
-            if cfg.dense_threshold else np.zeros(B, bool)
-        # selectivity-aware extension (beyond paper, §Perf G2): a query
-        # whose *conjunction* over all m attributes is estimated to leave
-        # very few in-range rows starves graph traversal — scan instead,
-        # regardless of how many grid cells its partitioned dims span.
-        if cfg.dense_threshold and self.index.attr_quantiles is not None:
-            est = self._estimate_selectivity(lo, hi)
-            est_rows = est * self.index.n
-            rk = (np.full(B, params.k, np.int64) if route_k is None
-                  else np.asarray(route_k, np.int64))
-            if rk.shape != (B,):
-                raise ValueError(f"route_k shape {rk.shape} != ({B},)")
-            use_dense |= ((est_rows <= np.maximum(8 * rk, 64))
-                          & (cand_rows <= 16 * cfg.dense_threshold))
-        use_dense &= cand_rows > 0
         use_global &= ~use_dense
+        self.stats.update(routes.counts())
 
         out_i = np.full((B, params.k), -1, np.int64)
         out_d = np.full((B, params.k), np.inf, np.float32)
@@ -289,24 +254,36 @@ class Searcher:
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[dense_rows] = orig
             out_d[dense_rows] = d
-        self.stats["n_dense"] = int(len(dense_rows))
+            # estimator error against the scan's exact qualifying counts
+            exact = self._last_dense_qual.astype(np.float64)
+            est_r = routes.est_rows[dense_rows]
+            self.stats["est_rel_err_dense"] = float(
+                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0)))
 
         for path_idx, (flag, fn, stat) in enumerate(
                 ((False, self._traverse, "n_itinerary"),
                  (True, self._global, "n_global"))):
-            sel = np.nonzero((use_global == flag) & ~use_dense)[0]
-            self.stats[stat] = int(len(sel))
-            if len(sel) == 0:
-                continue
-            # independent entry randomization per path, keyed by *path
-            # identity* (fold_in) rather than an order-dependent split
-            # chain: a query's key must not change when the other path's
-            # sub-batch happens to be empty (batch-composition contract)
-            sub = jax.random.fold_in(base_key, path_idx)
-            ids, d = fn(q[sel], lo[sel], hi[sel], params, sub)
-            orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
-            out_i[sel] = orig
-            out_d[sel] = d
+            path_rows = (use_global == flag) & ~use_dense
+            self.stats[stat] = int(path_rows.sum())
+            for mult in np.unique(routes.ef_mult[path_rows]):
+                sel = np.nonzero(path_rows
+                                 & (routes.ef_mult == mult))[0]
+                if len(sel) == 0:
+                    continue
+                # independent entry randomization per (path, effort)
+                # bucket, keyed by *identity* (fold_in) rather than an
+                # order-dependent split chain: a query's key must not
+                # change when another bucket happens to be empty
+                # (batch-composition contract). mult=1 reproduces the
+                # historical codes 0/1 exactly.
+                code = path_idx + 2 * int(mult).bit_length() - 2
+                sub = jax.random.fold_in(base_key, code)
+                ids, d = fn(q[sel], lo[sel], hi[sel], params, sub,
+                            ef_mult=int(mult))
+                orig = np.where(ids >= 0,
+                                self.index.perm[np.maximum(ids, 0)], -1)
+                out_i[sel] = orig
+                out_d[sel] = d
         self.stats["wall_seconds"] = time.perf_counter() - t0
         if qmap is not None:
             return merge_segment_topk(out_i, out_d, qmap, n_queries,

@@ -1,0 +1,338 @@
+"""Per-box selectivity estimation + cost-based route selection.
+
+The planner-level cost model (ISSUE 7 tentpole, ROADMAP item 3 —
+VecFlow-style selectivity-adaptive execution). Every canonical filter
+box gets an estimated qualifying-row count and one of three execution
+routes, shared by all three engine modes:
+
+  ``ROUTE_DENSE``  — ultra-selective: skip traversal entirely and run
+                     the fused gather->predicate-mask->distance->k-select
+                     scan over the qualifying candidate rows
+                     (``kernels/masked_scan.py`` via
+                     ``runtime.masked_dense_scan``).
+  ``ROUTE_MID``    — mid-range: keep cell traversal but scale the
+                     candidate-pool width ``ef`` (and with it the entry
+                     beam) by a power-of-two factor derived from the
+                     estimate — range-aware effort instead of a fixed
+                     constant (RNSG's observation in PAPERS.md).
+  ``ROUTE_BROAD``  — broad: the unchanged traversal path.
+
+Estimation is two-tier:
+
+  1. :func:`estimate_selectivity` — the global per-attribute empirical
+     CDF product (``GMGIndex.attr_quantiles``), i.e. the
+     conjunction-independence estimate. Cheap, but correlated
+     attributes multiply their marginals and blow the estimate low.
+  2. :class:`SelectivityEstimator` — per-cell per-attribute histograms.
+     The estimate becomes ``sum_c inc(c) * n_c * prod_j frac_j(c)``:
+     cells already separate correlated partitioned attributes (a cell
+     only holds rows whose partitioned attrs are jointly in its box),
+     so the per-cell marginal product is conditioned on the cell and
+     the cross-cell correlation error disappears.
+
+Knobs live in :class:`CostModel` (attach via ``SearchParams.cost``);
+see ``docs/tuning.md`` for guidance tied to the ``bench_selectivity``
+regimes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.types import GMGIndex
+
+# route codes carried in RouteDecision.route ((T,) int8)
+ROUTE_DENSE = 0
+ROUTE_MID = 1
+ROUTE_BROAD = 2
+
+ROUTE_NAMES = {ROUTE_DENSE: "dense", ROUTE_MID: "mid", ROUTE_BROAD: "broad"}
+
+
+# -- CDF evaluation ----------------------------------------------------------
+#
+# Both tiers evaluate empirical CDFs stored as (edges, cumulative-fraction)
+# pairs. np.interp would be the obvious tool but breaks on duplicate edges
+# (discrete or constant attributes produce zero-width bins: a constant
+# column's quantile grid is one repeated value), so evaluation is
+# searchsorted + guarded linear interpolation. ``side`` picks the bound
+# semantics: "left" for a range's lower bound (mass strictly below lo is
+# excluded... approximately; the grid cannot distinguish < from <=) and
+# "right" for the upper bound (mass at hi counts).
+
+def _cdf_eval(edges: np.ndarray, cdf: np.ndarray, x: np.ndarray,
+              side: str) -> np.ndarray:
+    """Evaluate empirical CDF(s) at points ``x``.
+
+    edges (ng+1,) ascending (duplicates allowed); cdf (..., ng+1)
+    cumulative fraction at each edge (cdf[..., 0] == 0); x (T,).
+    Returns (..., T) — F(x) per cdf row per point, in [0, cdf[..., -1]].
+    """
+    x = np.asarray(x, np.float64)
+    ng1 = edges.shape[0]
+    i = np.searchsorted(edges, x, side=side)              # (T,) in [0, ng1]
+    li = np.clip(i - 1, 0, ng1 - 1)
+    ri = np.clip(i, 0, ng1 - 1)
+    le, re_ = edges[li], edges[ri]
+    width = re_ - le
+    # zero-width bin (duplicate edges): all mass sits at the edge value —
+    # include it for an upper bound ("right"), exclude for a lower ("left")
+    t = np.where(width > 0,
+                 (x - le) / np.where(width > 0, width, 1.0),
+                 1.0 if side == "right" else 0.0)
+    t = np.clip(t, 0.0, 1.0)
+    c_lo = cdf[..., li]
+    c_hi = cdf[..., ri]
+    F = c_lo + t * (c_hi - c_lo)
+    F = np.where(i <= 0, 0.0, F)
+    F = np.where(i >= ng1, cdf[..., -1][..., None], F)
+    return F
+
+
+def estimate_selectivity(index: GMGIndex, lo: np.ndarray,
+                         hi: np.ndarray) -> np.ndarray:
+    """(B,) estimated in-range fraction per box — the clamped
+    conjunction-independence product over the per-attribute empirical
+    CDF grids (``index.attr_quantiles``).
+
+    The public helper the planner (and ``Searcher``) call: each factor
+    and the final product are clamped to [0, 1], and degenerate grids
+    (constant attributes collapse every quantile to one value) evaluate
+    to 1 for ranges containing the value and 0 otherwise instead of
+    over/undershooting. With no quantile grid on the index the estimate
+    degrades to the uninformative 1.0 (route everything broad).
+    """
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    B = lo.shape[0]
+    qgrid = index.attr_quantiles
+    if qgrid is None:
+        return np.ones(B, np.float64)
+    ng = qgrid.shape[1] - 1
+    uniform_cdf = np.linspace(0.0, 1.0, ng + 1)
+    est = np.ones(B, np.float64)
+    for j in range(qgrid.shape[0]):
+        f_hi = _cdf_eval(qgrid[j].astype(np.float64), uniform_cdf,
+                         hi[:, j], side="right")
+        f_lo = _cdf_eval(qgrid[j].astype(np.float64), uniform_cdf,
+                         lo[:, j], side="left")
+        est *= np.clip(f_hi - f_lo, 0.0, 1.0)
+    return np.clip(est, 0.0, 1.0)
+
+
+# -- tier 2: per-cell attribute histograms -----------------------------------
+
+class SelectivityEstimator:
+    """Per-cell per-attribute histogram refinement of the CDF product.
+
+    Bin edges are quantile-spaced globally (subsampled from the index's
+    ``attr_quantiles`` grid so no second data pass is needed); counts
+    are per (cell, attribute, bin). Tombstoned rows (NaN attrs on the
+    engine replica) drop out of the counts, so estimates track deletes.
+
+    ``estimate_rows(lo, hi, inc)`` returns the refined qualifying-row
+    estimate ``sum_c inc[:, c] * n_c * prod_j frac_j(c, [lo_j, hi_j])``
+    — the within-cell independence product, summed over selected cells.
+    Cross-cell attribute correlation (the failure mode of the global
+    product) is captured because each cell's marginals are conditioned
+    on membership in that cell.
+    """
+
+    def __init__(self, index: GMGIndex, n_bins: int = 32):
+        attrs = np.asarray(index.attrs, np.float64)
+        n, m = attrs.shape
+        S = index.n_cells
+        self.n_bins = int(n_bins)
+        qgrid = index.attr_quantiles
+        if qgrid is None:
+            # degrade to one bin per attribute spanning the data range
+            lo_v = np.nanmin(attrs, axis=0) if n else np.zeros(m)
+            hi_v = np.nanmax(attrs, axis=0) if n else np.ones(m)
+            self.edges = np.stack([np.linspace(lo_v[j], hi_v[j], 2)
+                                   for j in range(m)])
+            self.n_bins = 1
+        else:
+            ng = qgrid.shape[1] - 1
+            step = max(1, ng // self.n_bins)
+            cols = list(range(0, ng + 1, step))
+            if cols[-1] != ng:
+                cols.append(ng)
+            self.edges = qgrid[:, cols].astype(np.float64)   # (m, nb+1)
+            self.n_bins = self.edges.shape[1] - 1
+        nb = self.n_bins
+        counts = np.zeros((S, m, nb), np.float64)
+        cell_of = np.asarray(index.cell_of, np.int64)
+        for j in range(m):
+            col = attrs[:, j]
+            live = ~np.isnan(col)
+            b = np.searchsorted(self.edges[j], col[live], side="right") - 1
+            b = np.clip(b, 0, nb - 1)
+            np.add.at(counts, (cell_of[live], j, b), 1.0)
+        self.counts = counts                                  # (S, m, nb)
+        # per-(cell, attr) live-row totals; attrs NaN independently only
+        # for tombstones (whole row), so totals agree across j in practice
+        self.cell_live = counts.sum(axis=2)                   # (S, m)
+        # per-cell cumulative fraction at each edge: (S, m, nb+1)
+        csum = np.concatenate(
+            [np.zeros((S, m, 1)), np.cumsum(counts, axis=2)], axis=2)
+        denom = np.maximum(self.cell_live[..., None], 1.0)
+        self.cdf = csum / denom
+        self.n_live = float(self.cell_live.max(axis=1).sum())
+
+    def cell_fracs(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """(T, S) estimated in-range fraction of each cell's live rows
+        for each box (within-cell independence product over attrs)."""
+        lo = np.asarray(lo, np.float64)
+        hi = np.asarray(hi, np.float64)
+        T = lo.shape[0]
+        S, m, _ = self.counts.shape
+        frac = np.ones((T, S), np.float64)
+        for j in range(m):
+            f_hi = _cdf_eval(self.edges[j], self.cdf[:, j, :], hi[:, j],
+                             side="right")                    # (S, T)
+            f_lo = _cdf_eval(self.edges[j], self.cdf[:, j, :], lo[:, j],
+                             side="left")
+            frac *= np.clip(f_hi - f_lo, 0.0, 1.0).T          # (T, S)
+        return frac
+
+    def estimate_rows(self, lo: np.ndarray, hi: np.ndarray,
+                      inc: Optional[np.ndarray] = None) -> np.ndarray:
+        """(T,) refined qualifying-row estimate per box. ``inc`` is the
+        (T, S) cell-incidence matrix (cells whose grid box intersects
+        the query box); without it every cell contributes."""
+        frac = self.cell_fracs(lo, hi)
+        cell_n = self.cell_live.max(axis=1)                   # (S,)
+        if inc is not None:
+            frac = np.where(np.asarray(inc, bool), frac, 0.0)
+        return frac @ cell_n
+
+
+# -- the cost model ----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-box route thresholds (attach via ``SearchParams.cost``).
+
+    Dense when ANY of:
+      - the selected cells hold <= ``config.dense_threshold`` rows
+        (the legacy candidate-count rule — scanning them is one pass);
+      - the estimate leaves <= ``max(dense_rows_per_k * k,
+        dense_rows_min)`` qualifying rows (a starved graph walk) and the
+        candidate set is <= ``dense_cand_mult * dense_threshold``;
+      - the estimated in-range *fraction* is <= ``dense_frac`` and the
+        candidate cap above holds (ultra-selective regardless of k).
+    Never dense with zero candidate rows.
+
+    Mid (not dense, estimated fraction <= ``mid_frac``): traversal with
+    ``ef`` scaled by a power-of-two factor <= ``ef_boost_max`` — 2x in
+    the upper half of the mid band, 4x in the lower (geometric) half.
+
+    Broad (everything else): the unchanged traversal path.
+
+    ``CostModel.off()`` disables routing entirely (every box broad,
+    factor 1) — the forced-traversal ablation arm ``bench_selectivity``
+    measures the dense/mid wins against.
+    """
+
+    dense_frac: float = 1e-3
+    dense_rows_per_k: int = 8
+    dense_rows_min: int = 64
+    dense_cand_mult: int = 16
+    mid_frac: float = 0.05
+    ef_boost_max: int = 4
+    enabled: bool = True
+
+    @classmethod
+    def off(cls) -> "CostModel":
+        """Forced-traversal ablation: no dense route, no ef scaling."""
+        return cls(enabled=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """Per-box routing output (one row per plan box)."""
+
+    route: np.ndarray      # (T,) int8 — ROUTE_DENSE | ROUTE_MID | ROUTE_BROAD
+    est: np.ndarray        # (T,) f64 estimated in-range fraction
+    est_rows: np.ndarray   # (T,) f64 estimated qualifying rows
+    cand_rows: np.ndarray  # (T,) i64 rows inside the selected cells
+    ef_mult: np.ndarray    # (T,) i64 pow2 ef/entry-beam factor (1 = none)
+
+    def counts(self) -> dict:
+        """Per-route row counts for stats reporting."""
+        r = self.route
+        return {"n_dense": int((r == ROUTE_DENSE).sum()),
+                "n_mid": int((r == ROUTE_MID).sum()),
+                "n_broad": int((r == ROUTE_BROAD).sum())}
+
+
+def route_boxes(index: GMGIndex, lo: np.ndarray, hi: np.ndarray,
+                route_k: np.ndarray, cost: Optional[CostModel] = None,
+                estimator: Optional[SelectivityEstimator] = None,
+                est_rows: Optional[np.ndarray] = None,
+                inc: Optional[np.ndarray] = None) -> RouteDecision:
+    """Decide each box's execution route (shared by all three engines).
+
+    ``route_k`` is the per-row k the decision should assume (the serving
+    front-end hands each coalesced row its own request's k).
+    ``estimator`` refines the row estimate with per-cell histograms;
+    ``est_rows`` short-circuits estimation entirely (e.g. a plan already
+    annotated by ``api.planner.annotate_plan``). ``inc`` is the (T, S)
+    incidence matrix if the caller already computed it.
+    """
+    from repro.core import select as select_mod
+    cost = cost if cost is not None else CostModel()
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    T = lo.shape[0]
+    rk = np.asarray(route_k, np.int64)
+    if rk.shape != (T,):
+        raise ValueError(f"route_k shape {rk.shape} != ({T},)")
+    if inc is None:
+        inc = select_mod.incidence_numpy(lo, hi, index.cell_lo,
+                                         index.cell_hi)
+    sizes = np.diff(index.cell_start)
+    cand_rows = (inc @ sizes).astype(np.int64)
+
+    n_ref = float(max(index.n, 1))
+    if est_rows is not None:
+        est_rows = np.asarray(est_rows, np.float64)
+        if estimator is not None:
+            n_ref = max(estimator.n_live, 1.0)
+        est = est_rows / n_ref
+    elif estimator is not None:
+        est_rows = estimator.estimate_rows(lo, hi, inc)
+        n_ref = max(estimator.n_live, 1.0)
+        est = est_rows / n_ref
+    else:
+        est = estimate_selectivity(index, lo, hi)
+        est_rows = est * index.n
+
+    route = np.full(T, ROUTE_BROAD, np.int8)
+    ef_mult = np.ones(T, np.int64)
+    thr = index.config.dense_threshold
+    if cost.enabled and thr:
+        cand_cap = cost.dense_cand_mult * thr
+        use_dense = cand_rows <= thr
+        use_dense |= ((est_rows <= np.maximum(
+            cost.dense_rows_per_k * rk, cost.dense_rows_min))
+            & (cand_rows <= cand_cap))
+        use_dense |= (est <= cost.dense_frac) & (cand_rows <= cand_cap)
+        use_dense &= cand_rows > 0
+        route[use_dense] = ROUTE_DENSE
+        # empty candidate sets (inverted/impossible boxes) stay broad at
+        # 1x: they return nothing regardless, so never buy them effort
+        mid = ~use_dense & (est <= cost.mid_frac) & (cand_rows > 0)
+        route[mid] = ROUTE_MID
+        # pow2 effort buckets: 2x over the mid band, 4x in its lower
+        # (geometric) half — few distinct widths keep jit caches warm
+        lower = np.sqrt(max(cost.mid_frac, 1e-30)
+                        * max(cost.dense_frac, 1e-30))
+        ef_mult[mid] = np.where(est[mid] <= lower,
+                                min(4, cost.ef_boost_max),
+                                min(2, cost.ef_boost_max))
+    return RouteDecision(route=route, est=est, est_rows=est_rows,
+                         cand_rows=cand_rows, ef_mult=ef_mult)

@@ -11,9 +11,12 @@ coalesced access" design and maps 1:1 onto TPU-friendly dense rows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
+
+if TYPE_CHECKING:  # cost model lives above types in the import DAG
+    from repro.core.selectivity import CostModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +140,13 @@ class GMGIndex:
 
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
-    """Per-query-batch knobs (overrides config defaults where sensible)."""
+    """Per-query-batch knobs (overrides config defaults where sensible).
+
+    ``cost`` is the per-box route cost model
+    (:class:`repro.core.selectivity.CostModel`): None uses the default
+    thresholds, ``CostModel.off()`` forces every box onto the traversal
+    path (the ablation arm). Knob guidance lives in ``docs/tuning.md``.
+    """
 
     k: int = 10
     ef: Optional[int] = None           # None -> config.search_ef
@@ -149,3 +158,4 @@ class SearchParams:
     # in-range result pool proposes inter-cell entries on every itinerary
     # hop (paper §5.1's entry propagation, applied to all engine modes)
     seed: int = 0
+    cost: Optional["CostModel"] = None  # per-box routing (docs/tuning.md)

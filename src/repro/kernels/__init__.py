@@ -1,6 +1,6 @@
 """Pallas TPU kernels for Garfield's compute hot spots.
 
-Four kernels, each with an explicit-BlockSpec `pl.pallas_call` implementation
+Five kernels, each with an explicit-BlockSpec `pl.pallas_call` implementation
 targeting TPU v5e (validated on CPU via ``interpret=True``), a pure-jnp oracle
 in :mod:`repro.kernels.ref`, and a jit'd dispatch wrapper in
 :mod:`repro.kernels.ops`:
@@ -14,6 +14,10 @@ in :mod:`repro.kernels.ref`, and a jit'd dispatch wrapper in
                        (paper: quantized resident vectors in HBM).
 - ``gather_distance``— scalar-prefetch row gather + distance (paper: the
                        traversal's neighbor-expansion inner loop).
+- ``masked_scan``    — fused gather -> range-predicate mask -> distance ->
+                       k-select over candidate rows (the cost model's dense
+                       route for ultra-selective filters; f32 + int8
+                       variants).
 """
 
 from repro.kernels import ops, ref  # noqa: F401

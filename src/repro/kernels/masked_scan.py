@@ -1,0 +1,200 @@
+"""Fused gather -> predicate-mask -> distance -> k-select scan.
+
+The dense route's kernel (ISSUE 7): ultra-selective filter boxes skip
+graph traversal entirely and brute-force their qualifying candidate rows.
+Per grid step the scalar-prefetched index array picks the next candidate
+row — the vector row AND its attribute row ride the same index_map, so the
+range predicate is evaluated in VMEM right next to the diff-square-add and
+out-of-range rows never produce a finite distance (one fused pass instead
+of gather + separate mask + separate distance). Two variants share the
+pattern of gather_distance.py / gather_int8.py:
+
+- f32 table (in-core engine), and
+- symmetric-int8 table + per-row scale (hybrid / out-of-core engines,
+  whose dense hits then flow through the usual exact fp32 re-rank).
+
+The top-k half of the fusion is ``ops.k_select`` over the masked distance
+row — same lower-column-index tie rule the device re-rank relies on, so
+candidate ids enumerated in ascending order come out (distance, id)-ordered
+exactly like ``mutable.scan_buffer``.
+
+Padding contract (``masked_topk`` / ``masked_topk_q``): d pads to 128 with
+zeros (exact), m pads to 128 with zero attrs against [0, 0] bounds (always
+in range), idx pads with -1 (+inf). NaN attributes fail every comparison,
+so tombstoned rows drop out for free.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import config, ops, ref
+
+
+# -- Pallas kernels ----------------------------------------------------------
+
+def _kernel_f32(idx_ref, q_ref, lo_ref, hi_ref, row_ref, attr_ref, out_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)                     # (1, d)
+    row = row_ref[...].astype(jnp.float32)                 # (1, d)
+    diff = q - row
+    d2 = jnp.sum(diff * diff)
+    a = attr_ref[...].astype(jnp.float32)                  # (1, m)
+    ok = jnp.all((a >= lo_ref[...]) & (a <= hi_ref[...]))
+    invalid = idx_ref[b, j] < 0
+    out_ref[0, 0] = jnp.where(invalid | ~ok, jnp.float32(jnp.inf), d2)
+
+
+def _kernel_int8(idx_ref, q_ref, lo_ref, hi_ref, row_ref, scale_ref,
+                 attr_ref, out_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)                     # (1, d)
+    row = row_ref[...].astype(jnp.float32)                 # (1, d) int8->f32
+    scale = scale_ref[0, 0].astype(jnp.float32)
+    diff = q - row * scale
+    d2 = jnp.sum(diff * diff)
+    a = attr_ref[...].astype(jnp.float32)                  # (1, m)
+    ok = jnp.all((a >= lo_ref[...]) & (a <= hi_ref[...]))
+    invalid = idx_ref[b, j] < 0
+    out_ref[0, 0] = jnp.where(invalid | ~ok, jnp.float32(jnp.inf), d2)
+
+
+def _grid_spec(B, d, m, nb, with_scale):
+    def b_map(b, j, idx_ref):
+        return (b, 0)
+
+    def row_map(b, j, idx_ref):
+        return (jnp.maximum(idx_ref[b, j], 0), 0)
+
+    def out_map(b, j, idx_ref):
+        return (b, j)
+
+    in_specs = [
+        pl.BlockSpec((1, d), b_map),       # q
+        pl.BlockSpec((1, m), b_map),       # lo
+        pl.BlockSpec((1, m), b_map),       # hi
+        pl.BlockSpec((1, d), row_map),     # table / vq row
+    ]
+    if with_scale:
+        in_specs.append(pl.BlockSpec((1, 1), row_map))  # vscale
+    in_specs.append(pl.BlockSpec((1, m), row_map))      # attrs row
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), out_map),
+    )
+
+
+@jax.jit
+def masked_gather_distance(q, table, attrs, lo, hi, idx):
+    """q (B,d), table (N,d), attrs (N,m), lo/hi (B,m), idx (B,nb) i32
+    -> (B, nb) f32; idx<0 or attrs outside [lo, hi] -> +inf."""
+    B, d = q.shape
+    m = attrs.shape[1]
+    nb = idx.shape[1]
+    return pl.pallas_call(
+        _kernel_f32,
+        grid_spec=_grid_spec(B, d, m, nb, with_scale=False),
+        out_shape=jax.ShapeDtypeStruct((B, nb), jnp.float32),
+        interpret=config.interpret(),
+    )(idx, q, lo, hi, table, attrs)
+
+
+@jax.jit
+def masked_gather_int8_distance(q, vq, vscale, attrs, lo, hi, idx):
+    """q (B,d) f32, vq (N,d) i8, vscale (N,1) f32, attrs (N,m),
+    lo/hi (B,m), idx (B,nb) i32 -> (B, nb) f32 dequantized distances."""
+    B, d = q.shape
+    m = attrs.shape[1]
+    nb = idx.shape[1]
+    return pl.pallas_call(
+        _kernel_int8,
+        grid_spec=_grid_spec(B, d, m, nb, with_scale=True),
+        out_shape=jax.ShapeDtypeStruct((B, nb), jnp.float32),
+        interpret=config.interpret(),
+    )(idx, q, lo, hi, vq, vscale, attrs)
+
+
+# -- jnp oracles (also the fast XLA path off-TPU) ----------------------------
+
+def _attr_mask(attrs, lo, hi, idx):
+    """(B, nb) bool — gathered attr row fully inside [lo, hi]. NaN attrs
+    (tombstones) fail every comparison and mask out."""
+    safe = jnp.maximum(idx, 0)
+    a = attrs[safe]                                         # (B, nb, m)
+    ok = (a >= lo[:, None, :]) & (a <= hi[:, None, :])
+    return jnp.all(ok, axis=-1)
+
+
+def ref_masked_gather_distance(q, table, attrs, lo, hi, idx):
+    d2 = ref.gather_distance(q, table, idx)
+    ok = _attr_mask(attrs, lo, hi, idx)
+    return jnp.where(ok, d2, jnp.float32(jnp.inf))
+
+
+def ref_masked_gather_int8_distance(q, vq, vscale, attrs, lo, hi, idx):
+    d2 = ref.gather_int8_distance(q, vq, vscale.reshape(-1), idx)
+    ok = _attr_mask(attrs, lo, hi, idx)
+    return jnp.where(ok, d2, jnp.float32(jnp.inf))
+
+
+# -- padded dispatch wrappers (the public API) -------------------------------
+
+def _pad_inputs(q, attrs, lo, hi, idx):
+    qp = ops._pad_to(q.astype(jnp.float32), 1, 128)
+    ap = ops._pad_to(attrs.astype(jnp.float32), 1, 128)
+    lop = ops._pad_to(lo.astype(jnp.float32), 1, 128)
+    hip = ops._pad_to(hi.astype(jnp.float32), 1, 128)
+    return qp, ap, lop, hip, idx.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _ref_topk_f32(q, table, attrs, lo, hi, idx, k: int):
+    d2 = ref_masked_gather_distance(q, table, attrs, lo, hi, idx)
+    return ops.k_select(d2, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _ref_topk_int8(q, vq, vscale, attrs, lo, hi, idx, k: int):
+    d2 = ref_masked_gather_int8_distance(q, vq, vscale, attrs, lo, hi, idx)
+    return ops.k_select(d2, k)
+
+
+def masked_topk(q, table, attrs, lo, hi, idx, k: int):
+    """Fused dense scan over an f32 table.
+
+    q (B,d), table (N,d), attrs (N,m), lo/hi (B,m), idx (B,nb) i32 with
+    -1 padding -> (vals (B,k) f32 ascending, pos (B,k) i32 columns into
+    ``idx``). Out-of-range / padded slots surface as +inf; ties resolve
+    to the lower column index (= lower candidate id when idx ascends).
+    """
+    if not config.use_pallas():
+        return _ref_topk_f32(q, table, attrs, lo, hi, idx, k)
+    qp, ap, lop, hip, ip = _pad_inputs(q, attrs, lo, hi, idx)
+    tp = ops._pad_to(table.astype(jnp.float32), 1, 128)
+    d2 = masked_gather_distance(qp, tp, ap, lop, hip, ip)
+    return ops.k_select(d2, k)
+
+
+def masked_topk_q(q, vq, vscale, attrs, lo, hi, idx, k: int):
+    """Fused dense scan over the symmetric-int8 table (hybrid / ooc).
+
+    Same contract as :func:`masked_topk`; distances are the dequantized
+    int8 approximation, so callers re-rank the survivors in fp32.
+    """
+    if not config.use_pallas():
+        return _ref_topk_int8(q, vq, vscale, attrs, lo, hi, idx, k)
+    qp, ap, lop, hip, ip = _pad_inputs(q, attrs, lo, hi, idx)
+    vp = ops._pad_to(vq, 1, 128)
+    d2 = masked_gather_int8_distance(
+        qp, vp, vscale.reshape(-1, 1).astype(jnp.float32),
+        ap, lop, hip, ip)
+    return ops.k_select(d2, k)

@@ -33,7 +33,12 @@ Scheduling is SLO-aware:
     rows in the collection's append buffers immediately (searchable at
     once — every pass folds the buffered rows in), but the expensive
     graph splice (``Collection.flush``) runs only when the queue is
-    idle or the flush budget has elapsed, so writes never stall reads.
+    idle or the flush budget has elapsed — and a budget-forced flush
+    additionally yields while its last measured cost (unknown on the
+    first flush: assume it won't fit) would expire a queued deadline,
+    so writes never stall reads. Freshness is a soft target; the
+    latency SLO is the hard contract, and buffered rows stay
+    searchable either way.
 
 Time is injectable (``clock=``) — :class:`VirtualClock` advances by the
 measured real cost of each pass, which makes open-loop latency harnesses
@@ -105,6 +110,7 @@ class VectorFrontend:
                  max_batch_queries: int = 64,
                  max_wait: float = 0.0,
                  flush_budget: float = 0.25,
+                 idle_grace: float = 0.0,
                  params: Optional[SearchParams] = None,
                  engine: Optional[str] = None,
                  clock=time.monotonic):
@@ -114,6 +120,10 @@ class VectorFrontend:
         self.max_batch_queries = int(max_batch_queries)
         self.max_wait = float(max_wait)
         self.flush_budget = float(flush_budget)
+        # an empty queue is not quiescence under open-loop traffic: idle
+        # flushes additionally wait until no submission has arrived for
+        # this many seconds (0 = flush on any empty-queue tick)
+        self.idle_grace = float(idle_grace)
         self.params = params
         self.engine = engine
         self._clock = clock
@@ -123,12 +133,15 @@ class VectorFrontend:
         self.completed: dict[int, SearchRequest] = {}
         self._next_rid = 0
         self._last_flush = self._clock()
+        self._last_submit = self._clock()
         # lifetime counters
         self.n_ticks = 0
         self.n_passes = 0
         self.n_served = 0
         self.n_shed = 0
         self.n_flushes = 0
+        self.n_flush_deferrals = 0
+        self._flush_cost: Optional[float] = None  # last measured wall time
         self._latencies: list[float] = []
         self._occupancy: list[float] = []
         self.last_tick_stats: dict = {}
@@ -148,13 +161,15 @@ class VectorFrontend:
             rid=self._next_rid, q=np.atleast_2d(np.asarray(q, np.float32)),
             filters=filters, k=int(k), deadline=deadline, t_submit=now)
         self._next_rid += 1
+        self._last_submit = now
         self.queue.append(req)
         return req.rid
 
     def insert(self, vectors: np.ndarray, attrs) -> np.ndarray:
         """Background ingest: rows land in the collection's append
         buffers now (immediately searchable); the graph splice waits for
-        :meth:`_maintain` (queue idle or flush budget elapsed)."""
+        :meth:`_maintain` (queue idle, or flush budget elapsed and the
+        measured flush cost fits before the tightest queued SLO)."""
         return self.collection.insert(vectors, attrs)
 
     def take(self, rid: int) -> SearchRequest:
@@ -215,10 +230,33 @@ class VectorFrontend:
     def _maintain(self, now: float, idle: bool) -> None:
         mut = self.collection._mut
         pending = 0 if mut is None else mut.pending_rows
-        if pending and (idle or now - self._last_flush >= self.flush_budget):
-            self._timed(self.collection.flush)
-            self._last_flush = self._clock()
-            self.n_flushes += 1
+        if not pending:
+            return
+        if idle:
+            # empty queue != quiescence: under open-loop traffic arrivals
+            # are imminent, so idle flushes wait out the grace window
+            if now - self._last_submit < self.idle_grace:
+                self.n_flush_deferrals += 1
+                return
+        elif now - self._last_flush < self.flush_budget:
+            return
+        else:
+            # A budget-forced flush competes with live SLOs, and the graph
+            # splice is stop-the-world for its duration: yield while the
+            # last measured flush cost (unknown -> assume it won't fit)
+            # would expire the tightest queued deadline. Buffered rows are
+            # searchable regardless, so only freshness-of-structure waits.
+            deadlines = [r.deadline for r in self.queue
+                         if r.deadline is not None]
+            if deadlines and (self._flush_cost is None
+                              or now + self._flush_cost > min(deadlines)):
+                self.n_flush_deferrals += 1
+                return
+        t0 = time.perf_counter()
+        self._timed(self.collection.flush)
+        self._flush_cost = time.perf_counter() - t0
+        self._last_flush = self._clock()
+        self.n_flushes += 1
 
     def tick(self) -> dict:
         """One scheduling step: shed -> (maybe wait) -> admit -> one
@@ -296,4 +334,5 @@ class VectorFrontend:
                                          if self._occupancy else 0.0),
                 "n_ticks": self.n_ticks, "n_passes": self.n_passes,
                 "n_flushes": self.n_flushes,
+                "n_flush_deferrals": self.n_flush_deferrals,
                 "queue_depth": len(self.queue)}

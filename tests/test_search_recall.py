@@ -5,6 +5,7 @@ import pytest
 
 from repro.api import AttrSchema, Collection, F
 from repro.core.search import Searcher, ground_truth, recall_at_k
+from repro.core.selectivity import CostModel
 from repro.core.types import GMGConfig, SearchParams
 from repro.data import make_dataset, make_queries
 
@@ -119,8 +120,18 @@ def test_disjunction_recall_out_of_core(disj_collection):
     assert res.engine == "ooc"
     tids = _brute_union_ids(v, a, q, (a[:, 0] < 10) | (a[:, 0] > 90), 10)
     assert res.recall(tids) >= 0.95
-    assert ooc.last_stats["n_batches"] >= 1
+    # at this scale every box's candidate set fits under dense_threshold,
+    # so the cost model answers all of them with the fused masked scan
+    # and the streaming pipeline stages no graph batches at all
+    assert ooc.last_stats["n_dense"] == 2 * len(q)
+    assert ooc.last_stats["n_batches"] == 0
     assert ooc.last_stats["planner"]["n_boxes"] == 2 * len(q)
+    # with routing off the same plan streams through cell batches
+    off = ooc.search(q, filters=expr,
+                     params=SearchParams(k=10, ef=128, cost=CostModel.off()))
+    assert off.recall(tids) >= 0.95
+    assert ooc.last_stats["n_dense"] == 0
+    assert ooc.last_stats["n_batches"] >= 1
 
 
 # -- engine parity: in-core / hybrid / out-of-core on one 5k dataset --------

@@ -1,0 +1,106 @@
+"""Docs CI: execute the README quickstart and link-check the docs.
+
+Two guarantees, so the documentation can't rot silently:
+
+1. the FIRST ```python fence in README.md is extracted verbatim and run
+   under the same interpreter/PYTHONPATH as the tests — a README
+   quickstart that no longer imports or asserts is a CI failure, not a
+   user bug report;
+2. every relative markdown link in README.md and docs/*.md must point
+   at an existing file (http(s) and pure-anchor links are skipped —
+   this is a repo-consistency check, not a crawler).
+
+Usage: python tools/docs_check.py   (from the repo root; sets
+PYTHONPATH=src for the quickstart subprocess itself)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images is not needed (repo has none), but
+# ignore in-code spans by only scanning outside fenced blocks
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```")
+
+
+def first_python_fence(md_path: str) -> str:
+    """The first ```python code block's body, verbatim."""
+    lines = open(md_path).read().splitlines()
+    body: list[str] = []
+    in_fence = False
+    for line in lines:
+        if not in_fence and line.strip().startswith("```python"):
+            in_fence = True
+            continue
+        if in_fence:
+            if line.strip().startswith("```"):
+                return "\n".join(body) + "\n"
+            body.append(line)
+    raise SystemExit(f"{md_path}: no ```python fence found")
+
+
+def run_quickstart(md_path: str) -> None:
+    code = first_python_fence(md_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    print(f"-- running quickstart from {os.path.relpath(md_path, REPO)} "
+          f"({len(code.splitlines())} lines)")
+    proc = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO)
+    if proc.returncode != 0:
+        raise SystemExit(f"README quickstart failed "
+                         f"(exit {proc.returncode})")
+
+
+def check_links(md_path: str) -> list[str]:
+    """Relative links in ``md_path`` that don't resolve to a file."""
+    bad = []
+    in_fence = False
+    for line in open(md_path).read().splitlines():
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in _LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md_path), path))
+            if not os.path.exists(resolved):
+                bad.append(f"{os.path.relpath(md_path, REPO)}: "
+                           f"broken link -> {target}")
+    return bad
+
+
+def main() -> int:
+    readme = os.path.join(REPO, "README.md")
+    docs_dir = os.path.join(REPO, "docs")
+    md_files = [readme] + sorted(
+        os.path.join(docs_dir, f) for f in os.listdir(docs_dir)
+        if f.endswith(".md"))
+    bad = []
+    for md in md_files:
+        bad += check_links(md)
+    for b in bad:
+        print(f"FAIL {b}")
+    run_quickstart(readme)
+    if bad:
+        print(f"docs check: {len(bad)} broken link(s)")
+        return 1
+    print(f"docs check: OK ({len(md_files)} files, quickstart ran)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
