@@ -1,14 +1,98 @@
 """Kernel microbench: ref (XLA) path wall-time on CPU + interpret-mode
 validation cost. On TPU the pallas path would time here instead; on CPU
-the ref path *is* the production path, so the numbers are real."""
+the ref path *is* the production path, so the numbers are real.
+
+Also emits the traversal-wave fusion counters the CI perf gate tracks:
+``per_hop_programs`` — the number of launch-grade ops (pallas_call /
+sort / top_k / gather / scatter) one expansion step traces to. The
+fused wave must stay at exactly 1 (one pallas_call per hop); the
+unfused jnp composition is the >= 3 baseline it replaced. These are
+jaxpr-structural counts, deterministic and wall-clock-free."""
 
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.kernels import ops
+from repro.kernels import config as kcfg
+from repro.kernels import ops, ref
+from repro.kernels import traversal_wave as twave
+
+# primitives that lower to their own expensive launch/pass (vs cheap
+# pointwise/reshape glue): what "one kernel per hop" counts
+_HEAVY = {"pallas_call", "sort", "top_k", "gather", "scatter",
+          "scatter-add"}
+
+
+def _count_programs(fn, *args) -> int:
+    """Launch-grade ops in fn's jaxpr, recursing into sub-jaxprs except
+    a pallas_call's own body (its internal ops are fused in one launch).
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in _HEAVY:
+                n += 1
+            if eqn.primitive.name == "pallas_call":
+                continue    # one launch regardless of body size
+            for v in eqn.params.values():
+                for item in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(item, "eqns"):
+                        n += walk(item)
+                    elif hasattr(item, "jaxpr"):
+                        n += walk(item.jaxpr)
+        return n
+
+    return walk(closed.jaxpr)
+
+
+def _wave_rows(rows):
+    rng = np.random.default_rng(1)
+    B, nb, n, d, m, ef, k = 8, 16, 4096, 128, 2, 32, 10
+    table = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    attrs = jnp.asarray(rng.random((n, m)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    lo = jnp.zeros((B, m), jnp.float32)
+    hi = jnp.ones((B, m), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, n, (B, nb)).astype(np.int32))
+    visited = jnp.zeros((B, (n + 31) // 32), jnp.uint32)
+    beam_ids = jnp.full((B, ef), -1, jnp.int32)
+    beam_d = jnp.full((B, ef), jnp.inf, jnp.float32)
+    beam_exp = jnp.ones((B, ef), bool)
+    res_ids = jnp.full((B, k), -1, jnp.int32)
+    res_d = jnp.full((B, k), jnp.inf, jnp.float32)
+    args = (q, table, None, None, attrs, lo, hi, cand, cand, visited,
+            beam_ids, beam_d, beam_exp, res_ids, res_d)
+
+    with kcfg.mode("pallas"):
+        n_fused = _count_programs(twave.wave_expand, *args)
+    n_unfused = _count_programs(ref.wave_expand, *args)
+    assert n_fused == 1, (
+        f"the fused traversal wave must issue exactly ONE kernel per "
+        f"expansion step, traced {n_fused}")
+    assert n_unfused >= 3, (
+        f"unfused baseline unexpectedly cheap: {n_unfused} programs")
+
+    # analytic per-hop gather traffic: neighbor rows + their attr rows
+    gather_f32 = B * nb * (d * 4 + m * 4)
+    gather_int8 = B * nb * (d * 1 + 4 + m * 4)
+
+    qps, dt = common.timed_qps(
+        lambda: ref.wave_expand(*args)[0].block_until_ready(), B)
+    rows.append(dict(bench="kernels", kernel="traversal_wave",
+                     variant="unfused", B=B, nb=nb, d=d,
+                     ms=round(dt * 1e3, 3),
+                     per_hop_programs=n_unfused,
+                     hop_gather_bytes=gather_f32))
+    rows.append(dict(bench="kernels", kernel="traversal_wave",
+                     variant="fused", B=B, nb=nb, d=d,
+                     per_hop_programs=n_fused,
+                     hop_gather_bytes=gather_f32,
+                     hop_gather_bytes_int8=gather_int8))
 
 
 def run(scale: str = "smoke"):
@@ -37,4 +121,5 @@ def run(scale: str = "smoke"):
         rows.append(dict(bench="kernels", kernel="gather_distance",
                          B=B, N=N, d=d, ms=round(dt * 1e3, 2),
                          gflops=round(2.0 * B * 16 * d / dt / 1e9, 2)))
+    _wave_rows(rows)
     return rows

@@ -89,6 +89,14 @@ def run(scale: str = "smoke"):
             row["total_active"] = int(stats.get("total_active", 0))
             if "hit_rate" in stats:
                 row["hit_rate"] = round(float(stats["hit_rate"]), 4)
+            # double-buffered streaming counters (hybrid only): uploads
+            # issued ahead of their wave and the fraction that got used
+            for kk in ("prefetches", "prefetch_hits"):
+                if kk in stats:
+                    row[kk] = int(stats[kk])
+            if "prefetch_hit_rate" in stats:
+                row["prefetch_hit_rate"] = round(
+                    float(stats["prefetch_hit_rate"]), 4)
         rows.append(row)
         return row
 
@@ -120,4 +128,10 @@ def run(scale: str = "smoke"):
     assert abs(arena["recall"] - fixed["recall"]) <= 0.005, (
         "transfer win must come at equal recall: "
         f"{arena['recall']} vs {fixed['recall']}")
+    # ISSUE-8 acceptance: under cache pressure the wave loop must be
+    # actually double-buffering — uploads issued ahead of their wave,
+    # and hit by it (the prefetch-hit counter cannot be zero here)
+    assert arena.get("prefetch_hits", 0) > 0, (
+        "cache-pressure regime ran without a single prefetch hit: "
+        f"{arena}")
     return rows

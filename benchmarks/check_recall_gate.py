@@ -57,6 +57,15 @@ PERF_METRICS = {
     "transfer_bytes": ("lower", "rel", 0.10, 4096),
     "total_active": ("lower", "rel", 0.10, 2),
     "hit_rate": ("higher", "abs", 0.05, 0.0),
+    # double-buffered streaming (hybrid wave loop): prefetches must keep
+    # landing ahead of their wave and keep being useful
+    "prefetch_hits": ("higher", "rel", 0.50, 0.0),
+    "prefetch_hit_rate": ("higher", "abs", 0.10, 0.0),
+    # traversal-wave fusion counters (bench_kernels, jaxpr-structural):
+    # an expansion step regrowing extra launches fails the gate — the
+    # fused path is pinned at exactly 1 program per hop
+    "per_hop_programs": ("lower", "abs", 0, 2),
+    "hop_gather_bytes": ("lower", "rel", 0.10, 0.0),
     # serving rows are wall-clock (virtual-time arrivals, real service
     # cost), so the latency limit is deliberately loose — it catches
     # order-of-magnitude scheduler regressions, not runner jitter.
@@ -123,6 +132,16 @@ def tracked_metrics(results_dir: str) -> dict:
                 float(r["recall"])
         if r.get("phase") == "compact" and float(r.get("recall", 0)) > 0:
             out[f"updates:{r['dataset']}:compact"] = float(r["recall"])
+    for r in _load_rows(results_dir, "bench_kernels"):
+        # traversal-wave fusion counters: deterministic jaxpr-structural
+        # counts (no wall-clock), tracked per variant so the fused path
+        # staying at 1 program/hop is a committed, gated fact
+        if r.get("kernel") != "traversal_wave":
+            continue
+        base = f"kernels:traversal_wave:{r['variant']}"
+        for suffix in ("per_hop_programs", "hop_gather_bytes"):
+            if suffix in r and r[suffix] is not None:
+                out[f"{base}:{suffix}"] = float(r[suffix])
     for r in _load_rows(results_dir, "bench_serving"):
         # frontend rows only: the serial row is the calibration baseline
         # (its open-loop latencies are the backlog being demonstrated)

@@ -39,9 +39,12 @@ Per query batch:
       eviction; misses group with co-accessed residents), and with the
       size-aware arena each wave packs against the arena's row capacity
       instead of a fixed slot count                    (scheduler.py)
-  (3) per wave: make the wave's cells cache-resident (upload misses,
-      evict LRU), run the itinerary traversal over global ids seeded
-      from the carried pool, fold survivors back into the pool
+  (3) per wave, double-buffered: make the wave's cells cache-resident
+      (upload misses, evict LRU), *launch* the itinerary traversal over
+      global ids seeded from the carried pool, prefetch the next wave's
+      missing cells while it runs (``CellCache.prefetch`` — the launched
+      program holds an immutable snapshot of the cache buffers), then
+      block on the result and fold survivors back into the pool
   (4) exact fp32 re-rank of each query's pool — fused on device by
       default (``rerank="device"``: one gather->distance->k-select
       program), or the legacy host loop (``rerank="host"``); both
@@ -135,6 +138,8 @@ class HybridEngine:
             self.stats = {"n_waves": 0, "total_active": 0,
                           "cache_hits": 0, "cache_misses": 0,
                           "hit_rate": 0.0, "transfer_bytes": 0,
+                          "prefetches": 0, "prefetch_hits": 0,
+                          "prefetch_bytes": 0, "prefetch_hit_rate": 0.0,
                           "n_slots": self.cache.n_slots,
                           "cache_policy": self.cache.policy,
                           "rerank": self.rerank, "wall_seconds": 0.0}
@@ -156,9 +161,17 @@ class HybridEngine:
 
         pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
-        hits = misses = transfer = 0
+        hits = misses = 0
         n_waves = total_active = 0
         est_err = None
+        # per-pass deltas off the cache's lifetime counters; the
+        # bytes_uploaded delta (not summed ensure() returns) is what
+        # transfer_bytes reports, so prefetch uploads count as the real
+        # H2D traffic they are
+        up0 = self.cache.bytes_uploaded
+        pf0 = self.cache.prefetches
+        pfh0 = self.cache.prefetch_hits
+        pfb0 = self.cache.prefetch_bytes
 
         # dense route: one fused int8 masked scan fills the pool — no
         # wave scheduling, no cache traffic; the shared exact fp32
@@ -210,14 +223,23 @@ class HybridEngine:
                 W = max((len(w) for w in waves), default=1)
                 W = 1 << (W - 1).bit_length()
 
+            # (3) wave loop, double-buffered: launch this wave's traversal
+            # (async dispatch, device arrays), upload the *next* wave's
+            # missing cells while it runs — the launched program reads an
+            # immutable snapshot of the cache buffers, so prefetch uploads
+            # cannot perturb it — then block on the result and fold it
+            # into the pool. Waves with no active query are dropped up
+            # front so the prefetch target is always the wave that will
+            # actually run next.
+            runnable = []
             for cells in waves:
                 act = np.nonzero(inc_b[:, cells].any(axis=1))[0]
-                if len(act) == 0:
-                    continue
+                if len(act) > 0:
+                    runnable.append((cells, act))
+            for wi, (cells, act) in enumerate(runnable):
                 got = self.cache.ensure(cells)
                 hits += got["hits"]
                 misses += got["misses"]
-                transfer += got["bytes"]
                 graph = self.rt.cached_graph(self.cache)
 
                 # per-active-query itinerary over *global* cell ids;
@@ -235,12 +257,15 @@ class HybridEngine:
 
                 key, sub = jax.random.split(key)
                 # carried pool seeds directly: ids are global, no remap
-                ids, d = self.rt.run(
+                ids_d, d_d, real = self.rt.run_launch(
                     graph, q[act], lo[act], hi[act], sub,
                     k=max(k, min(ef, 2 * k)), ef=ef_run,
                     cell_order=itin, seeds=pool.ids[act],
                     packed_visited=True, pool_reuse=params.pool_reuse)
-                pool.merge(act, ids, d)
+                if wi + 1 < len(runnable):
+                    self.cache.prefetch(runnable[wi + 1][0])
+                pool.merge(act, np.asarray(ids_d[:real]),
+                           np.asarray(d_d[:real]))
 
         self.stats = {
             "n_waves": n_waves,
@@ -248,7 +273,12 @@ class HybridEngine:
             "cache_hits": hits,
             "cache_misses": misses,
             "hit_rate": hits / max(hits + misses, 1),
-            "transfer_bytes": transfer,
+            "transfer_bytes": self.cache.bytes_uploaded - up0,
+            "prefetches": self.cache.prefetches - pf0,
+            "prefetch_hits": self.cache.prefetch_hits - pfh0,
+            "prefetch_bytes": self.cache.prefetch_bytes - pfb0,
+            "prefetch_hit_rate": ((self.cache.prefetch_hits - pfh0)
+                                  / max(self.cache.prefetches - pf0, 1)),
             "n_slots": self.cache.n_slots,
             "cache_policy": self.cache.policy,
             "resident_cells": len(self.cache.resident_cells()),

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core.traversal import (
     UNCACHED, GraphView, VectorStore, traversal_core)
 from repro.core.types import GMGIndex
+from repro.kernels import config as kernel_config
 
 
 # -- host-side padding helpers (deduplicated from search.py / pipeline.py) --
@@ -648,6 +649,13 @@ class CellCache:
         self.evictions = 0
         self.compactions = 0
         self.bytes_uploaded = 0
+        # double-buffered streaming (ISSUE 8): cells uploaded ahead of
+        # their wave by prefetch(); a later ensure() hit on one counts as
+        # a prefetch hit, eviction before use as a wasted prefetch
+        self.prefetches = 0
+        self.prefetch_hits = 0
+        self.prefetch_bytes = 0
+        self._prefetched: set[int] = set()
 
     def capacity_bytes(self) -> int:
         return self.cap_rows * self.row_bytes
@@ -667,6 +675,9 @@ class CellCache:
                 "cache_evictions": self.evictions,
                 "cache_compactions": self.compactions,
                 "bytes_uploaded": self.bytes_uploaded,
+                "prefetches": self.prefetches,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_bytes": self.prefetch_bytes,
                 "hit_rate": self.hit_rate(),
                 "resident_cells": len(self._lru),
                 "capacity_bytes": self.capacity_bytes()}
@@ -695,6 +706,9 @@ class CellCache:
             if c in self._lru:
                 self._lru.move_to_end(c)
                 hits += 1
+                if c in self._prefetched:
+                    self.prefetch_hits += 1
+                    self._prefetched.discard(c)
                 continue
             misses += 1
             rows = self._rows_of(c)
@@ -705,6 +719,39 @@ class CellCache:
         self.hits += hits
         self.misses += misses
         return {"hits": hits, "misses": misses,
+                "bytes": self.bytes_uploaded - bytes_before}
+
+    def prefetch(self, cells) -> dict:
+        """Best-effort upload of a *future* wave's missing cells while the
+        current wave's traversal is still in flight (the double-buffered
+        half of the fused-wave PR): device buffers are immutable jnp
+        arrays, so the in-flight traversal keeps reading its own snapshot
+        while these uploads build the next one. Already-resident cells are
+        touched (LRU-promoted) but not re-uploaded; cells that will not
+        fit are skipped rather than raised — prefetch is advisory, the
+        wave's own ``ensure`` stays authoritative."""
+        bytes_before = self.bytes_uploaded
+        uploaded = 0
+        want = set(c for c in cells if c in self._lru)
+        for c in cells:
+            if c in self._lru:
+                self._lru.move_to_end(c)
+                continue
+            rows = self._rows_of(c)
+            want.add(c)
+            try:
+                start = self._alloc(rows, want)
+            except ValueError:
+                want.discard(c)
+                continue
+            self._upload(c, start, rows)
+            self._lru[c] = (start, rows)
+            self._lru.move_to_end(c)
+            self._prefetched.add(c)
+            uploaded += 1
+        self.prefetches += uploaded
+        self.prefetch_bytes += self.bytes_uploaded - bytes_before
+        return {"prefetched": uploaded,
                 "bytes": self.bytes_uploaded - bytes_before}
 
     # -- arena bookkeeping --------------------------------------------------
@@ -743,6 +790,7 @@ class CellCache:
                 f"cannot place {rows} rows in a {self.cap_rows}-row cache")
 
     def _release(self, c: int) -> None:
+        self._prefetched.discard(c)  # evicted before use = wasted prefetch
         start, rows = self._lru.pop(c)
         self._free.append((start, rows))
         # keep extents sorted + coalesced so first-fit stays first-fit
@@ -872,18 +920,29 @@ class CellRuntime:
 
     # -- the one invocation path --------------------------------------------
 
-    def run(self, graph: GraphView, q: np.ndarray, lo: np.ndarray,
-            hi: np.ndarray, key, *, k: int, ef: int,
-            cell_order: np.ndarray | None = None,
-            seeds: np.ndarray | None = None,
-            use_inter: bool = True, packed_visited: bool = False,
-            pool_reuse: bool = False,
-            entry_width: int | None = None,
-            entry_random: int | None = None,
-            entry_beam_l: int | None = None,
-            max_iters: int | None = None):
-        """Pad, traverse, unpad. Returns ((B, k) i32 view-local ids,
-        (B, k) f32 distances) as numpy."""
+    def run_launch(self, graph: GraphView, q: np.ndarray, lo: np.ndarray,
+                   hi: np.ndarray, key, *, k: int, ef: int,
+                   cell_order: np.ndarray | None = None,
+                   seeds: np.ndarray | None = None,
+                   use_inter: bool = True, packed_visited: bool = False,
+                   pool_reuse: bool = False,
+                   entry_width: int | None = None,
+                   entry_random: int | None = None,
+                   entry_beam_l: int | None = None,
+                   max_iters: int | None = None):
+        """Pad and launch one traversal, returning *device* arrays
+        ``(ids, d, real)`` without blocking — the async half of
+        :meth:`run`. Engines that overlap streaming with compute (the
+        hybrid wave loop) call this, then prefetch the next wave's cells
+        while the launched program runs, and only then materialize.
+
+        The kernel dispatch mode (``repro.kernels.config``) is resolved
+        *here*, per launch, to a static ``fused`` flag: the whole
+        expansion step runs as one Pallas traversal-wave program when the
+        mode says pallas, and as the unfused jnp composition otherwise.
+        Resolving at the launch boundary keeps the mode out of the jit
+        cache key logic inside the core (it is just another static
+        argument there)."""
         cfg = self.index.config
         entry_width = cfg.entry_width if entry_width is None else entry_width
         entry_random = (cfg.entry_random if entry_random is None
@@ -919,5 +978,25 @@ class CellRuntime:
             k=k, ef=ef, entry_width=entry_width, entry_random=entry_random,
             entry_beam_l=entry_beam_l, max_iters=max_iters,
             use_inter=use_inter, packed_visited=packed_visited,
-            pool_reuse=pool_reuse)
+            pool_reuse=pool_reuse, fused=kernel_config.use_pallas())
+        return ids, d, real
+
+    def run(self, graph: GraphView, q: np.ndarray, lo: np.ndarray,
+            hi: np.ndarray, key, *, k: int, ef: int,
+            cell_order: np.ndarray | None = None,
+            seeds: np.ndarray | None = None,
+            use_inter: bool = True, packed_visited: bool = False,
+            pool_reuse: bool = False,
+            entry_width: int | None = None,
+            entry_random: int | None = None,
+            entry_beam_l: int | None = None,
+            max_iters: int | None = None):
+        """Pad, traverse, unpad. Returns ((B, k) i32 view-local ids,
+        (B, k) f32 distances) as numpy."""
+        ids, d, real = self.run_launch(
+            graph, q, lo, hi, key, k=k, ef=ef, cell_order=cell_order,
+            seeds=seeds, use_inter=use_inter, packed_visited=packed_visited,
+            pool_reuse=pool_reuse, entry_width=entry_width,
+            entry_random=entry_random, entry_beam_l=entry_beam_l,
+            max_iters=max_iters)
         return np.asarray(ids[:real]), np.asarray(d[:real])

@@ -5,9 +5,22 @@ GPU -> TPU mapping (DESIGN.md §2): the paper runs one thread block per
 query with warp-parallel distance evaluation. Here a *batch* of queries is
 one jitted program; each query is a lane of fixed-shape state and every
 step is a vectorized op over the whole batch — masked lanes replace warp
-divergence. One expansion step = one gather-distance kernel call over the
-frontier's neighbor rows (the scalar-prefetch DMA pattern), one predicate
-check, and two top-k merges (navigation beam / in-range result pool).
+divergence.
+
+One expansion step has two executions, dispatched on the static ``fused``
+flag (resolved from ``kernels/config.py`` at the ``CellRuntime.run``
+boundary so mode flips never go stale in a jit cache):
+
+- ``fused=True`` (Pallas backends): the whole step — neighbor-row gather,
+  distance, range predicate, packed-visited test/set, dedup, and the dual
+  beam/result top-k merge — is ONE ``kernels/traversal_wave.py`` call.
+- ``fused=False`` (ref/CPU): the same math as separate XLA programs — one
+  gather-distance kernel call over the frontier's neighbor rows, one
+  predicate check, a vectorized visited scatter, and two top-k merges.
+
+Both paths select identical ids (the wave kernel replicates the stable
+argsort-dedup + ``lax.top_k`` tie rules exactly); distances may differ in
+the last ulp from reduction-order/fusion differences.
 
 Engine-mode matrix (storage x graph residency x seeding), all served by
 :func:`traversal_core`:
@@ -71,6 +84,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels import traversal_wave as twave
 
 # cell_base value marking an uncached cell in the hybrid slot cache
 UNCACHED = -(1 << 30)
@@ -226,16 +241,9 @@ def _score(store: VectorStore, graph: GraphView, packed: bool,
     d2 = _gather_d2(store, q, jnp.where(valid, gids, -1))
     rows_b = jnp.arange(B, dtype=jnp.int32)[:, None]
     if packed:
-        widx = safe >> 5
-        bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
-        seen = (visited[rows_b, widx] & bit) != 0
-        nb = cand_ids.shape[1]
-
-        def set_bit(j, vis):
-            w = vis[rows_b[:, 0], widx[:, j]]
-            add = jnp.where(valid[:, j], bit[:, j], jnp.uint32(0))
-            return vis.at[rows_b[:, 0], widx[:, j]].set(w | add)
-        visited = jax.lax.fori_loop(0, nb, set_bit, visited)
+        # vectorized segment-OR scatter (one scatter-add) instead of the
+        # former O(nb) fori_loop bit-set; bit-identical (kernels/ref.py)
+        seen, visited = kref.set_packed_bits(visited, cand_ids, valid)
     else:
         seen = visited[rows_b, safe]
         visited = visited.at[rows_b, safe].max(valid)
@@ -247,8 +255,14 @@ def _score(store: VectorStore, graph: GraphView, packed: bool,
     return nav_d, res_d, visited
 
 
+def _view_gids(graph: GraphView, cand_ids):
+    """View-local candidate ids -> global vector-table rows (>= 0)."""
+    safe = jnp.maximum(cand_ids, 0)
+    return safe if graph.rows is None else graph.rows[safe]
+
+
 def _expand_loop(state: TraversalState, q, store, graph, packed, lo, hi,
-                 max_iters: int):
+                 max_iters: int, fused: bool = False):
     """Best-first expansion until every lane's beam is exhausted (Alg. 4
     lines 4-13), capped at max_iters."""
     ef = state.beam_ids.shape[1]
@@ -274,20 +288,28 @@ def _expand_loop(state: TraversalState, q, store, graph, packed, lo, hi,
         # 2. mark expanded
         expanded = st.expanded.at[rows_b[:, 0], slot].max(lane_active)
 
-        # 3. gather fixed-degree neighbor row (the DMA-chase kernel)
+        # 3. frontier neighbor ids (-1 already masked for dead lanes)
         nbrs = _adj_rows(graph, u, lane_active)             # (B, deg)
 
-        nav_d, res_d, visited = _score(
-            store, graph, packed, lo, hi, q, st.visited, nbrs, lane_active)
+        if fused:
+            # 4. one fused kernel: gather+distance+predicate+visited+merge
+            new_ids, new_d, new_exp, r_ids, r_d, visited = twave.wave_expand(
+                q, store.vectors, store.vq, store.vscale, store.attrs,
+                lo, hi, nbrs, _view_gids(graph, nbrs), st.visited,
+                st.beam_ids, st.beam_d, expanded, st.res_ids, st.res_d)
+        else:
+            nav_d, res_d, visited = _score(
+                store, graph, packed, lo, hi, q, st.visited, nbrs,
+                lane_active)
 
-        # 4. merge into navigation beam (carry expanded flags) and results
-        nbrs_s, nav_s = _dedup_inf(nbrs, nav_d)
-        _, res_s = _dedup_inf(nbrs, res_d)
-        new_ids, new_d, new_exp = _topk_merge(
-            st.beam_ids, st.beam_d, nbrs_s, nav_s, ef,
-            expanded, jnp.zeros_like(nbrs_s, dtype=bool))
-        r_ids, r_d = _topk_merge(st.res_ids, st.res_d, nbrs_s, res_s,
-                                 st.res_ids.shape[1])
+            # 4. merge into navigation beam (carry expanded flags) + results
+            nbrs_s, nav_s = _dedup_inf(nbrs, nav_d)
+            _, res_s = _dedup_inf(nbrs, res_d)
+            new_ids, new_d, new_exp = _topk_merge(
+                st.beam_ids, st.beam_d, nbrs_s, nav_s, ef,
+                expanded, jnp.zeros_like(nbrs_s, dtype=bool))
+            r_ids, r_d = _topk_merge(st.res_ids, st.res_d, nbrs_s, res_s,
+                                     st.res_ids.shape[1])
         st = TraversalState(new_ids, new_d, new_exp, r_ids, r_d,
                             visited, st.key)
         return it + 1, st
@@ -297,13 +319,23 @@ def _expand_loop(state: TraversalState, q, store, graph, packed, lo, hi,
 
 
 def _seed_beam(state: TraversalState, q, store, graph, packed, lo, hi,
-               cand_ids, active, entry_width: int):
+               cand_ids, active, entry_width: int, fused: bool = False):
     """Score entry candidates, reset the beam to the best entry_width of
     them (paper: 'Cand <- the d nearest nodes in CandEntry'), merge
     in-range entries into the result pool. Inactive lanes keep state and
     stay fully expanded."""
     ef = state.beam_ids.shape[1]
+    entry_width = min(entry_width, ef)  # the beam holds at most ef entries
     B = q.shape[0]
+    if fused:
+        cand_m = jnp.where(active[:, None], cand_ids, -1)
+        beam_ids, beam_d, expanded, r_ids, r_d, visited = twave.wave_seed(
+            q, store.vectors, store.vq, store.vscale, store.attrs, lo, hi,
+            cand_m, _view_gids(graph, cand_m), state.visited,
+            state.beam_ids, state.beam_d, state.res_ids, state.res_d,
+            active, entry_width)
+        return TraversalState(beam_ids, beam_d, expanded, r_ids, r_d,
+                              visited, state.key)
     nav_d, res_d, visited = _score(
         store, graph, packed, lo, hi, q, state.visited, cand_ids, active)
     ids_s, nav_s = _dedup_inf(cand_ids, nav_d)
@@ -343,7 +375,7 @@ def _init_state(B: int, n: int, k: int, ef: int, key,
 
 def _cell_itinerary_loop(state, q, store, graph, packed, lo, hi, cell_order,
                          *, entry_width, entry_random, entry_beam_l,
-                         max_iters, use_inter, pool_reuse):
+                         max_iters, use_inter, pool_reuse, fused=False):
     """Shared Alg. 4 outer loop over an ordered cell itinerary."""
     B = q.shape[0]
     T = cell_order.shape[1]
@@ -384,9 +416,9 @@ def _cell_itinerary_loop(state, q, store, graph, packed, lo, hi, cell_order,
         cand = jnp.where(active[:, None], cand, -1)
 
         state = _seed_beam(state, q, store, graph, packed, lo, hi, cand,
-                           active & nonempty, entry_width)
+                           active & nonempty, entry_width, fused)
         state = _expand_loop(state, q, store, graph, packed, lo, hi,
-                             max_iters)
+                             max_iters, fused)
         return state
 
     return jax.lax.fori_loop(0, T, cell_body, state)
@@ -398,17 +430,22 @@ def _traversal_core_impl(store: VectorStore, graph: GraphView,
                          entry_random: int, entry_beam_l: int,
                          max_iters: int, use_inter: bool = True,
                          packed_visited: bool = False,
-                         pool_reuse: bool = False):
+                         pool_reuse: bool = False,
+                         fused: bool = False):
     """The one traversal core (see module docstring for the mode matrix).
 
     q (B, dim) | lo/hi (B, m) | cell_order (B, T) i32 ordered cell ids
     (-1 padded) or None for one global expansion | seed_ids (B, n_seed)
     view-local entry ids (-1 padded) or None for a fresh beam.
+    ``fused`` (static; resolved by the caller from kernels/config.py)
+    routes every seed/expand step through the one-call Pallas wave kernel;
+    the fused path always uses the packed visited bitset.
     Returns (res_ids (B, k) i32 view-local ids [-1 pad], res_d (B, k)).
     """
     B = q.shape[0]
     n = store.attrs.shape[0] if graph.rows is None else graph.rows.shape[0]
-    state = _init_state(B, n, k, ef, key, packed=packed_visited)
+    packed = packed_visited or fused
+    state = _init_state(B, n, k, ef, key, packed=packed)
     all_lanes = jnp.ones((B,), bool)
 
     if seed_ids is None and cell_order is None:
@@ -419,22 +456,23 @@ def _traversal_core_impl(store: VectorStore, graph: GraphView,
             key, (entry_width,), 0, n).astype(jnp.int32)
         seed_ids = jnp.broadcast_to(bits[None, :], (B, entry_width))
     if seed_ids is not None:
-        state = _seed_beam(state, q, store, graph, packed_visited, lo, hi,
-                           seed_ids, all_lanes, entry_width)
+        state = _seed_beam(state, q, store, graph, packed, lo, hi,
+                           seed_ids, all_lanes, entry_width, fused)
     if cell_order is None:
-        state = _expand_loop(state, q, store, graph, packed_visited,
-                             lo, hi, max_iters)
+        state = _expand_loop(state, q, store, graph, packed,
+                             lo, hi, max_iters, fused)
     else:
         state = _cell_itinerary_loop(
-            state, q, store, graph, packed_visited, lo, hi, cell_order,
+            state, q, store, graph, packed, lo, hi, cell_order,
             entry_width=entry_width, entry_random=entry_random,
             entry_beam_l=entry_beam_l, max_iters=max_iters,
-            use_inter=use_inter, pool_reuse=pool_reuse)
+            use_inter=use_inter, pool_reuse=pool_reuse, fused=fused)
     return state.res_ids, state.res_d
 
 
 _STATIC = ("k", "ef", "entry_width", "entry_random", "entry_beam_l",
-           "max_iters", "use_inter", "packed_visited", "pool_reuse")
+           "max_iters", "use_inter", "packed_visited", "pool_reuse",
+           "fused")
 
 traversal_core = jax.jit(_traversal_core_impl, static_argnames=_STATIC)
 

@@ -146,6 +146,13 @@ class SearchParams:
     (:class:`repro.core.selectivity.CostModel`): None uses the default
     thresholds, ``CostModel.off()`` forces every box onto the traversal
     path (the ablation arm). Knob guidance lives in ``docs/tuning.md``.
+
+    Kernel dispatch is *not* a SearchParams knob: whether each
+    beam-expansion hop runs as the one fused Pallas traversal-wave
+    kernel or the unfused jnp composition is decided per launch by
+    ``repro.kernels.config`` (``set_mode``/``mode``), and tile sizes
+    come from ``repro.launch.roofline``. See the "Kernel mode and
+    tiles" section of ``docs/tuning.md``.
     """
 
     k: int = 10

@@ -68,7 +68,14 @@ def topk_l2(q, v, k: int, bias=None):
     if not config.use_pallas():
         vals, idx = ref.fused_topk(q, v, k_eff, bias)
     else:
-        bq, bn = _tile_sizes(B, N)
+        # tile choice lives in the roofline model, not here: interpret
+        # mode (CI) gets a compile-tractable bn (the interpreted bitonic
+        # network is unrolled per lane), compiled TPU the VMEM-bounded
+        # production tile. Both guarantee bn >= next_pow2(k), so the
+        # ref fallback below can only fire on an out-of-contract call.
+        from repro.launch import roofline
+        bq, bn = roofline.fused_topk_tiles(
+            B, N, k_eff, q.shape[1], interpret=config.interpret())
         K = next_pow2(max(k_eff, 2))
         if K > bn:  # running buffer wider than a tile: fall back
             vals, idx = ref.fused_topk(q, v, k_eff, bias)

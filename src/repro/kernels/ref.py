@@ -86,3 +86,144 @@ def gather_int8_distance(q, vq, vscale, idx):
     diff = rows - q[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
     return jnp.where(idx < 0, jnp.float32(jnp.inf), d2)
+
+
+# ---------------------------------------------------------------------------
+# traversal wave (one fused expansion step)
+# ---------------------------------------------------------------------------
+#
+# The wave kernel's candidate contract: ``cand_ids`` are view-local ids with
+# -1 for invalid lanes and PAD_ID for *padding* lanes.  Padding must sort
+# *after* every real id (so the stable id-sort keeps real candidates at the
+# same positions they'd have unpadded, preserving +inf tie selection), which
+# is why it is INT32_MAX rather than another -1.
+
+PAD_ID = jnp.iinfo(jnp.int32).max
+
+
+def set_packed_bits(visited, ids, valid):
+    """Batch visited-bit test+set on the packed uint32 bitset.
+
+    visited: (B, W) u32, ids: (B, nb) i32, valid: (B, nb) bool.
+    Returns (seen, visited'): ``seen`` reads the *pre-update* set (the
+    traversal's batch read-then-set semantics), and the update ORs in the
+    bit of every valid id — as a single vectorized scatter-add instead of
+    the former O(nb) ``fori_loop``.  Bit-identical because each (word, bit)
+    pair is added at most once: duplicates are restricted to their first
+    occurrence and already-set bits are excluded, so add == OR.
+    """
+    B, W = visited.shape
+    rows_b = jnp.arange(B, dtype=jnp.int32)[:, None]
+    safe = jnp.minimum(jnp.maximum(ids, 0), W * 32 - 1)
+    widx = safe >> 5
+    bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+    seen = (visited[rows_b, widx] & bit) != 0
+    vid = jnp.where(valid, ids, -1)
+    eq = vid[:, :, None] == vid[:, None, :]                  # (B, nb, nb)
+    prior = jnp.tril(jnp.ones((ids.shape[1],) * 2, bool), -1)
+    first = ~jnp.any(eq & prior[None, :, :], axis=2)
+    add = jnp.where(valid & ~seen & first, bit, jnp.uint32(0))
+    return seen, visited.at[rows_b, widx].add(add)
+
+
+def dedup_inf(ids, d):
+    """Stable id-sort per row; duplicates (all but first) masked to +inf."""
+    order = jnp.argsort(ids, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((ids.shape[0], 1), bool), ids_s[:, 1:] == ids_s[:, :-1]],
+        axis=1)
+    return ids_s, jnp.where(dup, jnp.inf, d_s)
+
+
+def topk_merge(ids_a, d_a, ids_b, d_b, k, extra_a=None, extra_b=None):
+    """Row-wise best-k of two (already internally deduped) sets.  Ties at
+    equal distance break toward the lower concatenated position (lax.top_k
+    semantics) — the a-side always wins against an equal b-side."""
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    neg, pos = jax.lax.top_k(-d, k)
+    out_ids = jnp.take_along_axis(ids, pos, axis=1)
+    if extra_a is None:
+        return out_ids, -neg
+    extra = jnp.concatenate([extra_a, extra_b], axis=1)
+    return out_ids, -neg, jnp.take_along_axis(extra, pos, axis=1)
+
+
+def _wave_scores(q, vectors, vq, vscale, attrs, lo, hi, cand_ids, gids,
+                 visited):
+    """Shared scoring half of one wave step: gather-distance (f32 or
+    int8-dequant), packed-visited test+set, range predicate.
+
+    cand_ids: (B, nb) view-local ids (-1 invalid / PAD_ID padding, both
+    pre-masked by the caller for inactive lanes); gids: (B, nb) >= 0
+    global row ids aligned with cand_ids.  Returns (nav, res, visited').
+    """
+    valid = (cand_ids >= 0) & (cand_ids < PAD_ID)
+    midx = jnp.where(valid, gids, -1)
+    if vectors is not None:
+        d2 = gather_distance(q, vectors, midx)
+    else:
+        d2 = gather_int8_distance(q, vq, vscale, midx)
+    seen, visited = set_packed_bits(visited, cand_ids, valid)
+    nav = jnp.where(valid & ~seen, d2, jnp.inf)
+    a_rows = attrs[gids]                                     # (B, nb, m)
+    ok = jnp.all((a_rows >= lo[:, None, :]) & (a_rows <= hi[:, None, :]),
+                 axis=2)
+    res = jnp.where(ok, nav, jnp.inf)
+    return nav, res, visited
+
+
+def wave_expand(q, vectors, vq, vscale, attrs, lo, hi, cand_ids, gids,
+                visited, beam_ids, beam_d, beam_exp, res_ids, res_d):
+    """One fused expansion step, jnp oracle: score the candidate batch and
+    merge it into the (sorted-ascending) beam and result buffers.
+
+    Defines correctness for the Pallas twin in kernels/traversal_wave.py;
+    identical math to the unfused _score + dedup + dual topk_merge
+    composition in core/traversal.py.
+    """
+    nav, res, visited = _wave_scores(q, vectors, vq, vscale, attrs, lo, hi,
+                                     cand_ids, gids, visited)
+    ids_s, nav_s = dedup_inf(cand_ids, nav)
+    _, res_s = dedup_inf(cand_ids, res)
+    new_ids, new_d, new_exp = topk_merge(
+        beam_ids, beam_d, ids_s, nav_s, beam_ids.shape[1],
+        beam_exp, jnp.zeros_like(ids_s, dtype=bool))
+    r_ids, r_d = topk_merge(res_ids, res_d, ids_s, res_s, res_ids.shape[1])
+    return new_ids, new_d, new_exp, r_ids, r_d, visited
+
+
+def wave_seed(q, vectors, vq, vscale, attrs, lo, hi, cand_ids, gids,
+              visited, beam_ids, beam_d, res_ids, res_d, active,
+              entry_width: int, n_real: int):
+    """One fused seeding step, jnp oracle: score entry candidates, reset
+    active lanes' beams to the best ``entry_width`` of them (+inf ties keep
+    real ids — they still propose inter-cell hops), merge in-range entries
+    into the result pool.  ``n_real`` is the pre-padding candidate count:
+    the beam is cut to min(entry_width, n_real) so padding can never widen
+    the entry set."""
+    B, ef = beam_ids.shape
+    nav, res, visited = _wave_scores(q, vectors, vq, vscale, attrs, lo, hi,
+                                     cand_ids, gids, visited)
+    ids_s, nav_s = dedup_inf(cand_ids, nav)
+    _, res_s = dedup_inf(cand_ids, res)
+
+    w = min(entry_width, n_real)
+    neg, pos = jax.lax.top_k(-nav_s, min(w, nav_s.shape[1]))
+    ent_ids = jnp.take_along_axis(ids_s, pos, axis=1)
+    ent_d = -neg
+    ent_ids = jnp.where(ent_ids == PAD_ID, -1, ent_ids)
+    ent_d = jnp.where(ent_ids < 0, jnp.inf, ent_d)
+    pad = ef - ent_ids.shape[1]
+    if pad > 0:
+        ent_ids = jnp.pad(ent_ids, ((0, 0), (0, pad)), constant_values=-1)
+        ent_d = jnp.pad(ent_d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+
+    new_ids = jnp.where(active[:, None], ent_ids, beam_ids)
+    new_d = jnp.where(active[:, None], ent_d, beam_d)
+    new_exp = jnp.where(active[:, None], ~jnp.isfinite(ent_d),
+                        jnp.ones((B, ef), bool))
+    r_ids, r_d = topk_merge(res_ids, res_d, ids_s, res_s, res_ids.shape[1])
+    return new_ids, new_d, new_exp, r_ids, r_d, visited

@@ -77,6 +77,50 @@ def bitonic_merge(vals, idxs):
     return vals, idxs
 
 
+def _compare_exchange_lex(k1, k2, payloads, jsz: int, ksz: int):
+    """One bitonic stage ordering by the lexicographic key (k1, k2).
+
+    Requires the (k1, k2) pairs to be distinct within a row (the callers
+    use original lane positions as k2), which makes the network a *stable*
+    sort by k1 — the property the traversal's dedup step relies on.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, k1.shape, k1.ndim - 1)
+    partner = jax.lax.bitwise_xor(lane, jnp.int32(jsz))
+    take_min = ((lane & jnp.int32(ksz)) == 0) == (lane < partner)
+
+    p1 = jnp.take_along_axis(k1, partner, axis=-1)
+    p2 = jnp.take_along_axis(k2, partner, axis=-1)
+    p_less = (p1 < k1) | ((p1 == k1) & (p2 < k2))
+    want_partner = jnp.where(take_min, p_less, ~p_less)
+
+    out1 = jnp.where(want_partner, p1, k1)
+    out2 = jnp.where(want_partner, p2, k2)
+    outs = tuple(
+        jnp.where(want_partner, jnp.take_along_axis(p, partner, axis=-1), p)
+        for p in payloads)
+    return out1, out2, outs
+
+
+def bitonic_sort_lex(k1, k2, payloads=()):
+    """Ascending sort by (k1, k2) with distinct pairs; carries payloads.
+
+    k2 = original positions makes this exactly ``jnp.argsort(k1)`` with
+    stable tie order, as a static compare-exchange network usable inside
+    Pallas kernel bodies.
+    """
+    L = k1.shape[-1]
+    assert _is_pow2(L), f"bitonic_sort_lex needs pow2 lanes, got {L}"
+    ksz = 2
+    while ksz <= L:
+        jsz = ksz // 2
+        while jsz >= 1:
+            k1, k2, payloads = _compare_exchange_lex(k1, k2, payloads,
+                                                     jsz, ksz)
+            jsz //= 2
+        ksz *= 2
+    return k1, k2, payloads
+
+
 def merge_topk(run_vals, run_idxs, new_vals, new_idxs):
     """Merge sorted-ascending running top-K with sorted-ascending new
     candidates (same width K), returning the ascending best-K of the union.

@@ -1,0 +1,330 @@
+"""One-kernel traversal wave: a whole expansion step fused in Pallas.
+
+The unfused hot path in ``core/traversal.py`` round-trips through >= 3
+device programs per hop: a gather-distance kernel, the packed-visited
+scatter, and two ``lax.top_k`` merges (plus the dedup argsorts).  This
+kernel fuses the entire step — scalar-prefetched neighbor-row gather
+(f32 or int8-dequant), squared-L2 distance, range-predicate mask,
+packed-visited test+set, candidate dedup, and the dual beam/result
+top-k merge — into ONE ``pl.pallas_call``.
+
+Layout (grid = (B, nbp/g), parallel x arbitrary):
+
+- ``cand_ids``/``gids`` ride in SMEM via ``PrefetchScalarGridSpec``; the
+  g row/attr/scale BlockSpec index_maps read them to pick the DMA source
+  rows for each step — the gather never materializes (B, nb, d) in HBM.
+- Each sequential step streams g gathered rows, scores them (distance,
+  predicate, visited bitset in VMEM scratch), and parks nav/res scores
+  in per-lane scratch.  Mosaic's pipelining double-buffers the next
+  step's row DMAs against the current step's compute.
+- The last step flushes: a lexicographic (id, pos) bitonic network
+  (= stable argsort by id) dedups candidates, then an unrolled run of
+  stable (d, pos) insertions merges them into the sorted beam/result
+  buffers — bit-identical to the unfused dedup + ``lax.top_k`` path
+  (ties break toward the lower concatenated position in both).
+
+``g`` (rows per step) comes from ``launch/roofline.py:
+traversal_wave_tiles``; under interpret it collapses to 1 so the
+unrolled per-row trace stays compile-tractable on CPU CI.  Blocks keep
+their natural (1, d)/(1, m) shapes — on TPU Mosaic relayouts the
+non-128 minors; CI runs interpret where layout is moot.
+
+The jnp oracle twins live in ``kernels/ref.py`` (``wave_expand`` /
+``wave_seed``); ``core/traversal.py`` dispatches between them via the
+static ``fused`` flag resolved from ``kernels/config.py`` at the
+``CellRuntime.run`` boundary.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import config
+from repro.kernels.ref import PAD_ID
+from repro.kernels.sort_network import bitonic_sort_lex, next_pow2
+
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _insert(bufs, cvals, cd, cp):
+    """One stable (d, pos) insertion of a scalar candidate into sorted
+    row buffers.  bufs[0] = distances, bufs[1] = positions; extra payload
+    columns follow.  Capped: the buffer's worst entry falls off."""
+    bd, bp = bufs[0], bufs[1]
+    lt = (bd < cd) | ((bd == cd) & (bp < cp))
+    at = jnp.sum(lt.astype(jnp.int32))
+    lane = jax.lax.broadcasted_iota(jnp.int32, bd.shape, bd.ndim - 1)
+
+    def mix(buf, c):
+        shifted = jnp.roll(buf, 1, axis=-1)
+        return jnp.where(lane < at, buf, jnp.where(lane == at, c, shifted))
+
+    return tuple(mix(b, c) for b, c in zip(bufs, (cd, cp) + tuple(cvals)))
+
+
+def _make_kernel(*, g, nbp, W, ef, k, n_real, entry_width, seed_mode, int8,
+                 n_steps):
+    def kernel(cand_sm, gid_sm, *refs):
+        del gid_sm  # consumed by the BlockSpec index maps only
+        (q_ref, lo_ref, hi_ref, act_ref, cid_ref, vis_ref,
+         bi_ref, bd_ref, be_ref, ri_ref, rd_ref) = refs[:11]
+        pos = 11
+        row_refs = refs[pos:pos + g]
+        pos += g
+        if int8:
+            sc_refs = refs[pos:pos + g]
+            pos += g
+        at_refs = refs[pos:pos + g]
+        pos += g
+        obi, obd, obe, ori, ord_, ovis = refs[pos:pos + 6]
+        s_nav, s_res, s_vis = refs[pos + 6:pos + 9]
+
+        b = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            s_vis[...] = vis_ref[...]
+            s_nav[...] = jnp.full((1, nbp), jnp.inf, jnp.float32)
+            s_res[...] = jnp.full((1, nbp), jnp.inf, jnp.float32)
+
+        q = q_ref[...].astype(jnp.float32)                  # (1, d)
+        lo = lo_ref[...]
+        hi = hi_ref[...]
+        wlane = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        clane = jax.lax.broadcasted_iota(jnp.int32, (1, nbp), 1)
+
+        for i in range(g):
+            jj = j * g + i
+            cid = cand_sm[b, jj]
+            valid = (cid >= 0) & (cid < PAD_ID)
+            safe = jnp.maximum(cid, 0)
+            row = row_refs[i][...].astype(jnp.float32)      # (1, d)
+            if int8:
+                row = row * sc_refs[i][0, 0]
+            diff = row - q
+            d2 = jnp.sum(diff * diff)
+
+            widx = jnp.minimum(safe >> 5, W - 1)
+            bit = jnp.uint32(1) << (safe & 31).astype(jnp.uint32)
+            hitw = wlane == widx
+            vis = s_vis[...]
+            seen = jnp.any((vis & jnp.where(hitw, bit, jnp.uint32(0))) != 0)
+            s_vis[...] = vis | jnp.where(hitw & valid, bit, jnp.uint32(0))
+
+            a = at_refs[i][...]                             # (1, m)
+            ok = jnp.all((a >= lo) & (a <= hi))
+            nav_c = jnp.where(valid & ~seen, d2, jnp.inf)
+            res_c = jnp.where(ok, nav_c, jnp.inf)
+            hitc = clane == jj
+            s_nav[...] = jnp.where(hitc, nav_c, s_nav[...])
+            s_res[...] = jnp.where(hitc, res_c, s_res[...])
+
+        @pl.when(j == n_steps - 1)
+        def _flush():
+            ids = cid_ref[...]                              # (1, nbp)
+            ids_s, pos_s, (nav_s, res_s) = bitonic_sort_lex(
+                ids, clane, (s_nav[...], s_res[...]))
+            del pos_s
+            dup = (ids_s == jnp.roll(ids_s, 1, axis=-1)) & (clane > 0)
+            nav_s = jnp.where(dup, jnp.inf, nav_s)
+            res_s = jnp.where(dup, jnp.inf, res_s)
+
+            # result pool: sorted state ++ sorted candidates, stable top-k
+            klane = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+            rd, rp, ri = rd_ref[...], klane, ri_ref[...]
+            for c in range(nbp):
+                rd, rp, ri = _insert((rd, rp, ri), (ids_s[0, c],),
+                                     res_s[0, c], k + c)
+            ori[...] = ri
+            ord_[...] = rd
+
+            elane = jax.lax.broadcasted_iota(jnp.int32, (1, ef), 1)
+            if seed_mode:
+                bd = jnp.full((1, ef), jnp.inf, jnp.float32)
+                bi = jnp.full((1, ef), -1, jnp.int32)
+                bp = jnp.full((1, ef), PAD_ID, jnp.int32)   # sentinel pos
+                for c in range(nbp):
+                    bd, bp, bi = _insert((bd, bp, bi), (ids_s[0, c],),
+                                         nav_s[0, c], c)
+                w = min(entry_width, n_real)
+                cut = (elane >= w) | (bi == PAD_ID)
+                bi = jnp.where(cut, -1, bi)
+                bd = jnp.where(cut, jnp.inf, bd)
+                be = (~jnp.isfinite(bd)).astype(jnp.int32)
+                act = act_ref[0, 0] != 0
+                obi[...] = jnp.where(act, bi, bi_ref[...])
+                obd[...] = jnp.where(act, bd, bd_ref[...])
+                obe[...] = jnp.where(act, be,
+                                     jnp.ones((1, ef), jnp.int32))
+            else:
+                bd, bp, bi, be = (bd_ref[...], elane, bi_ref[...],
+                                  be_ref[...])
+                for c in range(nbp):
+                    bd, bp, bi, be = _insert(
+                        (bd, bp, bi, be),
+                        (ids_s[0, c], jnp.int32(0)),
+                        nav_s[0, c], ef + c)
+                obi[...] = bi
+                obd[...] = bd
+                obe[...] = be
+            ovis[...] = s_vis[...]
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("seed_mode", "entry_width", "n_real",
+                                   "g", "interpret"))
+def _wave_call(cand_p, gids_p, q, lo, hi, act, visited, beam_ids, beam_d,
+               beam_exp, res_ids, res_d, table, scale, attrs, *,
+               seed_mode, entry_width, n_real, g, interpret):
+    B, nbp = cand_p.shape
+    d = q.shape[1]
+    m = attrs.shape[1]
+    W = visited.shape[1]
+    ef = beam_ids.shape[1]
+    k = res_ids.shape[1]
+    int8 = scale is not None
+    n_steps = nbp // g
+
+    def fixed(b, j, cand, gid):
+        del j, cand, gid
+        return (b, 0)
+
+    def row_map(b, j, cand, gid, i=0):
+        del cand
+        return (jnp.maximum(gid[b, j * g + i], 0), 0)
+
+    in_specs = [
+        pl.BlockSpec((1, d), fixed),                        # q
+        pl.BlockSpec((1, m), fixed),                        # lo
+        pl.BlockSpec((1, m), fixed),                        # hi
+        pl.BlockSpec((1, 1), fixed),                        # act
+        pl.BlockSpec((1, nbp), fixed),                      # cand (vector)
+        pl.BlockSpec((1, W), fixed),                        # visited
+        pl.BlockSpec((1, ef), fixed),                       # beam ids
+        pl.BlockSpec((1, ef), fixed),                       # beam d
+        pl.BlockSpec((1, ef), fixed),                       # beam expanded
+        pl.BlockSpec((1, k), fixed),                        # res ids
+        pl.BlockSpec((1, k), fixed),                        # res d
+    ]
+    args = [q, lo, hi, act, cand_p, visited, beam_ids, beam_d, beam_exp,
+            res_ids, res_d]
+    for i in range(g):
+        in_specs.append(pl.BlockSpec((1, d), partial(row_map, i=i)))
+        args.append(table)
+    if int8:
+        for i in range(g):
+            in_specs.append(pl.BlockSpec((1, 1), partial(row_map, i=i)))
+            args.append(scale)
+    for i in range(g):
+        in_specs.append(pl.BlockSpec((1, m), partial(row_map, i=i)))
+        args.append(attrs)
+
+    out_specs = [
+        pl.BlockSpec((1, ef), fixed), pl.BlockSpec((1, ef), fixed),
+        pl.BlockSpec((1, ef), fixed), pl.BlockSpec((1, k), fixed),
+        pl.BlockSpec((1, k), fixed), pl.BlockSpec((1, W), fixed),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, ef), jnp.int32),
+        jax.ShapeDtypeStruct((B, ef), jnp.float32),
+        jax.ShapeDtypeStruct((B, ef), jnp.int32),
+        jax.ShapeDtypeStruct((B, k), jnp.int32),
+        jax.ShapeDtypeStruct((B, k), jnp.float32),
+        jax.ShapeDtypeStruct((B, W), jnp.uint32),
+    ]
+
+    kernel = _make_kernel(g=g, nbp=nbp, W=W, ef=ef, k=k, n_real=n_real,
+                          entry_width=entry_width, seed_mode=seed_mode,
+                          int8=int8, n_steps=n_steps)
+    kwargs = {}
+    if _CompilerParams is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_steps),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((1, nbp), jnp.float32),
+                pltpu.VMEM((1, nbp), jnp.float32),
+                pltpu.VMEM((1, W), jnp.uint32),
+            ]),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cand_p, gids_p, *args)
+
+
+def _pad_candidates(cand_ids, gids, g):
+    """Pad the candidate axis to a pow2 multiple of g.  Padding ids are
+    PAD_ID (sort *after* every real id — see kernels/ref.py) with row 0
+    as their harmless gather target."""
+    nb = cand_ids.shape[1]
+    nbp = max(next_pow2(nb), g)
+    if nbp == nb:
+        return cand_ids, gids, nb
+    pad = nbp - nb
+    cand_p = jnp.pad(cand_ids, ((0, 0), (0, pad)), constant_values=PAD_ID)
+    gids_p = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=0)
+    return cand_p, gids_p, nb
+
+
+def _tile_g(nbp, d, m, int8, interpret):
+    from repro.launch import roofline
+    return roofline.traversal_wave_tiles(nbp, d, m, int8=int8,
+                                         interpret=interpret)
+
+
+def wave_expand(q, vectors, vq, vscale, attrs, lo, hi, cand_ids, gids,
+                visited, beam_ids, beam_d, beam_exp, res_ids, res_d, *,
+                g=None):
+    """Fused expansion step (Pallas).  Same contract as ref.wave_expand."""
+    int8 = vectors is None
+    table = vectors if not int8 else vq
+    scale = None if not int8 else vscale.reshape(-1, 1)
+    interpret = config.interpret()
+    cand_p, gids_p, nb = _pad_candidates(cand_ids, gids,
+                                         g or 1)
+    if g is None:
+        g = _tile_g(cand_p.shape[1], q.shape[1], attrs.shape[1], int8,
+                    interpret)
+    act = jnp.ones((q.shape[0], 1), jnp.int32)
+    bi, bd, be, ri, rd, vis = _wave_call(
+        cand_p, gids_p, q.astype(jnp.float32), lo, hi, act, visited,
+        beam_ids, beam_d, beam_exp.astype(jnp.int32), res_ids, res_d,
+        table, scale, attrs,
+        seed_mode=False, entry_width=0, n_real=nb, g=g,
+        interpret=interpret)
+    return bi, bd, be.astype(bool), ri, rd, vis
+
+
+def wave_seed(q, vectors, vq, vscale, attrs, lo, hi, cand_ids, gids,
+              visited, beam_ids, beam_d, res_ids, res_d, active,
+              entry_width: int, *, g=None):
+    """Fused seeding step (Pallas).  Same contract as ref.wave_seed."""
+    int8 = vectors is None
+    table = vectors if not int8 else vq
+    scale = None if not int8 else vscale.reshape(-1, 1)
+    interpret = config.interpret()
+    cand_p, gids_p, nb = _pad_candidates(cand_ids, gids, g or 1)
+    if g is None:
+        g = _tile_g(cand_p.shape[1], q.shape[1], attrs.shape[1], int8,
+                    interpret)
+    act = active.astype(jnp.int32).reshape(-1, 1)
+    beam_exp = jnp.ones_like(beam_ids)                      # ignored input
+    bi, bd, be, ri, rd, vis = _wave_call(
+        cand_p, gids_p, q.astype(jnp.float32), lo, hi, act, visited,
+        beam_ids, beam_d, beam_exp, res_ids, res_d, table, scale, attrs,
+        seed_mode=True, entry_width=entry_width, n_real=nb, g=g,
+        interpret=interpret)
+    return bi, bd, be.astype(bool), ri, rd, vis

@@ -1,8 +1,16 @@
-import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
+"""Roofline analysis (deliverable g) + kernel tile selection.
 
-"""Roofline analysis (deliverable g).
+This module is imported from two very different places:
+
+- the CLI (``python -m repro.launch.roofline``) lowers whole model
+  variants and needs the full ``repro.configs`` / ``repro.models``
+  stack plus a 512-way fake device mesh;
+- the Pallas kernel layer (``repro.kernels``) only needs the hardware
+  constants and the tile choosers below.
+
+So everything heavy — jax, the model registry, the mesh env var — is
+imported/applied lazily inside the CLI entry points, and the module
+itself stays import-light.
 
 Terms per (arch x shape x mesh), on TPU v5e constants:
 
@@ -28,33 +36,93 @@ MODEL_FLOPS uses the 6·N·D convention (6·N_active·D for MoE; decode =
 remat recompute + masked-block attention waste + routing overhead.
 """
 
-import argparse
 import dataclasses
 import json
-
-import jax
-import numpy as np
-
-from repro.configs import registry
-from repro.launch import dryrun as dr
-from repro.launch.mesh import make_production_mesh
-from repro.models import lm
-from repro.models.common import count_params
+import os
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip
 LINK_BW = 50e9             # bytes/s / link (ICI)
+VMEM_BYTES = 64 * 2**20    # v5e VMEM per core (usable scratch budget)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "results", "roofline")
 
 
 # ---------------------------------------------------------------------------
+# kernel tile selection
+# ---------------------------------------------------------------------------
+#
+# The Pallas kernels used to hard-code their tile sizes (bq=128, bn=128,
+# one gathered row per grid step).  These choosers derive them from the
+# v5e constants instead, with two regimes:
+#
+# - compiled (TPU): MXU/VPU-aligned tiles sized so all live blocks plus
+#   scratch fit comfortably in VMEM (<= 1/4 of it, leaving room for the
+#   pipeline's double buffering);
+# - interpret (CPU CI): the sort networks and per-row loops are traced
+#   *unrolled*, so compile cost scales with grid x body size.  Tiles drop
+#   to the smallest shape that still exercises the kernel logic.
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def fused_topk_tiles(B: int, N: int, k: int, d: int = 128, *,
+                     interpret: bool = False) -> tuple[int, int]:
+    """(bq, bn) for ``kernels.fused_topk`` / ``ops.topk_l2``.
+
+    The kernel keeps a (bq, d) query block, a (bn, d) vector block and a
+    (bq, K) running top-k scratch resident.  Under interpret the bitonic
+    network over bn lanes is unrolled into the jaxpr, so bn collapses to
+    the smallest pow2 that still holds K.
+    """
+    K = _next_pow2(max(k, 2))
+    if interpret:
+        bq = max(8, min(_next_pow2(max(B, 1)), 8))
+        bn = max(16, K)
+        return bq, bn
+    bn = max(128, K)
+    bq = min(128, max(8, _next_pow2(max(B, 1))))
+    # VMEM: q block + v block + out/scratch top-k rows (f32 + i32).
+    while bq > 8 and (bq * d + bn * d + 2 * bq * K) * 4 > VMEM_BYTES // 4:
+        bq //= 2
+    return bq, bn
+
+
+def traversal_wave_tiles(nb: int, d: int, m: int, *, int8: bool = False,
+                         interpret: bool = False) -> int:
+    """Gather width g (rows DMA'd per grid step) for the traversal-wave
+    kernel.  nb candidate rows stream through nb/g sequential steps; a
+    wider g means fewer, larger DMAs against the HBM stream at the cost
+    of g resident row blocks.  Under interpret each row's distance +
+    visited update is traced unrolled, so g drops to 1.
+    """
+    if interpret:
+        return 1
+    row_bytes = d * (1 if int8 else 4) + m * 4 + (4 if int8 else 0)
+    g = 1
+    # Widen until a step moves >= 2KB (amortizes per-DMA issue cost on
+    # the scalar-prefetch gather path) or VMEM pressure says stop.
+    while (g < nb and g * row_bytes < 2048
+           and (2 * g * row_bytes) * 2 <= VMEM_BYTES // 8):
+        g *= 2
+    while nb % g:
+        g //= 2
+    return max(1, g)
+
+
+# ---------------------------------------------------------------------------
 # analytic MODEL_FLOPS
 # ---------------------------------------------------------------------------
 
-def active_params(cfg: lm.LMConfig) -> int:
+def active_params(cfg) -> int:
     """Params touched per token (MoE: top_k + shared experts only)."""
+    from repro.models import lm
+    from repro.models.common import count_params
     total = count_params(lm.lm_specs(cfg))
     if cfg.moe is None:
         return total
@@ -65,9 +133,10 @@ def active_params(cfg: lm.LMConfig) -> int:
     return total - inactive
 
 
-def model_flops(cfg: lm.LMConfig, shape_name: str) -> float:
+def model_flops(cfg, shape_name: str) -> float:
     """6·N_active·D for training; 2·N_active per generated token for
     decode; 2·N_active·prompt_tokens for prefill."""
+    from repro.configs import registry
     spec = registry.SHAPES[shape_name]
     n_act = active_params(cfg)
     tokens = spec["batch"] * spec["seq"]
@@ -78,7 +147,7 @@ def model_flops(cfg: lm.LMConfig, shape_name: str) -> float:
     return 2.0 * n_act * spec["batch"]        # decode: one token per lane
 
 
-def analytic_hbm_bytes(cfg: lm.LMConfig, shape_name: str, chips: int,
+def analytic_hbm_bytes(cfg, shape_name: str, chips: int,
                        remat: bool = True) -> float:
     """First-principles per-device HBM traffic per step (the credibility
     check next to the HLO-derived memory term, which on the CPU backend
@@ -89,6 +158,9 @@ def analytic_hbm_bytes(cfg: lm.LMConfig, shape_name: str, chips: int,
     serve : active params read once per token batch + KV/state cache
             read (+write of the new slot) + activations streamed once.
     """
+    from repro.configs import registry
+    from repro.models import lm
+    from repro.models.common import count_params
     spec = registry.SHAPES[shape_name]
     n_total = count_params(lm.lm_specs(cfg))
     n_act = active_params(cfg)
@@ -114,9 +186,12 @@ def analytic_hbm_bytes(cfg: lm.LMConfig, shape_name: str, chips: int,
     return p_act_dev * 2 + cache_rw + acts
 
 
-def _cache_bytes(cfg: lm.LMConfig, spec) -> float:
+def _cache_bytes(cfg, spec) -> float:
     """Global KV/state cache bytes for a serve shape."""
     import jax
+    import numpy as np
+
+    from repro.models import lm
     cache_sh = jax.eval_shape(
         lambda: lm.init_caches(cfg, spec["batch"], spec["seq"]))
     return float(sum(np.prod(x.shape) * x.dtype.itemsize
@@ -127,7 +202,7 @@ def _cache_bytes(cfg: lm.LMConfig, spec) -> float:
 # differential unrolled accounting
 # ---------------------------------------------------------------------------
 
-def _variant(cfg: lm.LMConfig, n_cycles: int, remainder: int):
+def _variant(cfg, n_cycles: int, remainder: int):
     n = len(cfg.prefix) + n_cycles * len(cfg.pattern) + remainder
     return dataclasses.replace(cfg, n_layers=n, unroll=True)
 
@@ -135,6 +210,7 @@ def _variant(cfg: lm.LMConfig, n_cycles: int, remainder: int):
 def measure_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
                  cfg=None, tcfg=None):
     """Differential roofline numbers for one cell. Returns dict."""
+    from repro.configs import registry
     cfg = cfg or registry.get_config(arch)
     n_pref, n_pat = len(cfg.prefix), len(cfg.pattern)
     n_body = cfg.n_layers - n_pref
@@ -161,11 +237,14 @@ def measure_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
 
 def _lower_variant(arch, shape_name, mesh, cfg_variant, *, remat, tcfg):
     """Lower+compile one unrolled variant; per-device flops/bytes/coll."""
+    import jax
+
+    from repro.dist import sharding as shd_mod
+    from repro.launch import dryrun as dr
     from repro.models import attention as attn_mod
     fn, args, in_sh, out_sh, _, resident = dr.build_cell(
         arch, shape_name, mesh, reduced=False, remat=remat, tcfg=tcfg,
         cfg_override=cfg_variant)
-    from repro.dist import sharding as shd_mod
     attn_mod.UNROLL_SCANS = True
     try:
         with mesh, shd_mod.activation_rules(mesh,
@@ -193,6 +272,10 @@ def _lower_variant(arch, shape_name, mesh, cfg_variant, *, remat, tcfg):
 def roofline_row(arch: str, shape_name: str, mesh_name: str = "single",
                  *, remat: bool = True, tcfg=None, tag: str = "",
                  save: bool = True) -> dict:
+    import numpy as np
+
+    from repro.configs import registry
+    from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     chips = int(np.prod(list(mesh.shape.values())))
     cfg = registry.get_config(arch)
@@ -245,6 +328,13 @@ def roofline_row(arch: str, shape_name: str, mesh_name: str = "single",
 
 
 def main():
+    import argparse
+
+    # The differential method lowers against the 512-chip production
+    # mesh; fake that device count before jax initializes.
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.configs import registry
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all",
                     choices=["all"] + list(registry.ARCHS))

@@ -53,17 +53,11 @@ def test_pairwise_l2_bf16_inputs():
 # fused_topk
 # ---------------------------------------------------------------------------
 
-# Full-width (bn=128) fused_topk under interpret mode makes XLA:CPU
-# unroll a 128-wide bitonic network per grid step — compile time explodes
-# (minutes to hours). The kernel body is still validated off-TPU by
-# test_fused_topk_small_tile_interpret below plus the sort-network
-# property tests; the production tile runs compiled on real TPU.
-_interpret_blowup = pytest.mark.skipif(
-    jax.default_backend() != "tpu",
-    reason="bn=128 pallas interpret compile is pathological on CPU XLA")
-
-
-@_interpret_blowup
+# Off-TPU these run the kernel under interpret mode with the roofline's
+# interpret tile (bq=8, bn=max(16, K)) — a full-width bn=128 interpreted
+# bitonic network used to explode XLA:CPU compile time (minutes+), which
+# is why ops.topk_l2 asks launch/roofline.fused_topk_tiles for a
+# compile-tractable tile instead of hardcoding the production one.
 @pytest.mark.parametrize("B,N,d,k", [
     (8, 256, 32, 5), (16, 300, 64, 10), (4, 128, 16, 16), (9, 511, 48, 3),
 ])
@@ -80,7 +74,6 @@ def test_fused_topk_matches_ref(B, N, d, k):
     np.testing.assert_allclose(got_d, np.asarray(rv), rtol=1e-5, atol=1e-4)
 
 
-@_interpret_blowup
 def test_fused_topk_bias_filters():
     q, v = _data(4, 256, 32)
     bias = np.zeros(256, np.float32)
@@ -213,3 +206,180 @@ def test_merge_topk_is_best_k(seed, K):
                         jnp.asarray(b), jnp.asarray(ib))
     want = np.sort(np.concatenate([a, b], axis=1), axis=1)[:, :K]
     np.testing.assert_allclose(np.asarray(mv), want)
+
+
+# ---------------------------------------------------------------------------
+# traversal wave (one fused expansion step) — kernels/traversal_wave.py
+# ---------------------------------------------------------------------------
+#
+# Parity policy: ids / expanded flags / visited words are EXACT (integer
+# outputs must be bit-identical to the jnp oracle); distances are
+# allclose(rtol=1e-6) only, because XLA contracts the fused
+# dequant-sub-square-sum chain with different FMA groupings for the
+# kernel's (1, d) rows vs the oracle's (B, nb, d) batch — last-ulp diffs
+# that cannot flip an id except on exact distance ties.
+
+from repro.kernels import traversal_wave as twave
+from repro.kernels.sort_network import bitonic_sort_lex
+
+
+def _wave_case(int8, B=4, nb=8, n=64, d=16, m=3, ef=8, k=4, entry_width=6,
+               seed=0):
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(n, d)).astype(np.float32)
+    vq = rng.integers(-127, 127, size=(n, d)).astype(np.int8)
+    vscale = (rng.random(n).astype(np.float32) * 0.1 + 0.01)
+    case = dict(
+        q=rng.normal(size=(B, d)).astype(np.float32),
+        vectors=None if int8 else table, vq=vq, vscale=vscale,
+        attrs=rng.random((n, m)).astype(np.float32),
+        lo=np.full((B, m), 0.1, np.float32),
+        hi=np.full((B, m), 0.9, np.float32))
+    cand = rng.integers(0, n, size=(B, nb)).astype(np.int32)
+    cand[:, 1] = cand[:, 0]              # duplicate neighbor
+    cand[:, 3] = -1                      # dead lane
+    cand[0, :] = cand[0, 0]              # whole row duplicated
+    active = np.array([True, True, False, True])[:B]
+    case["cand"] = np.where(active[:, None], cand, -1)
+    case["gids"] = np.maximum(cand, 0)
+    case["visited"] = rng.integers(
+        0, 2**32, size=(B, (n + 31) // 32), dtype=np.uint32)
+    beam_d = np.sort(rng.random((B, ef)).astype(np.float32) * 4, axis=1)
+    beam_d[:, ef - 2:] = np.inf          # open beam slots
+    beam_ids = rng.integers(0, n, size=(B, ef)).astype(np.int32)
+    beam_ids[beam_d == np.inf] = -1
+    case.update(beam_ids=beam_ids, beam_d=beam_d,
+                beam_exp=rng.integers(0, 2, size=(B, ef)).astype(bool))
+    res_d = np.sort(rng.random((B, k)).astype(np.float32) * 4, axis=1)
+    res_d[:, k - 1:] = np.inf
+    res_ids = rng.integers(0, n, size=(B, k)).astype(np.int32)
+    res_ids[res_d == np.inf] = -1
+    case.update(res_ids=res_ids, res_d=res_d, active=active,
+                entry_width=entry_width)
+    return {kk: (vv if kk == "entry_width" or vv is None else
+                 jnp.asarray(vv)) for kk, vv in case.items()}
+
+
+_WAVE_OUTS = ["beam_ids", "beam_d", "beam_exp", "res_ids", "res_d",
+              "visited"]
+
+
+def _assert_wave_parity(ref_out, ker_out):
+    for nm, r, g in zip(_WAVE_OUTS, ref_out, ker_out):
+        r, g = np.asarray(r), np.asarray(g)
+        if nm in ("beam_d", "res_d"):
+            np.testing.assert_allclose(r, g, rtol=1e-6, atol=0, err_msg=nm)
+        else:
+            np.testing.assert_array_equal(r, g, err_msg=nm)
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("g", [1, 2])
+def test_wave_expand_matches_ref(int8, g):
+    a = _wave_case(int8)
+    args = (a["q"], a["vectors"], a["vq"], a["vscale"], a["attrs"],
+            a["lo"], a["hi"], a["cand"], a["gids"], a["visited"],
+            a["beam_ids"], a["beam_d"], a["beam_exp"],
+            a["res_ids"], a["res_d"])
+    want = ref.wave_expand(*args)
+    with kcfg.mode("pallas"):
+        got = twave.wave_expand(*args, g=g)
+    _assert_wave_parity(want, got)
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("g", [1, 2])
+def test_wave_seed_matches_ref(int8, g):
+    a = _wave_case(int8)
+    args = (a["q"], a["vectors"], a["vq"], a["vscale"], a["attrs"],
+            a["lo"], a["hi"], a["cand"], a["gids"], a["visited"],
+            a["beam_ids"], a["beam_d"], a["res_ids"], a["res_d"],
+            a["active"], a["entry_width"])
+    want = ref.wave_seed(*args, a["cand"].shape[1])
+    with kcfg.mode("pallas"):
+        got = twave.wave_seed(*args, g=g)
+    _assert_wave_parity(want, got)
+
+
+def test_wave_candidate_padding_is_inert():
+    """PAD_ID-padded candidate lanes (the kernel's pow2 padding) must not
+    change any output vs the unpadded oracle call."""
+    a = _wave_case(False, nb=8)
+    cand_p = jnp.pad(a["cand"], ((0, 0), (0, 8)),
+                     constant_values=ref.PAD_ID)
+    gids_p = jnp.pad(a["gids"], ((0, 0), (0, 8)))
+    base = ref.wave_expand(
+        a["q"], a["vectors"], a["vq"], a["vscale"], a["attrs"], a["lo"],
+        a["hi"], a["cand"], a["gids"], a["visited"], a["beam_ids"],
+        a["beam_d"], a["beam_exp"], a["res_ids"], a["res_d"])
+    padded = ref.wave_expand(
+        a["q"], a["vectors"], a["vq"], a["vscale"], a["attrs"], a["lo"],
+        a["hi"], cand_p, gids_p, a["visited"], a["beam_ids"],
+        a["beam_d"], a["beam_exp"], a["res_ids"], a["res_d"])
+    _assert_wave_parity(base, padded)
+
+
+# ---------------------------------------------------------------------------
+# packed-visited scatter — kernels/ref.set_packed_bits
+# ---------------------------------------------------------------------------
+
+def _set_packed_bits_loop(visited, ids, valid):
+    """The former O(nb) fori_loop bit-set, as a numpy oracle: sequential
+    read-then-set per candidate lane against the *batch-start* snapshot
+    for ``seen`` and cumulative OR for the update."""
+    visited = visited.copy()
+    before = visited.copy()
+    B, nb = ids.shape
+    seen = np.zeros((B, nb), bool)
+    for b in range(B):
+        for j in range(nb):
+            if not valid[b, j]:
+                i = min(max(int(ids[b, j]), 0), visited.shape[1] * 32 - 1)
+                seen[b, j] = (before[b, i >> 5] >> (i & 31)) & 1
+                continue
+            i = int(ids[b, j])
+            seen[b, j] = (before[b, i >> 5] >> (i & 31)) & 1
+            visited[b, i >> 5] |= np.uint32(1) << np.uint32(i & 31)
+    return seen, visited
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_set_packed_bits_matches_loop(seed):
+    rng = np.random.default_rng(seed)
+    B, nb, n = 3, 12, 96
+    ids = rng.integers(-1, n, size=(B, nb)).astype(np.int32)
+    ids[:, 1] = ids[:, 0]                       # force duplicates
+    valid = (ids >= 0) & (rng.random((B, nb)) > 0.2)
+    visited = rng.integers(0, 2**32, size=(B, (n + 31) // 32),
+                           dtype=np.uint32)
+    want_seen, want_vis = _set_packed_bits_loop(visited, ids, valid)
+    seen, vis = ref.set_packed_bits(
+        jnp.asarray(visited), jnp.asarray(ids), jnp.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(seen)[valid],
+                                  want_seen[valid])
+    np.testing.assert_array_equal(np.asarray(vis), want_vis)
+
+
+# ---------------------------------------------------------------------------
+# lexicographic sort network — sort_network.bitonic_sort_lex
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+@settings(max_examples=25, deadline=None)
+def test_bitonic_sort_lex_is_stable_argsort(seed, width):
+    """With k2 = original lane positions, the lex network reproduces a
+    *stable* ascending sort by k1 — the dedup-by-id property the wave
+    kernel's flush relies on."""
+    rng = np.random.default_rng(seed)
+    k1 = rng.integers(0, width // 2 + 1, size=(3, width)).astype(np.int32)
+    pay = rng.normal(size=(3, width)).astype(np.float32)
+    lane = np.broadcast_to(np.arange(width, dtype=np.int32), (3, width))
+    s1, s2, (sp,) = bitonic_sort_lex(
+        jnp.asarray(k1), jnp.asarray(lane), (jnp.asarray(pay),))
+    order = np.argsort(k1, axis=1, kind="stable")
+    np.testing.assert_array_equal(np.asarray(s1),
+                                  np.take_along_axis(k1, order, 1))
+    np.testing.assert_array_equal(np.asarray(s2), order.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(sp),
+                                  np.take_along_axis(pay, order, 1))

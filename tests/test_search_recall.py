@@ -185,3 +185,40 @@ def test_wide_open_range_uses_global_path(searcher, small_data,
     ids, _ = searcher.search(q, lo, hi, SearchParams(k=10, ef=64))
     tids, _ = ground_truth(v, a, q, lo, hi, 10)
     assert recall_at_k(ids, tids) >= 0.9
+
+
+# -- fused traversal wave: engine-level kernel/oracle parity ----------------
+
+@pytest.fixture(scope="module")
+def wave_collection():
+    """Small enough that the Pallas wave kernel is tractable under
+    interpret mode (CPU CI), with the dense route suppressed so every
+    query actually traverses."""
+    from repro.data import make_dataset
+    v, a = make_dataset("deep", 600, seed=3, m=2)
+    cfg = GMGConfig(seg_per_attr=(2, 2), intra_degree=8, n_clusters=8,
+                    build_ef=32, quantize=True, dense_threshold=64)
+    col = Collection.build(v, a, schema=AttrSchema(["x", "y"]),
+                           config=cfg, seed=0)
+    from repro.data import make_queries
+    wl = make_queries(v, a, 4, 2, seed=5)
+    return col, wl
+
+
+@pytest.mark.parametrize("mode", ["incore", "hybrid", "ooc"])
+def test_fused_wave_matches_unfused_ids(wave_collection, mode):
+    """The fused one-kernel expansion step (kernel mode "pallas") must
+    return the same ids as the unfused jnp composition (mode "ref") on
+    every engine — the traversal-wave kernel's end-to-end contract.
+    Distances may differ in the last ulp (different FMA contraction of
+    the distance chain), which cannot reorder ids off exact ties."""
+    from repro.kernels import config as kcfg
+    col, wl = wave_collection
+    c = Collection(index=col.index, schema=col.schema, mode=mode)
+    out = {}
+    for km in ("ref", "pallas"):
+        with kcfg.mode(km):
+            res = c.search(wl.q, filters=(wl.lo, wl.hi),
+                           params=SearchParams(k=4, ef=8))
+        out[km] = np.asarray(res.ids)
+    np.testing.assert_array_equal(out["ref"], out["pallas"])
