@@ -77,26 +77,27 @@ def run(scale: str = "smoke"):
         qps, _ = common.timed_qps(
             lambda: col.search(wl.q, filters=(wl.lo, wl.hi), params=p),
             nq, warmup=0, iters=3)
-        stats = dict(col.last_stats)
+        st = res.stats                 # typed EngineStats, not a key probe
         row = dict(
             bench="memory_budget", dataset=ds, budget=label,
             budget_mb=round((col.device_budget_bytes or 0) / 1e6, 2),
             mode=mode_used,
             recall=round(res.recall(tids), 4), qps=round(qps, 1),
-            transfer_mb=round(stats.get("transfer_bytes", 0) / 1e6, 3))
+            transfer_mb=round(st.transfer_bytes / 1e6, 3))
         if mode_used != "incore":      # engine stats the perf gate tracks
-            row["transfer_bytes"] = int(stats.get("transfer_bytes", 0))
-            row["total_active"] = int(stats.get("total_active", 0))
-            if "hit_rate" in stats:
-                row["hit_rate"] = round(float(stats["hit_rate"]), 4)
+            row["transfer_bytes"] = int(st.transfer_bytes)
+            row["total_active"] = int(st.total_active)
+            if st.hit_rate is not None:
+                row["hit_rate"] = round(float(st.hit_rate), 4)
             # double-buffered streaming counters (hybrid only): uploads
             # issued ahead of their wave and the fraction that got used
-            for kk in ("prefetches", "prefetch_hits"):
-                if kk in stats:
-                    row[kk] = int(stats[kk])
-            if "prefetch_hit_rate" in stats:
+            if st.prefetches is not None:
+                row["prefetches"] = int(st.prefetches)
+            if st.prefetch_hits is not None:
+                row["prefetch_hits"] = int(st.prefetch_hits)
+            if st.prefetch_hit_rate is not None:
                 row["prefetch_hit_rate"] = round(
-                    float(stats["prefetch_hit_rate"]), 4)
+                    float(st.prefetch_hit_rate), 4)
         rows.append(row)
         return row
 

@@ -17,7 +17,9 @@ smoke`` (results/bench/*.json) and tracks two metric families:
       better counters fail on growth beyond a relative slack,
       ``hit_rate`` fails on an absolute drop. A cache-layout or
       scheduling change that silently re-inflates transfer can no
-      longer pass CI.
+      longer pass CI. ``bench_sharding``'s mesh-tier counters
+      (``active_balance`` work-partition skew, ``replica_hits``
+      hot-replica routing) ride the same deterministic rules.
   serving — ``bench_serving``'s frontend rows: recall, batching speedup
       over the serial loop, p99 latency and shed rate. These carry
       wall-clock, so their limits are deliberately loose (order-of-
@@ -74,6 +76,12 @@ PERF_METRICS = {
     # batching throughput advantage over the serial loop; the bench
     # itself asserts >= 3x, the gate holds the measured ratio loosely.
     "speedup": ("higher", "rel", 0.50, 0.0),
+    # mesh tier (bench_sharding): deterministic host-side placement/
+    # routing counters. The bench hard-asserts balance <= 1.5; the gate
+    # additionally pins drift so a placement change that quietly skews
+    # work toward one shard (or stops exercising replicas) fails CI.
+    "active_balance": ("lower", "abs", 0.15, 0.0),
+    "replica_hits": ("higher", "rel", 0.50, 0.0),
 }
 
 
@@ -141,6 +149,16 @@ def tracked_metrics(results_dir: str) -> dict:
         base = f"kernels:traversal_wave:{r['variant']}"
         for suffix in ("per_hop_programs", "hop_gather_bytes"):
             if suffix in r and r[suffix] is not None:
+                out[f"{base}:{suffix}"] = float(r[suffix])
+    for r in _load_rows(results_dir, "bench_sharding"):
+        # mesh tier: the bench itself asserts exact id parity and the
+        # 1.5x balance cap; here we track recall plus the deterministic
+        # placement/routing counters per shard count so drift is visible
+        base = f"sharding:{r['dataset']}:shards={r['n_shards']}"
+        if float(r.get("recall", 0)) > 0:
+            out[base] = float(r["recall"])
+        for suffix in ("active_balance", "replica_hits"):
+            if suffix in r:
                 out[f"{base}:{suffix}"] = float(r[suffix])
     for r in _load_rows(results_dir, "bench_serving"):
         # frontend rows only: the serial row is the calibration baseline

@@ -35,6 +35,7 @@ BENCHES = [
     "bench_updates",        # streaming inserts/deletes/compaction
     "bench_kernels",        # kernel microbench
     "bench_serving",        # continuous-batching frontend vs serial loop
+    "bench_sharding",       # mesh tier: placement balance + replica routing
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")

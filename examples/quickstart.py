@@ -117,7 +117,25 @@ def main():
           f"p99 latency {m['p99_latency'] * 1e3:.1f}ms "
           f"(occupancy {m['mean_batch_occupancy']:.2f})")
 
-    print("10. save -> load -> search round-trip (mode rides along)")
+    print("10. mesh tier: cells sharded across devices, bit-identical ids")
+    from repro.api import ShardSpec
+    from repro.core.types import SearchParams
+    # the partition-independent profile (no inter-cell edges / global
+    # fallback — those are inherently cross-shard); the sharded incore
+    # tier coerces it, the reference must opt in for the comparison
+    pp = SearchParams(k=10, ef=64, use_inter_edges=False,
+                      adaptive_global=False)
+    ref = col.search(wl.q, filters=(wl.lo, wl.hi), params=pp)
+    shc = Collection(index=col.index, schema=schema,
+                     shards=ShardSpec(n_shards=2, replicate_hot=1))
+    res_sh = shc.search(wl.q, filters=(wl.lo, wl.hi), params=pp)
+    assert np.array_equal(ref.ids, res_sh.ids)          # bit parity
+    st = res_sh.stats
+    print(f"   {st.n_shards} shards, per-shard work "
+          f"{[s.total_active for s in st.shards]} "
+          f"(replica hits {st.replica_hits}); ids identical to 1 device")
+
+    print("11. save -> load -> search round-trip (mode rides along)")
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "collection.npz")
         col.save(path)

@@ -24,11 +24,18 @@ three residency tiers — ``mode="auto"`` (default) picks from the declared
     incore  | fp32 resident | fully resident     | fresh beam
     hybrid  | int8 +rerank  | LRU cell cache     | carried pool
     ooc     | int8 +rerank  | streamed batches   | carried pool
+
+and, orthogonally, on one device or a JAX mesh: ``shards=`` (an int or
+``ShardSpec``) places cells across ``jax.devices()`` and runs any of the
+modes per-shard, folding per-shard top-k through the same deterministic
+merge. Every result carries a typed ``EngineStats`` snapshot in
+``res.stats`` with stable fields across all four tiers.
 """
 
 from repro.api.schema import AttrSchema  # noqa: F401
 from repro.api.filters import (  # noqa: F401
     F, FilterExpr, compile_dnf, compile_filters)
 from repro.api.planner import QueryPlan, plan_queries  # noqa: F401
-from repro.api.result import QueryResult  # noqa: F401
+from repro.api.result import EngineStats, QueryResult, ShardStats  # noqa: F401
 from repro.api.collection import Collection  # noqa: F401
+from repro.core.shard import ShardSpec  # noqa: F401

@@ -28,6 +28,14 @@ execution engine per batch, so callers never touch ``build_gmg``,
                   hybrid  | int8 +rerank  | LRU cell cache | carried pool
                   ooc     | int8 +rerank  | streamed batch | carried pool
 
+                ``shards=`` (an int or :class:`ShardSpec`) adds the
+                orthogonal mesh tier: cells are placed across
+                ``jax.devices()`` (balanced by resident bytes, hottest
+                cells optionally replicated) and every mode above —
+                including "auto" — runs per-shard, folding per-shard
+                top-k through the same deterministic segment merge
+                (repro.core.shard).
+
                 Two knobs tune the streamed tiers: ``cache_policy``
                 ("size_aware" byte-granular arena + cache-aware wave
                 scheduling, or the legacy "fixed" slots) and ``rerank``
@@ -70,11 +78,17 @@ from repro.core import mutable as mut_mod
 # the engines own the valid knob-value sets; imported for validation
 from repro.core.runtime import CACHE_POLICIES as _CACHE_POLICIES
 from repro.core.runtime import RERANKS as _RERANKS
+from repro.core.shard import ShardSpec
 from repro.core.types import GMGConfig, GMGIndex, SearchParams
 
-# v3: + append buffers, tombstones, mutation epoch (ISSUE 5); v2 files
-# (and older) still load, with a fresh mutation state
-_FORMAT_VERSION = 3
+# v4: + shard spec (mesh tier, ISSUE 9); v3: + append buffers,
+# tombstones, mutation epoch (ISSUE 5); older files still load (v3 with
+# no sharding, v2 with a fresh mutation state)
+_FORMAT_VERSION = 4
+
+# sentinel: Collection.load(shards=...) must distinguish "not given"
+# (restore the saved spec) from an explicit None (disable sharding)
+_UNSET = object()
 
 # GMGIndex array fields persisted 1:1 (seg_bounds, being a list, is
 # handled separately; None-able fields are skipped when absent).
@@ -83,13 +97,19 @@ _INDEX_ARRAYS = ("vectors", "attrs", "perm", "cell_of", "cell_start",
                  "centroids", "hist", "attr_quantiles", "vq", "vscale")
 
 _MODES = ("auto", "incore", "hybrid", "ooc")
-# historical engine names accepted by Collection.search(engine=...)
+# historical engine names accepted by Collection.search(engine=...);
+# deprecated since the mesh-tier API redesign — use the canonical names
 _MODE_ALIASES = {"in_core": "incore", "out_of_core": "ooc"}
 
 
-
 def _canon_mode(mode: str) -> str:
-    mode = _MODE_ALIASES.get(mode, mode)
+    if mode in _MODE_ALIASES:
+        import warnings
+        canon = _MODE_ALIASES[mode]
+        warnings.warn(
+            f"engine mode {mode!r} is deprecated; use {canon!r}",
+            DeprecationWarning, stacklevel=3)
+        mode = canon
     if mode not in _MODES:
         raise ValueError(f"unknown engine mode {mode!r}; "
                          f"expected one of {_MODES}")
@@ -115,6 +135,10 @@ class Collection:
     # cell-maintenance bound: a cell holding more pending rows than this
     # flushes itself at the end of the insert() that overflowed it
     buffer_rows_per_cell: int = 256
+    # mesh tier: None = single device; an int or ShardSpec shards cells
+    # across jax.devices() and composes with every mode (incl. "auto") —
+    # the one-seam convention, no parallel entry points
+    shards: Union[None, int, ShardSpec] = None
 
     def __post_init__(self):
         if len(self.schema) != self.index.attrs.shape[1]:
@@ -130,6 +154,12 @@ class Collection:
                              f"expected one of {_RERANKS}")
         if int(self.buffer_rows_per_cell) < 1:
             raise ValueError("buffer_rows_per_cell must be >= 1")
+        self.shards = ShardSpec.canon(self.shards)
+        if self.shards is not None \
+                and self.shards.n_shards > self.index.n_cells:
+            raise ValueError(
+                f"shards.n_shards={self.shards.n_shards} exceeds the "
+                f"index's {self.index.n_cells} cells")
         self._in_core = None        # lazily-built Searcher
         self._hybrid = None         # lazily-built HybridEngine
         self._hybrid_key = None     # (budget, policy, rerank) it was built for
@@ -141,6 +171,8 @@ class Collection:
         self._masked_epoch = -1     # mutation epoch the replica reflects
         self._sel_est = None        # per-cell selectivity estimator ...
         self._sel_est_for = None    # ... and the engine index it profiles
+        self._sharded = None        # lazily-built ShardedEngine
+        self._sharded_key = None    # (mode, spec, budget, policy, rerank)
         self.last_stats: dict = {}
 
     # -- lifecycle: build ---------------------------------------------------
@@ -152,12 +184,15 @@ class Collection:
               config: Optional[GMGConfig] = None, seed: int = 0,
               device_budget_bytes: Optional[int] = None,
               mode: str = "auto",
+              shards: Union[None, int, ShardSpec] = None,
               verbose: bool = False) -> "Collection":
         """Build a collection from raw vectors + attributes.
 
         ``attrs`` is either an (n, m) array (column order = schema order)
         or a mapping name -> (n,) column; with a mapping the schema is
-        optional and defaults to the mapping's key order.
+        optional and defaults to the mapping's key order. ``shards``
+        (an int or a :class:`repro.core.shard.ShardSpec`) partitions the
+        cells across the process's JAX devices.
         """
         vectors = np.asarray(vectors, np.float32)
         if isinstance(attrs, Mapping):
@@ -172,7 +207,8 @@ class Collection:
         index = gmg_mod.build_gmg(vectors, attr_arr, config, seed=seed,
                                   verbose=verbose)
         return cls(index=index, schema=schema,
-                   device_budget_bytes=device_budget_bytes, mode=mode)
+                   device_budget_bytes=device_budget_bytes, mode=mode,
+                   shards=shards)
 
     # -- properties ---------------------------------------------------------
 
@@ -222,7 +258,10 @@ class Collection:
                     "config.quantize=True")
             return mode
         budget = self.device_budget_bytes
-        if budget is None or self.in_core_bytes() <= budget:
+        # the budget is per-device: a mesh of n shards holds ~1/n of the
+        # in-core footprint each (replicated hot cells add a little)
+        scale = 1 if self.shards is None else self.shards.n_shards
+        if budget is None or self.in_core_bytes() // scale <= budget:
             return "incore"
         if self.index.vq is None:
             raise ValueError(
@@ -324,7 +363,23 @@ class Collection:
             self._out_of_core_key = key
         return self._out_of_core
 
+    def _sharded_engine(self, which: str):
+        # the mesh tier wraps whichever mode dispatch resolved: rebuilt
+        # when the mode, spec, budget, cache policy or rerank changes
+        key = (which, self.shards, self.device_budget_bytes,
+               self.cache_policy, self.rerank)
+        if self._sharded is None or self._sharded_key != key:
+            from repro.core.shard import ShardedEngine
+            self._sharded = ShardedEngine(
+                self._engine_index(), self.shards, mode=which,
+                device_budget_bytes=self.device_budget_bytes,
+                cache_policy=self.cache_policy, rerank=self.rerank)
+            self._sharded_key = key
+        return self._sharded
+
     def _engine_for(self, which: str):
+        if self.shards is not None:
+            return self._sharded_engine(which)
         if which == "incore":
             return self._searcher()
         if which == "hybrid":
@@ -366,6 +421,19 @@ class Collection:
                 info["cache_bytes"] = n_slots * cache_slot_bytes(self.index)
         if which == "ooc":
             info["cells_per_batch"] = self._streamer().cells_per_batch()
+        if self.shards is not None:
+            # placement is a pure function of (index, spec) — introspect
+            # it without building the per-shard engines
+            import jax
+            from repro.core.shard import plan_placement
+            pl = plan_placement(self._engine_index(), self.shards)
+            info["sharding"] = {
+                "n_shards": self.shards.n_shards,
+                "balance_by": self.shards.balance_by,
+                "replicated_cells": int(pl.replicated.sum()),
+                "owned_weight_balance": pl.balance(),
+                "devices": min(self.shards.n_shards, len(jax.devices())),
+            }
         mut = self._mut
         info["mutation_epoch"] = 0 if mut is None else mut.epoch
         info["pending_rows"] = 0 if mut is None else mut.pending_rows
@@ -401,13 +469,16 @@ class Collection:
         self._masked_epoch = -1
         self._sel_est = None
         self._sel_est_for = None
+        self._sharded = None
+        self._sharded_key = None
 
     def _refresh_engine_attrs(self) -> None:
         """Delete path: push the tombstone-masked attr table into every
         already-built engine in place — caches stay warm, nothing else
-        re-uploads."""
+        re-uploads (the sharded engine slices the table per shard)."""
         replica = self._engine_index()
-        for eng in (self._in_core, self._hybrid, self._out_of_core):
+        for eng in (self._in_core, self._hybrid, self._out_of_core,
+                    self._sharded):
             if eng is not None:
                 eng.refresh_index(replica)
 
@@ -742,6 +813,10 @@ class Collection:
             "rerank": self.rerank,
             "buffer_rows_per_cell": int(self.buffer_rows_per_cell),
         }
+        if self.shards is not None:
+            # v4: the shard spec rides along (hot_cells tuple -> list
+            # for json; restored to a tuple on load)
+            meta["shards"] = dataclasses.asdict(self.shards)
         mut = self._mut
         if mut is not None:
             meta["next_id"] = int(mut.next_id)
@@ -762,16 +837,19 @@ class Collection:
              device_budget_bytes: Optional[int] = None,
              mode: Optional[str] = None,
              cache_policy: Optional[str] = None,
-             rerank: Optional[str] = None) -> "Collection":
+             rerank: Optional[str] = None,
+             shards=_UNSET) -> "Collection":
         """Restore a collection saved by :meth:`save`.
 
         The saved engine mode, device budget, cache policy and rerank
         path are restored so the loaded collection rebuilds the same
         engine; pass ``device_budget_bytes`` / ``mode`` /
-        ``cache_policy`` / ``rerank`` to override (files written before
-        these knobs existed load with today's defaults). v3 files also
-        restore the mutation state — pending append buffers, tombstones
-        and the mutation epoch; v2 files load with a fresh one.
+        ``cache_policy`` / ``rerank`` / ``shards`` to override (files
+        written before these knobs existed load with today's defaults;
+        ``shards=None`` explicitly disables a saved shard spec). v4
+        files round-trip the shard spec; v3 files also restore the
+        mutation state — pending append buffers, tombstones and the
+        mutation epoch; v2 files load with a fresh one.
         """
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
@@ -802,11 +880,20 @@ class Collection:
             cache_policy = meta.get("cache_policy", cls.cache_policy)
         if rerank is None:
             rerank = meta.get("rerank", cls.rerank)
+        if shards is _UNSET:
+            saved = meta.get("shards")
+            shards = None if saved is None else ShardSpec(
+                n_shards=saved["n_shards"],
+                replicate_hot=saved["replicate_hot"],
+                balance_by=saved["balance_by"],
+                hot_cells=(None if saved["hot_cells"] is None
+                           else tuple(saved["hot_cells"])))
         col = cls(index=index, schema=AttrSchema(meta["schema"]),
                   device_budget_bytes=device_budget_bytes, mode=mode,
                   cache_policy=cache_policy, rerank=rerank,
                   buffer_rows_per_cell=meta.get("buffer_rows_per_cell",
-                                                cls.buffer_rows_per_cell))
+                                                cls.buffer_rows_per_cell),
+                  shards=shards)
         if "next_id" in meta or buf or tomb is not None:
             mut = col._mutation()
             mut.next_id = max(mut.next_id, int(meta.get("next_id", 0)))

@@ -87,6 +87,44 @@ def annotate_plan(plan: QueryPlan, index, estimator=None) -> QueryPlan:
     return dataclasses.replace(plan, est_rows=est_rows)
 
 
+def shard_routing(plan: QueryPlan, index, spec) -> dict:
+    """Introspect how a plan's boxes would fan out across a mesh.
+
+    Runs the same placement + per-pass cell assignment the sharded
+    engine uses (``repro.core.shard``) over the plan's box incidence —
+    no search is executed. Returns per-shard box counts and served
+    (box, cell) incidences plus the replica-rebalance tally, so callers
+    can inspect work-partition balance before committing a workload.
+    """
+    from repro.core import select as select_mod
+    from repro.core import shard as shard_mod
+    spec = shard_mod.ShardSpec.canon(spec)
+    if spec is None:
+        raise ValueError("shard_routing needs a ShardSpec (or int)")
+    placement = shard_mod.plan_placement(index, spec)
+    inc = select_mod.incidence_numpy(plan.lo, plan.hi,
+                                     index.cell_lo, index.cell_hi)
+    assign, replica_hits = shard_mod.assign_cells(inc, placement)
+    per_shard = []
+    for s in range(spec.n_shards):
+        cols = np.nonzero(assign == s)[0]
+        sub = inc[:, cols]
+        per_shard.append({
+            "shard": s,
+            "cells": int((sub.any(axis=0)).sum()),
+            "boxes": int((sub.any(axis=1)).sum()),
+            "total_active": int(sub.sum()),
+        })
+    active = [st["total_active"] for st in per_shard]
+    mean = float(np.mean(active)) if active else 0.0
+    return {"n_shards": spec.n_shards, "n_boxes": plan.n_boxes,
+            "replica_hits": int(replica_hits),
+            "replicated_cells": int(placement.replicated.sum()),
+            "balance": (float(max(active)) / max(mean, 1e-12)
+                        if active else 0.0),
+            "shards": per_shard}
+
+
 def canonicalize_boxes(lo: np.ndarray, hi: np.ndarray):
     """Canonicalize one query's box union; returns (n_canon, m) arrays.
 

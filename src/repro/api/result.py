@@ -1,10 +1,144 @@
-"""Search result container returned by ``Collection.search``."""
+"""Search result container returned by ``Collection.search``, plus the
+typed :class:`EngineStats` schema every engine mode reports through."""
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStats:
+    """Per-shard counters for one sharded pass (mesh tier)."""
+
+    shard: int = 0
+    device: str = ""
+    n_cells: int = 0           # cells resident on the shard
+    n_rows: int = 0            # rows resident on the shard
+    active_rows: int = 0       # query rows the shard actually served
+    total_active: int = 0      # selected (row, cell) incidences served
+    replica_hits: int = 0      # incidences served away from the home shard
+    transfer_bytes: int = 0
+    wall_seconds: float = 0.0
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_raw(cls, raw: dict) -> "ShardStats":
+        known = {f.name for f in dataclasses.fields(cls)} - {"extras"}
+        kw = {k: v for k, v in raw.items() if k in known}
+        extras = {k: v for k, v in raw.items() if k not in known}
+        return cls(extras=extras, **kw)
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out.update(out.pop("extras"))
+        return out
+
+
+# Fields with a typed default are *stable across every engine mode*
+# (incore / hybrid / ooc / sharded): benches and the recall gate read
+# them without probing which mode served the batch. Optional fields are
+# populated only by the modes they describe and drop out of to_dict().
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Typed per-pass engine counters (replaces the ad-hoc stats dict).
+
+    Mapping-style access (``stats["n_dense"]``, ``"cache" in stats``,
+    ``stats.get(...)``) is kept for the transition so existing callers
+    and notebooks keep working; new code should read the fields.
+    """
+
+    engine: str = "incore"     # "incore" | "hybrid" | "ooc" | "mixed"
+    n_rows: int = 0            # query rows in the pass (boxes, not queries)
+    # route split (cost-based planner; stable across modes)
+    n_dense: int = 0
+    n_mid: int = 0
+    n_broad: int = 0
+    # incore path split
+    n_itinerary: int = 0
+    n_global: int = 0
+    # streamed-mode work counters
+    n_waves: int = 0           # hybrid
+    n_batches: int = 0         # ooc
+    total_active: int = 0      # Eq. 3 objective actually executed
+    transfer_bytes: int = 0
+    buffered_rows: int = 0     # mutation buffer rows folded host-side
+    wall_seconds: float = 0.0
+    # cache block (hybrid only)
+    cache_hits: Optional[int] = None
+    cache_misses: Optional[int] = None
+    hit_rate: Optional[float] = None
+    prefetches: Optional[int] = None
+    prefetch_hits: Optional[int] = None
+    prefetch_hit_rate: Optional[float] = None
+    cache: Optional[dict] = None       # nested CellCache.stats() snapshot
+    # planner block (disjunctive / multi-box plans)
+    planner: Optional[dict] = None
+    n_boxes: Optional[int] = None
+    est_rel_err_dense: Optional[float] = None
+    # mesh tier (sharded execution only)
+    sharded: bool = False
+    n_shards: Optional[int] = None
+    replicated_cells: Optional[int] = None
+    replica_hits: Optional[int] = None
+    shards: tuple = ()                 # per-shard ShardStats
+    # anything mode-specific that has no typed slot yet
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_raw(cls, raw: dict) -> "EngineStats":
+        """Build from an engine's raw stats dict; unrecognized keys land
+        in ``extras`` so nothing an engine reports is ever dropped."""
+        known = {f.name for f in dataclasses.fields(cls)} - {"extras",
+                                                             "shards"}
+        kw = {k: v for k, v in raw.items() if k in known}
+        shards = tuple(
+            s if isinstance(s, ShardStats) else ShardStats.from_raw(s)
+            for s in raw.get("shards", ()))
+        extras = {k: v for k, v in raw.items()
+                  if k not in known and k != "shards"}
+        return cls(shards=shards, extras=extras, **kw)
+
+    def to_dict(self) -> dict:
+        """Flat dict for benches / JSON export: typed fields (Nones and
+        empty mesh fields dropped), shards as dicts, extras merged."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name in ("extras", "shards"):
+                continue
+            v = getattr(self, f.name)
+            if v is None:
+                continue
+            if f.name == "sharded" and not v:
+                continue
+            out[f.name] = v
+        if self.shards:
+            out["shards"] = [s.to_dict() for s in self.shards]
+        out.update(self.extras)
+        return out
+
+    # -- transitional mapping access ------------------------------------
+    def __getitem__(self, key: str):
+        d = self.to_dict()
+        if key in d:
+            return d[key]
+        if hasattr(self, key) and not key.startswith("_"):
+            return getattr(self, key)      # typed default (e.g. n_waves=0)
+        raise KeyError(key)
+
+    def get(self, key: str, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.to_dict()
+
+    def keys(self):
+        return self.to_dict().keys()
 
 
 def _pad_k(arr: np.ndarray, k: int, fill) -> np.ndarray:
@@ -26,11 +160,17 @@ class QueryResult:
     distances: np.ndarray    # (B, k) f32 squared L2, +inf pad
     engine: str = "incore"   # engine mode that served the batch
     # ("incore" | "hybrid" | "ooc" | "mixed")
-    # engine counters for the pass that produced this batch (a snapshot
-    # of Collection.last_stats: planner fanout, wave/cache/transfer
-    # counters on the streamed modes, path split on incore) — the
-    # serving front-end exports these per tick
-    stats: dict = dataclasses.field(default_factory=dict)
+    # typed engine counters for the pass that produced this batch
+    # (planner fanout, wave/cache/transfer counters on the streamed
+    # modes, path split on incore, per-shard counters on a mesh) — the
+    # serving front-end exports these per tick. A raw dict passed here
+    # is coerced through EngineStats.from_raw.
+    stats: EngineStats = dataclasses.field(default_factory=EngineStats)
+
+    def __post_init__(self):
+        if isinstance(self.stats, dict):
+            object.__setattr__(self, "stats",
+                               EngineStats.from_raw(self.stats))
 
     @classmethod
     def empty(cls, k: int, engine: str = "incore") -> "QueryResult":

@@ -371,11 +371,6 @@ def multihost_plan(incidence: np.ndarray, n_hosts: int, batch_size: int):
     (host_of_cell (S,), per-host batch lists, per-host active totals)."""
     S = incidence.shape[1]
     host_of = np.arange(S) % n_hosts
-    plans, totals = [], []
-    for h in range(n_hosts):
-        cells = [c for c in range(S)
-                 if host_of[c] == h and incidence[:, c].any()]
-        batches = sched_mod.schedule_cells(incidence, batch_size, cells)
-        plans.append(batches)
-        totals.append(sched_mod.total_active(incidence, batches))
+    plans, totals = sched_mod.shard_schedules(
+        incidence, host_of, n_hosts, batch_size)
     return host_of, plans, totals

@@ -171,6 +171,39 @@ def order_waves(batches: list[list[int]],
     return [batches[i] for i in order]
 
 
+def shard_schedules(incidence: np.ndarray, cell_shard: np.ndarray,
+                    n_shards: int, batch_size: int, *,
+                    resident: Optional[Sequence[Iterable[int]]] = None,
+                    weights: Optional[np.ndarray] = None,
+                    capacity: Optional[int] = None):
+    """Per-shard Alg. 5: wave packing under a cell -> shard assignment.
+
+    ``cell_shard`` maps each cell to its serving shard (e.g. the
+    per-pass assignment from ``repro.core.shard.assign_cells``, or a
+    static ``Placement.owner``). Each shard schedules only its own
+    selected cells — Eq. 3's objective sums over waves, so a partition
+    of the cells partitions the objective and per-shard greedy packing
+    composes without changing any shard's result (the order-invariance
+    the paper's Eq. 3 gives us, now applied across devices).
+
+    ``resident`` optionally supplies each shard's cache-resident cell
+    set (indexable by shard id) for the affinity bias. Returns
+    ``(per-shard batch lists, per-shard total_active)``.
+    """
+    cell_shard = np.asarray(cell_shard)
+    plans, totals = [], []
+    for s in range(n_shards):
+        cells = [c for c in range(incidence.shape[1])
+                 if cell_shard[c] == s and incidence[:, c].any()]
+        batches = schedule_cells(
+            incidence, batch_size, cells,
+            resident=None if resident is None else resident[s],
+            weights=weights, capacity=capacity)
+        plans.append(batches)
+        totals.append(total_active(incidence, batches))
+    return plans, totals
+
+
 def naive_schedule(incidence: np.ndarray, batch_size: int) -> list[list[int]]:
     """Original-order dispatch (the paper's Fig. 6(a) strawman)."""
     cells = [c for c in range(incidence.shape[1]) if incidence[:, c].any()]

@@ -1,0 +1,646 @@
+"""Cell-sharded multi-device execution over a JAX device mesh.
+
+The mesh tier of the engine-mode matrix (``incore | hybrid | ooc`` x
+``1 device | mesh``): cells — already the unit of residency, scheduling
+and mutation everywhere else in the engine — become the unit of
+*placement*. A :class:`ShardSpec` drives a deterministic placement plan
+(:func:`plan_placement`): cells are assigned to shards balanced by
+resident bytes (greedy descending weight onto the least-loaded shard),
+and the top-N hottest cells can be *replicated* on every shard so broad
+queries spread their heaviest cells across the mesh per pass.
+
+Each shard holds a self-contained sub-index (:func:`shard_index`) over
+its resident cells — the same global->local remap idiom the out-of-core
+engine uses per streamed batch, applied once at placement time — and
+runs the *existing* engines over it: an in-core :class:`CellRuntime`,
+or a per-shard :class:`HybridEngine` / :class:`OutOfCoreEngine` whose
+wave schedules are automatically per-shard because they see only local
+incidence. Per-query routing assigns each selected cell to exactly one
+shard per pass (:func:`assign_cells` — owners for placed cells,
+least-loaded holder for replicated ones), and per-shard top-k results
+fold back through the one deterministic ``merge_segment_topk``.
+
+Single-host simulated meshes (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``) exercise the same code: the
+placement layer is device-count transparent — shard s lives on device
+``s % len(jax.devices())`` — so everything here also runs, bit-for-bit,
+on one device.
+
+Parity contract (tested by tests/test_sharding.py):
+
+  incore — **exact id parity** with single-device execution. Sharded
+    in-core traversal pins the *partition-independent profile*
+    (``use_inter_edges=False``, ``adaptive_global=False``). Under it a
+    cell's search is fully self-contained: the beam is reset from
+    within-cell entries at every itinerary step, intra edges never leave
+    the cell, expansion is gated on the beam only (the result pool is a
+    write-only accumulator), and visited sets are disjoint across cells.
+    Entry randomness aligns across shards because the per-step draw is
+    ``fold_in(key, t)`` at the *global* itinerary position t — the
+    engine computes ONE global cell itinerary (identical to the
+    single-device order) and masks it per shard, preserving positions —
+    and the draw is an offset *within* the cell, which the local layout
+    preserves. Per-shard top-k therefore covers the global top-k, and
+    the (distance, id) merge reproduces single-device ids exactly (the
+    repo-wide exact-float caveat on ties between distinct equidistant
+    points applies, as everywhere).
+
+  hybrid / ooc — **recall parity** (the PR-6 contract for streamed
+    modes): per-shard carried pools and within-shard inter edges change
+    which candidates surface, not their quality; duplicates across
+    shards (replicated cells) collapse in the merge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import runtime as rt_mod
+from repro.core import select as select_mod
+from repro.core import selectivity as sel_mod
+from repro.core.ordering import order_cells
+from repro.core.runtime import CellRuntime, merge_segment_topk, pad_pow2
+from repro.core.types import GMGIndex, SearchParams
+from repro.dist.straggler import StragglerMonitor
+
+BALANCE_BY = ("bytes", "rows")
+SHARD_MODES = ("incore", "hybrid", "ooc")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Validated cell-placement knob set (``Collection(shards=...)``).
+
+    n_shards       — shards in the mesh tier; each lives on device
+                     ``s % len(jax.devices())``. 1 is valid (and useful:
+                     it exercises the identical partitioned code path).
+    replicate_hot  — top-N heaviest cells resident on EVERY shard; per
+                     pass each replicated cell is served by the
+                     least-loaded holder (see :func:`assign_cells`).
+    balance_by     — placement weight: "bytes" (resident bytes per cell,
+                     the default) or "rows".
+    hot_cells      — explicit replicated cell ids, overriding the
+                     weight-derived top-N pick.
+    """
+
+    n_shards: int = 1
+    replicate_hot: int = 0
+    balance_by: str = "bytes"
+    hot_cells: Optional[tuple] = None
+
+    def __post_init__(self):
+        if int(self.n_shards) < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if int(self.replicate_hot) < 0:
+            raise ValueError("replicate_hot must be >= 0")
+        if self.balance_by not in BALANCE_BY:
+            raise ValueError(f"unknown balance_by {self.balance_by!r}; "
+                             f"expected one of {BALANCE_BY}")
+        if self.hot_cells is not None:
+            object.__setattr__(self, "hot_cells",
+                               tuple(int(c) for c in self.hot_cells))
+
+    @classmethod
+    def canon(cls, spec: Union[None, int, "ShardSpec"]
+              ) -> Optional["ShardSpec"]:
+        """Normalize the ``Collection.shards`` knob: None stays None
+        (single-device engines untouched), an int becomes
+        ``ShardSpec(n_shards=int)``, a ShardSpec passes through."""
+        if spec is None:
+            return None
+        if isinstance(spec, ShardSpec):
+            return spec
+        if isinstance(spec, (int, np.integer)) and not isinstance(spec, bool):
+            return cls(n_shards=int(spec))
+        raise TypeError(
+            f"shards must be None, an int, or a ShardSpec, got {spec!r}")
+
+
+def cell_weights(index: GMGIndex, balance_by: str = "bytes") -> np.ndarray:
+    """(S,) int64 placement weight per cell: rows, or the bytes a cell
+    keeps resident on its shard (vectors + attrs + graph rows [+ int8
+    copy]) — the balance target of :func:`plan_placement`."""
+    rows = np.diff(index.cell_start).astype(np.int64)
+    if balance_by == "rows":
+        return rows
+    per_row = (index.vectors.itemsize * index.dim
+               + index.attrs.itemsize * index.attrs.shape[1]
+               + index.intra_adj.itemsize * index.intra_adj.shape[1]
+               + index.inter_adj.itemsize
+               * index.inter_adj.shape[1] * index.inter_adj.shape[2])
+    if index.vq is not None:
+        per_row += index.vq.itemsize * index.dim + index.vscale.itemsize
+    return rows * per_row
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Deterministic cell -> shard plan (pure function of (index, spec))."""
+
+    n_shards: int
+    owner: np.ndarray        # (S,) i32 home shard per cell
+    replicated: np.ndarray   # (S,) bool: resident on every shard
+    weights: np.ndarray      # (S,) i64 placement weights
+    shard_cells: tuple       # per shard: sorted global cell ids resident
+    loads: np.ndarray        # (n_shards,) i64 owned weight per shard
+
+    def balance(self) -> float:
+        """max/mean owned-weight ratio over shards (1.0 = perfect)."""
+        mean = float(self.loads.mean()) if self.n_shards else 0.0
+        return float(self.loads.max()) / max(mean, 1e-12)
+
+
+def plan_placement(index: GMGIndex, spec: ShardSpec) -> Placement:
+    """Greedy balanced placement: cells descend by weight (ties break to
+    the lower cell id) onto the least-loaded shard (ties to the lower
+    shard id). ``replicate_hot``/``hot_cells`` marks cells additionally
+    resident on every shard; their *home* shard still carries their
+    weight (it serves them when no rebalancing is needed)."""
+    S = index.n_cells
+    if spec.n_shards > S:
+        raise ValueError(
+            f"n_shards={spec.n_shards} exceeds the index's {S} cells")
+    w = cell_weights(index, spec.balance_by)
+    if spec.hot_cells is not None:
+        hot = np.asarray(spec.hot_cells, np.int64)
+        if hot.size and (hot.min() < 0 or hot.max() >= S):
+            raise ValueError(f"hot_cells out of range [0, {S})")
+    else:
+        n_hot = min(int(spec.replicate_hot), S)
+        # heaviest first, ascending id on ties — deterministic
+        order = np.lexsort((np.arange(S), -w))
+        hot = order[:n_hot]
+    replicated = np.zeros(S, bool)
+    replicated[hot] = True
+
+    owner = np.full(S, -1, np.int32)
+    loads = np.zeros(spec.n_shards, np.int64)
+    for c in np.lexsort((np.arange(S), -w)):
+        s = int(np.argmin(loads))          # ties -> lowest shard id
+        owner[c] = s
+        loads[s] += int(w[c])
+    shard_cells = tuple(
+        np.nonzero((owner == s) | replicated)[0].astype(np.int64)
+        for s in range(spec.n_shards))
+    return Placement(n_shards=spec.n_shards, owner=owner,
+                     replicated=replicated, weights=w,
+                     shard_cells=shard_cells, loads=loads)
+
+
+def shard_index(index: GMGIndex, cells: np.ndarray):
+    """Build one shard's self-contained sub-index over ``cells``
+    (ascending global cell ids). Returns ``(sub, rows, g2l_cell)``:
+    ``rows`` maps local internal ids -> global internal ids, and
+    ``g2l_cell`` is the (S,) global -> local cell map (-1 elsewhere).
+
+    The same gather+remap the streaming engine applies per batch
+    (``pipeline._remap_plan``), applied once: intra edges are within-cell
+    and remap losslessly; inter edges keep only the columns between
+    resident cells; ``perm`` carries *original* ids so cross-shard
+    merges need no translation; ordering/selectivity metadata row-slices
+    by cell (hist, cell boxes) or stays global (centroids, quantiles)."""
+    cells = np.asarray(sorted(int(c) for c in cells), np.int64)
+    S = index.n_cells
+    starts = index.cell_start
+    sizes = np.diff(starts).astype(np.int64)
+    local_start = np.zeros(len(cells) + 1, np.int64)
+    np.cumsum(sizes[cells], out=local_start[1:])
+    rows = np.concatenate(
+        [np.arange(starts[c], starts[c + 1], dtype=np.int64)
+         for c in cells]) if len(cells) else np.empty(0, np.int64)
+
+    offset = np.zeros(S, np.int64)
+    in_sub = np.zeros(S, bool)
+    for li, c in enumerate(cells):
+        offset[c] = int(local_start[li]) - int(starts[c])
+        in_sub[c] = True
+
+    def remap(ids: np.ndarray) -> np.ndarray:
+        safe = np.maximum(ids, 0)
+        cell = index.cell_of[safe]
+        return np.where((ids >= 0) & in_sub[cell],
+                        safe + offset[cell], -1).astype(np.int32)
+
+    g2l_cell = np.full(S, -1, np.int32)
+    g2l_cell[cells] = np.arange(len(cells), dtype=np.int32)
+    sub = GMGIndex(
+        config=index.config,
+        vectors=index.vectors[rows],
+        attrs=index.attrs[rows],
+        perm=index.perm[rows],
+        seg_bounds=index.seg_bounds,
+        cell_of=np.repeat(np.arange(len(cells), dtype=np.int32),
+                          sizes[cells]),
+        cell_start=local_start.astype(np.int32),
+        cell_lo=index.cell_lo[cells],
+        cell_hi=index.cell_hi[cells],
+        intra_adj=remap(index.intra_adj[rows]),
+        inter_adj=remap(index.inter_adj[rows][:, cells, :]),
+        centroids=index.centroids,
+        hist=index.hist[cells],
+        attr_quantiles=index.attr_quantiles,
+        vq=None if index.vq is None else index.vq[rows],
+        vscale=None if index.vscale is None else index.vscale[rows],
+    )
+    return sub, rows, g2l_cell
+
+
+def assign_cells(inc: np.ndarray, placement: Placement):
+    """Per-pass cell -> serving shard assignment.
+
+    Placed cells go to their owner. Each *replicated* cell selected by
+    at least one row goes to the currently least-loaded holder (load =
+    selected (row, cell) incidences assigned so far; replicated cells
+    assign heaviest-demand first, ties ascending cell id, shard ties to
+    the lowest id) — deterministic, and result-invariant because a
+    cell's per-query work is identical on any holder. Returns
+    ``(assign (S,) i32, replica_hits)`` where ``replica_hits`` counts
+    (row, cell) incidences served by a non-home shard."""
+    assign = placement.owner.copy()
+    demand = inc.sum(axis=0).astype(np.int64)
+    loads = np.zeros(placement.n_shards, np.int64)
+    sel = np.nonzero(demand > 0)[0]
+    for c in sel:
+        if not placement.replicated[c]:
+            loads[assign[c]] += demand[c]
+    hits = 0
+    rep_sel = sorted((c for c in sel if placement.replicated[c]),
+                     key=lambda c: (-int(demand[c]), int(c)))
+    for c in rep_sel:
+        s = int(np.argmin(loads))
+        assign[c] = s
+        loads[s] += demand[c]
+        if s != placement.owner[c]:
+            hits += int(demand[c])
+    return assign, hits
+
+
+def _slice_routes(routes: sel_mod.RouteDecision,
+                  rows: np.ndarray) -> sel_mod.RouteDecision:
+    """Row-subset view of a RouteDecision (routing stays planner-level:
+    shards execute the global decision, never re-derive it)."""
+    return dataclasses.replace(
+        routes, route=routes.route[rows], est=routes.est[rows],
+        est_rows=routes.est_rows[rows], cand_rows=routes.cand_rows[rows],
+        ef_mult=routes.ef_mult[rows])
+
+
+@dataclasses.dataclass
+class _Shard:
+    """One shard's residency: sub-index + engine on its device."""
+    sid: int
+    device: object
+    cells: np.ndarray        # (n_local_cells,) global cell ids, ascending
+    rows: np.ndarray         # (n_local,) local -> global internal ids
+    g2l: np.ndarray          # (S,) global -> local cell id, -1 elsewhere
+    sub: GMGIndex
+    rt: Optional[CellRuntime] = None       # incore
+    engine: object = None                  # hybrid / ooc sub-engine
+
+
+@dataclasses.dataclass
+class ShardedEngine:
+    """Engine-compatible wrapper running one mode across a cell-sharded
+    mesh. ``Collection._engine_for`` returns this when ``shards`` is
+    set; its ``search``/``stats``/``refresh_index`` surface matches the
+    single-device engines."""
+
+    index: GMGIndex
+    spec: ShardSpec
+    mode: str = "incore"
+    device_budget_bytes: Optional[int] = None
+    cache_policy: str = "size_aware"
+    rerank: str = "device"
+
+    def __post_init__(self):
+        if self.mode not in SHARD_MODES:
+            raise ValueError(f"unknown sharded mode {self.mode!r}; "
+                             f"expected one of {SHARD_MODES}")
+        self.placement = plan_placement(self.index, self.spec)
+        devices = jax.devices()
+        self.shards: list[_Shard] = []
+        for s in range(self.spec.n_shards):
+            dev = devices[s % len(devices)]
+            sub, rows, g2l = shard_index(self.index,
+                                         self.placement.shard_cells[s])
+            sh = _Shard(sid=s, device=dev,
+                        cells=self.placement.shard_cells[s],
+                        rows=rows, g2l=g2l, sub=sub)
+            with jax.default_device(dev):
+                if self.mode == "incore":
+                    sh.rt = CellRuntime(sub, storage="f32")
+                    sh.rt.resident_graph()        # build under the device
+                elif self.mode == "hybrid":
+                    from repro.core.hybrid import HybridEngine
+                    sh.engine = HybridEngine(
+                        sub, cache_budget_bytes=self._sub_window(sub),
+                        cache_policy=self.cache_policy, rerank=self.rerank)
+                else:
+                    from repro.core.pipeline import OutOfCoreEngine
+                    sh.engine = OutOfCoreEngine(
+                        sub, hbm_budget_bytes=self._sub_window(sub),
+                        rerank=self.rerank)
+            self.shards.append(sh)
+        # global ordering geometry for the one shared itinerary (incore)
+        self._cell_lo_dev = jnp.asarray(self.index.cell_lo)
+        self._cell_hi_dev = jnp.asarray(self.index.cell_hi)
+        self._centroids_dev = jnp.asarray(self.index.centroids)
+        self._hist_dev = jnp.asarray(self.index.hist)
+        # per-shard blocking-materialization wall times feed the fleet
+        # monitor (repro.dist.straggler), validated under real mesh runs
+        self.straggler = StragglerMonitor(self.spec.n_shards)
+        self.stats: dict = {}
+
+    def _sub_window(self, sub: GMGIndex) -> Optional[int]:
+        """Per-shard cache/window budget: the declared *per-device*
+        budget minus the shard's own int8 residents (the same rule
+        ``Collection`` applies globally)."""
+        if self.device_budget_bytes is None:
+            return None
+        resident = 0
+        if sub.vq is not None:
+            resident = sub.vq.nbytes + sub.vscale.nbytes + sub.attrs.nbytes
+        return max(self.device_budget_bytes - resident, 1)
+
+    def refresh_index(self, index: GMGIndex) -> None:
+        """Delete path: push tombstone-NaN attrs into every shard's
+        engine in place (one per-shard attr slice + re-upload; graphs
+        and caches stay resident, same as single-device engines)."""
+        self.index = index
+        for sh in self.shards:
+            sh.sub = dataclasses.replace(sh.sub, attrs=index.attrs[sh.rows])
+            with jax.default_device(sh.device):
+                if sh.rt is not None:
+                    sh.rt.refresh_index(sh.sub)
+                else:
+                    sh.engine.refresh_index(sh.sub)
+
+    def stragglers(self) -> list:
+        """Shards currently flagged by the fleet monitor."""
+        return [s for s in range(self.spec.n_shards)
+                if self.straggler.is_straggler(s)]
+
+    # -- search --------------------------------------------------------------
+
+    def search(self, q: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+               params: Optional[SearchParams] = None,
+               qmap: Optional[np.ndarray] = None,
+               n_queries: Optional[int] = None,
+               route_k: Optional[np.ndarray] = None,
+               routes: Optional[sel_mod.RouteDecision] = None):
+        """Engine-compatible sharded search; see the module docstring
+        for the parity contract per mode."""
+        params = params or SearchParams()
+        q = np.asarray(q, np.float32)
+        lo = np.asarray(lo, np.float32)
+        hi = np.asarray(hi, np.float32)
+        B = q.shape[0]
+        k = params.k
+        if qmap is not None:
+            qmap = rt_mod.check_qmap(qmap, B)
+            if n_queries is None:
+                raise ValueError("n_queries is required with qmap")
+        t0 = time.perf_counter()
+        self.stats = {"engine": self.mode, "n_rows": int(B),
+                      "sharded": True, "n_shards": self.spec.n_shards,
+                      "replicated_cells": int(self.placement.replicated.sum()),
+                      "replica_hits": 0, "total_active": 0, "shards": []}
+        if B == 0:
+            self.stats["wall_seconds"] = time.perf_counter() - t0
+            nq = n_queries if qmap is not None else 0
+            return rt_mod.empty_topk(nq, k)
+
+        idx = self.index
+        inc = select_mod.incidence_numpy(lo, hi, idx.cell_lo, idx.cell_hi)
+        if routes is None:
+            rk = (np.full(B, k, np.int64) if route_k is None
+                  else np.asarray(route_k, np.int64))
+            routes = sel_mod.route_boxes(idx, lo, hi, rk,
+                                         cost=params.cost, inc=inc)
+        self.stats.update(routes.counts())
+        assign, replica_hits = assign_cells(inc, self.placement)
+        self.stats["replica_hits"] = replica_hits
+        demand = inc.sum(axis=0).astype(np.int64)
+        shard_stats = []
+        for sh in self.shards:
+            mine = assign[sh.cells] == sh.sid
+            away = mine & (self.placement.owner[sh.cells] != sh.sid)
+            shard_stats.append({
+                "shard": sh.sid, "device": str(sh.device),
+                "n_cells": int(len(sh.cells)),
+                "n_rows": int(len(sh.rows)),
+                "active_rows": 0,
+                "total_active": int(demand[sh.cells][mine].sum()),
+                "replica_hits": int(demand[sh.cells][away].sum()),
+                "transfer_bytes": 0, "wall_seconds": 0.0,
+            })
+        self.stats["total_active"] = int(
+            sum(st["total_active"] for st in shard_stats))
+
+        if self.mode == "incore":
+            out_i, out_d = self._search_incore(
+                q, lo, hi, inc, assign, routes, params, shard_stats)
+        else:
+            out_i, out_d = self._search_streamed(
+                q, lo, hi, inc, assign, routes, params, shard_stats)
+
+        for st in shard_stats:
+            if st["active_rows"]:
+                self.straggler.record(st["shard"], st["wall_seconds"])
+        self.stats["shards"] = shard_stats
+        self.stats["transfer_bytes"] = int(
+            sum(st["transfer_bytes"] for st in shard_stats))
+        if qmap is not None:
+            self.stats["n_boxes"] = B
+            out_i, out_d = merge_segment_topk(out_i, out_d, qmap,
+                                              n_queries, k)
+        self.stats["wall_seconds"] = time.perf_counter() - t0
+        return out_i, out_d
+
+    # -- incore: the partition-independent traversal profile -----------------
+
+    def _search_incore(self, q, lo, hi, inc, assign, routes,
+                       params: SearchParams, shard_stats):
+        idx = self.index
+        cfg = idx.config
+        B, k = q.shape[0], params.k
+        base_key = jax.random.PRNGKey(params.seed)
+        use_dense = routes.route == sel_mod.ROUTE_DENSE
+        self.stats["profile"] = "partitioned"
+        self.stats["n_itinerary"] = int((~use_dense).sum())
+        self.stats["n_global"] = 0
+        # (S,) assigned-cell -> local id per shard, this pass
+        assigned_local = []
+        for sh in self.shards:
+            al = np.full(idx.n_cells, -1, np.int32)
+            m = assign == sh.sid
+            al[m] = sh.g2l[m]
+            assigned_local.append(al)
+        cand_i, cand_d, cand_q = [], [], []
+
+        def touch(sh, act_rows, seconds):
+            st = shard_stats[sh.sid]
+            st["active_rows"] += int(act_rows)
+            st["wall_seconds"] += seconds
+
+        # dense route: each shard exact-scans its assigned selected cells;
+        # assignment partitions the cells, so per-shard qualifying counts
+        # sum to the global count and candidates never duplicate
+        dense_rows = np.nonzero(use_dense)[0]
+        if len(dense_rows) > 0:
+            n_qual_total = np.zeros(len(dense_rows), np.int64)
+            for sh in self.shards:
+                inc_loc = (inc[np.ix_(dense_rows, sh.cells)]
+                           & (assign[sh.cells] == sh.sid)[None, :])
+                act = np.nonzero(inc_loc.any(axis=1))[0]
+                if len(act) == 0:
+                    continue
+                rows = dense_rows[act]
+                t_s = time.perf_counter()
+                with jax.default_device(sh.device):
+                    ids_l, d_l, n_qual = rt_mod.masked_dense_scan(
+                        sh.rt, q[rows], lo[rows], hi[rows],
+                        inc_loc[act], k)
+                touch(sh, len(act), time.perf_counter() - t_s)
+                cand_i.append(np.where(
+                    ids_l >= 0, sh.sub.perm[np.maximum(ids_l, 0)], -1))
+                cand_d.append(d_l)
+                cand_q.append(rows)
+                n_qual_total[act] += n_qual
+            exact = n_qual_total.astype(np.float64)
+            est_r = routes.est_rows[dense_rows]
+            self.stats["est_rel_err_dense"] = float(
+                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0)))
+
+        # itinerary path: ONE global cell order (identical to the
+        # single-device Searcher's), masked per shard at the same
+        # positions so the per-step fold_in(key, t) draws align
+        path_rows = ~use_dense
+        ef_base = params.ef or cfg.search_ef
+        for mult in np.unique(routes.ef_mult[path_rows]):
+            sel = np.nonzero(path_rows & (routes.ef_mult == mult))[0]
+            if len(sel) == 0:
+                continue
+            # identity-keyed per (path, effort) bucket exactly as the
+            # single-device engine (path_idx = 0: itinerary)
+            code = 2 * int(mult).bit_length() - 2
+            sub_key = jax.random.fold_in(base_key, code)
+            ef = ef_base * int(mult)
+            beam = cfg.entry_beam_l if mult == 1 \
+                else min(cfg.entry_beam_l * int(mult), ef)
+            k_run = max(k, beam)
+            qp, real = pad_pow2(q[sel])
+            lop, _ = pad_pow2(lo[sel])
+            hip, _ = pad_pow2(hi[sel])
+            qd = jnp.asarray(qp)
+            lod, hid = jnp.asarray(lop), jnp.asarray(hip)
+            mask = select_mod.select_cells(lod, hid, self._cell_lo_dev,
+                                           self._cell_hi_dev)
+            T = idx.n_cells if params.max_cells is None \
+                else min(params.max_cells, idx.n_cells)
+            if params.use_ordering:
+                order, _ = order_cells(qd, self._centroids_dev,
+                                       self._hist_dev, mask,
+                                       top_m=cfg.top_m_clusters, T=T)
+            else:  # grid-order ablation, mirrored from the Searcher
+                S = mask.shape[1]
+                ids = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                       mask.shape)
+                srt = jnp.where(mask, ids, S + 1)
+                order = jnp.sort(srt, axis=1)[:, :T].astype(jnp.int32)
+                order = jnp.where(order <= S - 1, order, -1)
+            order_np = np.asarray(order)[:real]          # (n_sel, T) global
+
+            launches = []
+            for sh in self.shards:
+                order_s = np.where(
+                    order_np >= 0,
+                    assigned_local[sh.sid][np.maximum(order_np, 0)],
+                    -1).astype(np.int32)
+                act = np.nonzero((order_s >= 0).any(axis=1))[0]
+                if len(act) == 0:
+                    continue
+                q_s, real_s = pad_pow2(q[sel][act])
+                lo_s, _ = pad_pow2(lo[sel][act])
+                hi_s, _ = pad_pow2(hi[sel][act])
+                ord_p = np.full((q_s.shape[0], order_s.shape[1]), -1,
+                                np.int32)
+                ord_p[:real_s] = order_s[act]
+                t_s = time.perf_counter()
+                with jax.default_device(sh.device):
+                    ids_dev, d_dev, _ = sh.rt.run_launch(
+                        sh.rt.resident_graph(), q_s, lo_s, hi_s, sub_key,
+                        k=k_run, ef=ef, cell_order=ord_p,
+                        entry_beam_l=beam, use_inter=False,
+                        pool_reuse=params.pool_reuse)
+                launch_s = time.perf_counter() - t_s
+                launches.append((sh, ids_dev, d_dev, real_s, act, launch_s))
+            # all shards launched (async dispatch overlaps across
+            # devices); now block each and fold candidates
+            for sh, ids_dev, d_dev, real_s, act, launch_s in launches:
+                t_b = time.perf_counter()
+                ids_l = np.asarray(ids_dev[:real_s, :k])
+                d_l = np.asarray(d_dev[:real_s, :k])
+                touch(sh, len(act),
+                      launch_s + (time.perf_counter() - t_b))
+                cand_i.append(np.where(
+                    ids_l >= 0, sh.sub.perm[np.maximum(ids_l, 0)], -1))
+                cand_d.append(d_l)
+                cand_q.append(sel[act])
+
+        if not cand_q:
+            return rt_mod.empty_topk(B, k)
+        # per-row (distance, id) fold across shards — ALWAYS through the
+        # one merge, so 1-shard and N-shard orderings are identical
+        return merge_segment_topk(
+            np.concatenate(cand_i, axis=0).astype(np.int64),
+            np.concatenate(cand_d, axis=0),
+            np.concatenate(cand_q), B, k)
+
+    # -- hybrid / ooc: per-shard sub-engines ---------------------------------
+
+    def _search_streamed(self, q, lo, hi, inc, assign, routes,
+                         params: SearchParams, shard_stats):
+        """Each shard with assigned selected cells runs its own
+        sub-engine over the row subset that needs it; per-shard wave /
+        batch schedules come from local incidence (wave packing is
+        per-shard by construction). Duplicates across shards (replicated
+        cells reachable via within-shard inter edges) collapse in the
+        merge; recall parity, not id parity, is the contract here."""
+        B, k = q.shape[0], params.k
+        cand_i, cand_d, cand_q = [], [], []
+        for sh in self.shards:
+            inc_loc = (inc[:, sh.cells]
+                       & (assign[sh.cells] == sh.sid)[None, :])
+            act = np.nonzero(inc_loc.any(axis=1))[0]
+            if len(act) == 0:
+                continue
+            t_s = time.perf_counter()
+            with jax.default_device(sh.device):
+                ids_s, d_s = sh.engine.search(
+                    q[act], lo[act], hi[act], params,
+                    routes=_slice_routes(routes, act))
+            st = shard_stats[sh.sid]
+            st["active_rows"] += int(len(act))
+            st["wall_seconds"] += time.perf_counter() - t_s
+            est = sh.engine.stats
+            st["transfer_bytes"] += int(est.get("transfer_bytes", 0))
+            for key in ("n_waves", "n_batches", "total_active"):
+                if key in est:
+                    st[f"engine_{key}"] = (st.get(f"engine_{key}", 0)
+                                           + int(est[key]))
+            cand_i.append(np.asarray(ids_s, np.int64))
+            cand_d.append(np.asarray(d_s, np.float32))
+            cand_q.append(act)
+        if not cand_q:
+            return rt_mod.empty_topk(B, k)
+        return merge_segment_topk(
+            np.concatenate(cand_i, axis=0),
+            np.concatenate(cand_d, axis=0),
+            np.concatenate(cand_q), B, k)

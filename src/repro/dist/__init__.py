@@ -1,4 +1,11 @@
-"""Distributed substrate. Currently provides ``sharding`` (logical-axis
--> mesh placement rules used by the models, serving engine and dry-run).
-``straggler`` / ``compression`` are referenced by the train loop and
-tests but not yet restored — see ROADMAP open items."""
+"""Distributed substrate.
+
+``sharding`` — generic logical-axis -> mesh placement machinery
+(``partition_spec`` / ``sharding_for`` / ``batch_sharding`` /
+``zero1_sharding`` / ``activation_rules`` + ``constrain``), used by the
+serving engine and the launch dry-run. ``lm_rules`` quarantines the
+LM-stack rule tables (TRAIN/FSDP/DECODE) the ANN engine never touches.
+``straggler`` — per-host EWMA step-time monitor; the ANN mesh tier
+(``repro.core.shard.ShardedEngine``) records per-shard wall times into
+it every pass. ``compression`` — error-feedback gradient compression
+for the train loop."""

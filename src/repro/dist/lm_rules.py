@@ -1,0 +1,37 @@
+"""LM-stack logical-axis rule tables, quarantined.
+
+These tables drive GSPMD placement for the *language-model* side of the
+repo (``repro.models`` / ``repro.launch.dryrun`` / roofline): the ANN
+engine never consumes them — its mesh tier places whole cells per shard
+(``repro.core.shard``), not tensor dimensions. They live here so
+``repro.dist.sharding`` stays the engine-facing machinery module and a
+grep for TRAIN/DECODE rules can't suggest the ANN path uses them.
+
+Contracting / head-like param axes go to "model"; batch-like axes spread
+over every non-model axis; FSDP adds "embed" over the data axes
+(ZeRO-3 style).
+"""
+
+from __future__ import annotations
+
+from repro.dist.sharding import _BATCH_AXES
+
+TRAIN_RULES = {
+    "batch": _BATCH_AXES,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+}
+
+FSDP_TRAIN_RULES = dict(TRAIN_RULES, embed=_BATCH_AXES)
+
+DECODE_RULES = {
+    "batch": _BATCH_AXES,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+}

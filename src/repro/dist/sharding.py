@@ -1,10 +1,16 @@
-"""Logical-axis sharding rules (GSPMD placement for the LM stack).
+"""Logical-axis -> mesh placement machinery (GSPMD).
 
-Params and activations carry *logical* axis names (see
-``repro.models.common``); a rules table maps each name to mesh axes.
-Placement never changes values — every helper falls back to replication
-when a mesh axis is absent, has size 1, or does not divide the array
-dimension — so a single-device run lowers to the unsharded program.
+Params and activations carry *logical* axis names; a rules table maps
+each name to mesh axes. Placement never changes values — every helper
+falls back to replication when a mesh axis is absent, has size 1, or
+does not divide the array dimension — so a single-device run lowers to
+the unsharded program.
+
+This module holds only the generic machinery the engine uses (the ANN
+mesh tier pins device arrays per shard via ``jax.default_device`` —
+see ``repro.core.shard`` — and the serving/dry-run paths resolve
+shardings through the helpers here). The LM-stack rule *tables*
+(TRAIN/FSDP/DECODE) are quarantined in ``repro.dist.lm_rules``.
 
 ``constrain`` is the activation-pinning hook used inside model code. It
 is a no-op unless the caller entered ``activation_rules(mesh, rules)``,
@@ -21,31 +27,9 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-# mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi.
-# Batch-like logical axes spread over every non-model axis; contracting /
-# head-like param axes go to "model"; FSDP adds "embed" over the data
-# axes (ZeRO-3 style).
+# mesh axes: ("data", "model") single pod, ("pod", "data", "model")
+# multi. Batch-like logical axes spread over every non-model axis.
 _BATCH_AXES = ("pod", "data")
-
-TRAIN_RULES = {
-    "batch": _BATCH_AXES,
-    "vocab": "model",
-    "heads": "model",
-    "kv_heads": "model",
-    "mlp": "model",
-    "experts": "model",
-}
-
-FSDP_TRAIN_RULES = dict(TRAIN_RULES, embed=_BATCH_AXES)
-
-DECODE_RULES = {
-    "batch": _BATCH_AXES,
-    "heads": "model",
-    "kv_heads": "model",
-    "mlp": "model",
-    "experts": "model",
-    "vocab": "model",
-}
 
 
 def _mesh_axes(entry, mesh) -> tuple:

@@ -121,9 +121,10 @@ _INT8_OPT = False  # set by --int8-opt: 8-bit AdamW moments
 
 
 def _rules_for(shape_name: str):
+    from repro.dist import lm_rules
     if shape_name == "train_4k":
-        return shd.FSDP_TRAIN_RULES if _FSDP else shd.TRAIN_RULES
-    return shd.DECODE_RULES
+        return lm_rules.FSDP_TRAIN_RULES if _FSDP else lm_rules.TRAIN_RULES
+    return lm_rules.DECODE_RULES
 
 
 def _axes_to_shardings(shapes, axes, mesh, rules):

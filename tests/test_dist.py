@@ -11,6 +11,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.dist import lm_rules
 from repro.dist import sharding as shd
 from repro.dist.straggler import StragglerMonitor
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
@@ -28,7 +29,7 @@ def test_partition_spec_divisibility_fallback():
     mesh = _mesh11()
     # model axis size 1 -> always falls back to replication
     spec = shd.partition_spec((4096, 32), ("embed", "heads"), mesh,
-                              shd.TRAIN_RULES)
+                              lm_rules.TRAIN_RULES)
     assert spec == jax.sharding.PartitionSpec(None, None)
 
 
@@ -38,14 +39,14 @@ def test_partition_spec_shards_divisible_dims():
     # the rule resolution path via a fake mesh with repeated axis... the
     # real 256/512-device checks happen in the dry-run subprocess test.
     spec = shd.partition_spec((40, 128), ("heads", "head_dim"), mesh,
-                              shd.TRAIN_RULES)
+                              lm_rules.TRAIN_RULES)
     assert spec == jax.sharding.PartitionSpec(None, None)
 
 
 def test_zero1_sharding_prefers_largest_dim():
     mesh = _mesh11()
     s = shd.zero1_sharding((1024, 64), ("embed", None), mesh,
-                           shd.TRAIN_RULES)
+                           lm_rules.TRAIN_RULES)
     assert isinstance(s, jax.sharding.NamedSharding)
 
 
@@ -193,6 +194,57 @@ def test_compressed_psum_error_feedback():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
     res = subprocess.run([sys.executable, "-c", _COMPRESSION_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert "OK" in res.stdout, res.stdout + res.stderr
+
+
+# ---------------------------------------------------------------------------
+# constrain on a real (simulated) multi-device mesh
+# ---------------------------------------------------------------------------
+
+_CONSTRAIN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist import sharding as shd
+from repro.dist.lm_rules import TRAIN_RULES
+
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+
+# outside an activation_rules context: identity, even on a mesh
+x = jnp.ones((8, 64))
+assert shd.constrain(x, ("batch", "heads")) is x
+
+@jax.jit
+def f(x):
+    return shd.constrain(x * 2.0, (None, "heads"))
+
+with shd.activation_rules(mesh, TRAIN_RULES):
+    y = f(jnp.ones((8, 64)))
+# "heads" -> "model" (size 4, divides 64): dim 1 actually sharded
+spec = y.sharding.spec
+assert tuple(spec) == (None, "model"), spec
+assert len(y.sharding.device_set) == 4
+np.testing.assert_allclose(np.asarray(y), 2.0)
+
+# non-divisible dim falls back to replication, values unchanged
+with shd.activation_rules(mesh, TRAIN_RULES):
+    z = jax.jit(lambda x: shd.constrain(x, (None, "heads")))(jnp.ones((8, 65)))
+assert tuple(z.sharding.spec) in ((), (None,), (None, None)), z.sharding.spec
+print("OK")
+"""
+
+
+def test_constrain_pins_layout_on_simulated_mesh():
+    """`constrain` was a PR-1 reconstruction that only ever ran on one
+    device (where it lowers to the identity); validate it on a real
+    simulated mesh: pins divisible dims, replicates the rest, and never
+    changes values."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _CONSTRAIN_SCRIPT],
                          capture_output=True, text=True, env=env,
                          timeout=300)
     assert "OK" in res.stdout, res.stdout + res.stderr

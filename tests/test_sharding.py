@@ -1,0 +1,402 @@
+"""Mesh-tier tests: placement, per-pass assignment, sharded-vs-single
+parity, the redesigned Collection sharding + stats API, and the real
+simulated-mesh run (subprocess with forced host devices).
+
+Parity contract (repro.core.shard docstring): sharded incore pins the
+partition-independent traversal profile (use_inter_edges=False,
+adaptive_global=False) and reproduces single-device ids bit-for-bit;
+hybrid/ooc follow the PR-6 recall-parity contract for streamed modes.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import Collection, EngineStats, F, QueryResult, ShardSpec
+from repro.api.planner import plan_queries, shard_routing
+from repro.api.result import ShardStats
+from repro.core.shard import (ShardedEngine, assign_cells, cell_weights,
+                              plan_placement, shard_index)
+from repro.core.types import SearchParams
+
+# the partition-independent profile both sides of every id-parity check
+# run under (the sharded engine coerces to it internally)
+PP = SearchParams(k=10, use_inter_edges=False, adaptive_global=False)
+
+
+def _sharded(col, shards):
+    """A collection sharing ``col``'s built index, mesh tier enabled."""
+    return Collection(index=col.index, schema=col.schema, shards=shards)
+
+
+# ---------------------------------------------------------------------------
+# placement + sub-index construction
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ShardSpec(n_shards=0)
+    with pytest.raises(ValueError):
+        ShardSpec(n_shards=2, replicate_hot=-1)
+    with pytest.raises(ValueError):
+        ShardSpec(n_shards=2, balance_by="vibes")
+    with pytest.raises(TypeError):
+        ShardSpec.canon("two")
+    assert ShardSpec.canon(None) is None
+    assert ShardSpec.canon(4) == ShardSpec(n_shards=4)
+    spec = ShardSpec(n_shards=2)
+    assert ShardSpec.canon(spec) is spec
+
+
+def test_collection_validates_shards(small_collection):
+    S = small_collection.index.n_cells
+    with pytest.raises(ValueError):
+        _sharded(small_collection, S + 1)
+    col = _sharded(small_collection, 2)
+    assert col.shards == ShardSpec(n_shards=2)
+
+
+def test_build_accepts_shards(small_data):
+    v, a = small_data
+    from repro.core.types import GMGConfig
+    col = Collection.build(
+        v, a, config=GMGConfig(seg_per_attr=(2, 2), intra_degree=12,
+                               n_clusters=16),
+        seed=0, shards=2)
+    assert col.shards == ShardSpec(n_shards=2)
+    res = col.search(v[:4] + 0.01, params=PP)
+    assert res.stats.n_shards == 2
+
+
+def test_placement_balanced_and_deterministic(small_index):
+    spec = ShardSpec(n_shards=2)
+    p1 = plan_placement(small_index, spec)
+    p2 = plan_placement(small_index, spec)
+    np.testing.assert_array_equal(p1.owner, p2.owner)
+    assert p1.balance() <= 1.5
+    # every cell owned exactly once; shard_cells = owned (no replication)
+    assert sorted(np.concatenate(p1.shard_cells).tolist()) \
+        == list(range(small_index.n_cells))
+    # weights follow resident bytes: rows * per-row constant
+    w = cell_weights(small_index, "bytes")
+    rows = np.diff(small_index.cell_start)
+    assert (w[np.argmax(rows)] == w.max())
+
+
+def test_replicated_cells_resident_everywhere(small_index):
+    spec = ShardSpec(n_shards=2, replicate_hot=2)
+    pl = plan_placement(small_index, spec)
+    hot = np.nonzero(pl.replicated)[0]
+    assert len(hot) == 2
+    for cells in pl.shard_cells:
+        assert np.isin(hot, cells).all()
+    # explicit hot_cells override the weight-derived pick
+    pl2 = plan_placement(small_index, ShardSpec(n_shards=2, hot_cells=(0,)))
+    assert pl2.replicated[0] and pl2.replicated.sum() == 1
+
+
+def test_shard_index_roundtrip(small_index):
+    pl = plan_placement(small_index, ShardSpec(n_shards=2))
+    sub, rows, g2l = shard_index(small_index, pl.shard_cells[0])
+    assert sub.n == len(rows)
+    np.testing.assert_array_equal(sub.vectors, small_index.vectors[rows])
+    np.testing.assert_array_equal(sub.perm, small_index.perm[rows])
+    # intra edges stay within-cell, so the remap is lossless: every local
+    # edge maps back to the original global edge
+    li = np.arange(sub.n)
+    for col_ in range(sub.intra_adj.shape[1]):
+        e = sub.intra_adj[:, col_]
+        ok = e >= 0
+        np.testing.assert_array_equal(
+            rows[e[ok]], small_index.intra_adj[rows[ok], col_])
+    # cell CSR consistent
+    assert sub.n_cells == len(pl.shard_cells[0])
+    np.testing.assert_array_equal(np.diff(sub.cell_start),
+                                  np.diff(small_index.cell_start)
+                                  [pl.shard_cells[0]])
+
+
+def test_assign_cells_rebalances_replicated(small_index):
+    pl = plan_placement(small_index, ShardSpec(n_shards=2, replicate_hot=1))
+    hot = int(np.nonzero(pl.replicated)[0][0])
+    S = small_index.n_cells
+    # every row wants only the hot cell -> it must go to the least-loaded
+    # shard, and the assignment stays deterministic
+    inc = np.zeros((8, S), bool)
+    inc[:, hot] = True
+    a1, hits1 = assign_cells(inc, pl)
+    a2, hits2 = assign_cells(inc, pl)
+    np.testing.assert_array_equal(a1, a2)
+    assert hits1 == hits2
+    # non-replicated cells always serve at home
+    rest = ~pl.replicated
+    np.testing.assert_array_equal(a1[rest], pl.owner[rest])
+
+
+# ---------------------------------------------------------------------------
+# id parity (incore) on 1/2/4 shards, one device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_incore_id_parity(small_collection, small_queries, n_shards):
+    wl = small_queries
+    ref = small_collection.search(wl.q, filters=(wl.lo, wl.hi), params=PP,
+                                  engine="incore")
+    col = _sharded(small_collection, n_shards)
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), params=PP,
+                     engine="incore")
+    np.testing.assert_array_equal(ref.ids, res.ids)
+    np.testing.assert_allclose(ref.distances, res.distances)
+    assert res.stats.sharded and res.stats.n_shards == n_shards
+    assert len(res.stats.shards) == n_shards
+
+
+def test_incore_parity_with_replication(small_collection, small_queries):
+    wl = small_queries
+    ref = small_collection.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    col = _sharded(small_collection,
+                   ShardSpec(n_shards=2, replicate_hot=2))
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    np.testing.assert_array_equal(ref.ids, res.ids)
+    # the broad workload re-homes at least one replicated incidence
+    assert res.stats.replicated_cells == 2
+    assert res.stats.replica_hits >= 0
+    assert sum(s.replica_hits for s in res.stats.shards) \
+        == res.stats.replica_hits
+
+
+def test_disjunctive_qmap_parity(small_collection, small_data):
+    v, a = small_data
+    med, hi_q = np.quantile(a[:, 0], (0.5, 0.8)).astype(np.float32)
+    filt = (F("price") <= med) | (F("price") >= hi_q)
+    q = v[:16] + 0.01
+    ref = small_collection.search(q, filters=filt, params=PP)
+    col = _sharded(small_collection, 4)
+    res = col.search(q, filters=filt, params=PP)
+    np.testing.assert_array_equal(ref.ids, res.ids)
+    assert res.stats.planner["n_boxes"] >= len(q)
+    assert res.stats["n_boxes"] == res.stats.planner["n_boxes"]
+
+
+def test_search_many_parity(small_collection, small_queries):
+    wl = small_queries
+    reqs = [(wl.q[:4], (wl.lo[:4], wl.hi[:4]), 5),
+            (wl.q[4:10], (wl.lo[4:10], wl.hi[4:10]), 10)]
+    refs = small_collection.search_many(reqs, params=PP)
+    outs = _sharded(small_collection, 2).search_many(reqs, params=PP)
+    for r, o in zip(refs, outs):
+        np.testing.assert_array_equal(r.ids, o.ids)
+
+
+# ---------------------------------------------------------------------------
+# recall parity (hybrid / ooc)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["hybrid", "ooc"])
+def test_streamed_recall_parity(small_collection, small_queries,
+                                small_truth, mode):
+    wl = small_queries
+    gt = small_truth[0]
+    ref = small_collection.search(wl.q, filters=(wl.lo, wl.hi), k=10,
+                                  engine=mode)
+    col = _sharded(small_collection, 2)
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), k=10, engine=mode)
+    assert res.recall(gt) >= ref.recall(gt) - 0.02
+    assert res.stats.engine == mode and res.stats.sharded
+    assert res.stats.total_active > 0
+
+
+# ---------------------------------------------------------------------------
+# mutation reaches the owning shard
+# ---------------------------------------------------------------------------
+
+def test_mutation_reaches_owning_shard(small_collection, small_data):
+    v, a = small_data
+    col = _sharded(small_collection, 2)
+    qv = v[7:8] + 0.001
+    base = col.search(qv, k=3, params=PP)
+    new_ids = col.insert(qv, a[7:8])          # buffered, searchable now
+    res = col.search(qv, k=3, params=PP)
+    assert new_ids[0] in res.ids[0]
+    n_flushed = col.flush()                   # spliced into the owning cell
+    assert n_flushed == 1
+    res = col.search(qv, k=3, params=PP)
+    assert new_ids[0] in res.ids[0]
+    assert col.delete([int(new_ids[0])]) == 1  # tombstoned on every shard
+    res = col.search(qv, k=3, params=PP)
+    assert new_ids[0] not in res.ids[0]
+    np.testing.assert_array_equal(res.ids, base.ids)
+
+
+def test_straggler_monitor_wired(small_collection, small_queries):
+    wl = small_queries
+    col = _sharded(small_collection, 2)
+    for _ in range(3):
+        col.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    eng = col._sharded
+    assert isinstance(eng, ShardedEngine)
+    assert sum(eng.straggler._count) > 0      # per-shard walls recorded
+    assert eng.stragglers() == []             # one host, no stragglers
+
+
+# ---------------------------------------------------------------------------
+# planner introspection
+# ---------------------------------------------------------------------------
+
+def test_shard_routing_introspection(small_collection, small_queries):
+    wl = small_queries
+    plan = plan_queries((wl.lo, wl.hi), small_collection.schema,
+                        len(wl.q))
+    info = shard_routing(plan, small_collection.index, 2)
+    assert info["n_shards"] == 2 and info["n_boxes"] == len(wl.q)
+    assert len(info["shards"]) == 2
+    assert sum(s["total_active"] for s in info["shards"]) > 0
+    assert info["balance"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# API redesign: EngineStats, deprecated aliases, npz round-trip
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_typed(small_collection, small_queries):
+    wl = small_queries
+    res = small_collection.search(wl.q, filters=(wl.lo, wl.hi))
+    st = res.stats
+    assert isinstance(st, EngineStats)
+    assert st.engine == "incore" and st.n_rows == len(wl.q)
+    assert st.n_dense + st.n_itinerary + st.n_global == len(wl.q)
+    # mapping access stays alive through the transition
+    assert st["engine"] == "incore"
+    assert st.get("missing", 42) == 42
+    assert "engine" in st and "cache" not in st
+    d = st.to_dict()
+    assert d["engine"] == "incore" and "hit_rate" not in d
+    # raw dicts coerce on construction (engines hand Collection dicts)
+    qr = QueryResult(ids=res.ids, distances=res.distances,
+                     stats={"engine": "hybrid", "n_rows": 3,
+                            "made_up_key": 7})
+    assert qr.stats.engine == "hybrid"
+    assert qr.stats.extras["made_up_key"] == 7
+    assert qr.stats["made_up_key"] == 7
+
+
+def test_engine_stats_sharded_fields(small_collection, small_queries):
+    wl = small_queries
+    col = _sharded(small_collection, ShardSpec(n_shards=2, replicate_hot=1))
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    st = res.stats
+    assert st.sharded and st.n_shards == 2
+    assert all(isinstance(s, ShardStats) for s in st.shards)
+    assert sum(s.total_active for s in st.shards) == st.total_active
+    d = st.to_dict()
+    assert d["sharded"] and len(d["shards"]) == 2
+    assert isinstance(d["shards"][0], dict)
+
+
+def test_legacy_mode_aliases_warn(small_collection, small_queries):
+    wl = small_queries
+    with pytest.warns(DeprecationWarning, match="in_core"):
+        small_collection.search(wl.q[:2], engine="in_core")
+    with pytest.warns(DeprecationWarning, match="out_of_core"):
+        Collection(index=small_collection.index,
+                   schema=small_collection.schema, mode="out_of_core")
+
+
+def test_npz_v4_roundtrips_shard_spec(tmp_path, small_collection,
+                                      small_queries):
+    wl = small_queries
+    spec = ShardSpec(n_shards=2, replicate_hot=1, balance_by="rows")
+    col = Collection(index=small_collection.index,
+                     schema=small_collection.schema, shards=spec)
+    path = str(tmp_path / "sharded.npz")
+    col.save(path)
+    col2 = Collection.load(path)
+    assert col2.shards == spec
+    ref = col.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    res = col2.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    np.testing.assert_array_equal(ref.ids, res.ids)
+    # explicit shards=None override disables the saved spec
+    col3 = Collection.load(path, shards=None)
+    assert col3.shards is None
+    # and an int override re-shards
+    col4 = Collection.load(path, shards=4)
+    assert col4.shards == ShardSpec(n_shards=4)
+
+
+def test_npz_v3_files_still_load(tmp_path, small_collection,
+                                 small_queries):
+    """Regression: a pre-mesh (format v3, no shards key) file loads with
+    sharding disabled and identical results."""
+    wl = small_queries
+    path = str(tmp_path / "v3.npz")
+    small_collection.save(path)
+    with np.load(path, allow_pickle=False) as z:
+        payload = {name: z[name] for name in z.files}
+    meta = json.loads(bytes(payload["meta_json"].tobytes()).decode())
+    assert meta["format_version"] == 4
+    meta["format_version"] = 3
+    meta.pop("shards", None)
+    payload["meta_json"] = np.frombuffer(json.dumps(meta).encode(),
+                                         dtype=np.uint8)
+    np.savez(path, **payload)
+    col = Collection.load(path)
+    assert col.shards is None
+    ref = small_collection.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    res = col.search(wl.q, filters=(wl.lo, wl.hi), params=PP)
+    np.testing.assert_array_equal(ref.ids, res.ids)
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 8 simulated devices (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.api import AttrSchema, Collection, ShardSpec
+from repro.core.types import GMGConfig, SearchParams
+from repro.data import make_dataset, make_queries
+
+v, a = make_dataset("deep", 3000, seed=0, m=3)
+cfg = GMGConfig(seg_per_attr=(2, 2, 2), intra_degree=12, n_clusters=16,
+                build_ef=48, dense_threshold=256)
+col = Collection.build(v, a, schema=AttrSchema(["x", "y", "z"]),
+                       config=cfg, seed=0)
+wl = make_queries(v, a, 24, 2, seed=3)
+pp = SearchParams(k=10, use_inter_edges=False, adaptive_global=False)
+ref = col.search(wl.q, filters=(wl.lo, wl.hi), params=pp)
+
+for n in (2, 4, 8):
+    sh = Collection(index=col.index, schema=col.schema,
+                    shards=ShardSpec(n_shards=n, replicate_hot=1))
+    res = sh.search(wl.q, filters=(wl.lo, wl.hi), params=pp)
+    assert np.array_equal(ref.ids, res.ids), f"id mismatch at n={n}"
+    st = res.stats
+    devices = {s.device for s in st.shards}
+    assert len(devices) == n, (n, devices)   # each shard on its own device
+    active = [s.total_active for s in st.shards if s.total_active]
+    bal = max(active) / (sum(active) / len(active))
+    print(f"n={n} balance={bal:.3f} replica_hits={st.replica_hits}")
+print("OK")
+"""
+
+
+def test_mesh_parity_on_8_simulated_devices():
+    """Acceptance: sharded ids bit-identical to single-device incore on
+    2/4/8 simulated devices, each shard pinned to its own device."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert "OK" in res.stdout, res.stdout + res.stderr
