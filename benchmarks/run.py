@@ -2,11 +2,17 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale smoke|full]
                                                [--only bench_build,...]
+                                               [--trace]
 
 Prints one CSV block per bench to stdout and writes both
 results/bench/<name>.csv and results/bench/<name>.json (the JSON carries
 rows + status + timing and is what CI uploads as an artifact and feeds
 to benchmarks.check_recall_gate).
+
+``--trace`` activates the obs span tracer (repro.obs) around each bench
+and drops a Perfetto-loadable Chrome trace under
+results/trace/<name>.trace.json — load it at https://ui.perfetto.dev;
+see docs/observability.md for the span taxonomy.
 """
 
 from __future__ import annotations
@@ -39,6 +45,8 @@ BENCHES = [
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+TRACE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "trace")
 
 
 def _jsonable(o):
@@ -68,6 +76,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--only", default="")
+    ap.add_argument("--trace", action="store_true",
+                    help="record obs spans per bench and write Perfetto "
+                         "JSON under results/trace/")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -77,13 +88,26 @@ def main() -> None:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
+        tracer = None
         try:
-            rows = mod.run(args.scale)
+            if args.trace:
+                from repro.obs.trace import Tracer, tracing
+                tracer = Tracer()
+                with tracing(tracer):
+                    rows = mod.run(args.scale)
+            else:
+                rows = mod.run(args.scale)
             status = "ok"
         except Exception as e:  # keep the harness going
             rows = [{"bench": name, "error": f"{type(e).__name__}: {e}"}]
             status = "FAIL"
         dt = time.time() - t0
+        if tracer is not None and tracer.spans:
+            from repro.obs.export import write_chrome_trace
+            path = os.path.join(TRACE_DIR, f"{name}.trace.json")
+            write_chrome_trace(tracer, path)
+            print(f"# trace: {os.path.relpath(path)} "
+                  f"({len(tracer.spans)} spans)")
         csv_text = rows_to_csv(rows)
         print(f"### {name} [{status}] ({dt:.1f}s)")
         print(csv_text)

@@ -64,14 +64,16 @@ execution engine per batch, so callers never touch ``build_gmg``,
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
-from typing import Mapping, Optional, Union
+import time
+from typing import Callable, Mapping, Optional, Union
 
 import numpy as np
 
 from repro.api.planner import plan_queries
-from repro.api.result import QueryResult
+from repro.api.result import EngineStats, QueryResult
 from repro.api.schema import AttrSchema
 from repro.core import gmg as gmg_mod
 from repro.core import mutable as mut_mod
@@ -80,6 +82,9 @@ from repro.core.runtime import CACHE_POLICIES as _CACHE_POLICIES
 from repro.core.runtime import RERANKS as _RERANKS
 from repro.core.shard import ShardSpec
 from repro.core.types import GMGConfig, GMGIndex, SearchParams
+from repro.obs.export import write_chrome_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, span, tracing
 
 # v4: + shard spec (mesh tier, ISSUE 9); v3: + append buffers,
 # tombstones, mutation epoch (ISSUE 5); older files still load (v3 with
@@ -173,7 +178,28 @@ class Collection:
         self._sel_est_for = None    # ... and the engine index it profiles
         self._sharded = None        # lazily-built ShardedEngine
         self._sharded_key = None    # (mode, spec, budget, policy, rerank)
-        self.last_stats: dict = {}
+        # typed per-pass counters (obs satellite, ISSUE 10): engines
+        # report raw dicts (themselves views over their obs registries),
+        # _execute_plan accumulates them and freezes one EngineStats per
+        # pass; `last_stats` is the dict-compat adapter over it
+        self._stats_acc: dict = {}
+        self.engine_stats = EngineStats()
+        # collection-level obs registry: search-pass + mutation-verb
+        # lifetime counters (the per-engine work counters live in each
+        # engine's own registry)
+        self.metrics = MetricsRegistry()
+
+    @property
+    def last_stats(self) -> dict:
+        """Raw stats dict of the last search pass — the one dict-compat
+        adapter over the typed :class:`~repro.api.result.EngineStats`
+        (``engine_stats``); keys are exactly what the engines reported."""
+        return self.engine_stats.raw_dict()
+
+    def _reset_stats(self) -> None:
+        """Never report a previous batch's stats."""
+        self._stats_acc = {}
+        self.engine_stats = EngineStats()
 
     # -- lifecycle: build ---------------------------------------------------
 
@@ -519,14 +545,16 @@ class Collection:
             raise ValueError(
                 f"{attr_arr.shape[1]} attribute columns vs schema of "
                 f"{len(self.schema)}")
-        mut = self._mutation()
-        cells = mut_mod.route_rows(self.index, attr_arr)
-        ids = mut.append(vectors, attr_arr, cells)
-        # cell maintenance: flush any cell whose buffer overflowed
-        counts = mut.pending_per_cell(self.index.n_cells)
-        over = np.nonzero(counts > int(self.buffer_rows_per_cell))[0]
-        if len(over):
-            self.flush(cells=[int(c) for c in over])
+        with span("collection.insert", rows=int(vectors.shape[0])):
+            mut = self._mutation()
+            cells = mut_mod.route_rows(self.index, attr_arr)
+            ids = mut.append(vectors, attr_arr, cells)
+            self.metrics.counter("insert_rows").inc(int(vectors.shape[0]))
+            # cell maintenance: flush any cell whose buffer overflowed
+            counts = mut.pending_per_cell(self.index.n_cells)
+            over = np.nonzero(counts > int(self.buffer_rows_per_cell))[0]
+            if len(over):
+                self.flush(cells=[int(c) for c in over])
         return ids
 
     def delete(self, ids) -> int:
@@ -548,25 +576,27 @@ class Collection:
         if ids.min() < 0 or ids.max() >= mut.next_id:
             bad = ids[(ids < 0) | (ids >= mut.next_id)]
             raise KeyError(f"unknown ids {bad[:8].tolist()}")
-        in_buf = np.isin(ids, mut.buf_ids)
-        rest = ids[~in_buf]
-        sorted_ids, rows = self._perm_lookup()
-        pos = np.searchsorted(sorted_ids, rest)
-        in_base = (pos < len(sorted_ids)) & (sorted_ids[np.minimum(
-            pos, len(sorted_ids) - 1)] == rest)
-        # pending buffered rows: physically dropped, no engine change
-        newly = int(in_buf.sum())
-        if newly:
-            mut.drop_buffered(~np.isin(mut.buf_ids, ids[in_buf]))
-        if in_base.any():
-            tomb = mut.ensure_tombstone(self.index.n)
-            target = rows[pos[in_base]]
-            fresh = ~tomb[target]
-            if fresh.any():
-                tomb[target[fresh]] = True
-                newly += int(fresh.sum())
-                mut.epoch += 1
-                self._refresh_engine_attrs()
+        with span("collection.delete", ids=int(ids.size)):
+            in_buf = np.isin(ids, mut.buf_ids)
+            rest = ids[~in_buf]
+            sorted_ids, rows = self._perm_lookup()
+            pos = np.searchsorted(sorted_ids, rest)
+            in_base = (pos < len(sorted_ids)) & (sorted_ids[np.minimum(
+                pos, len(sorted_ids) - 1)] == rest)
+            # pending buffered rows: physically dropped, no engine change
+            newly = int(in_buf.sum())
+            if newly:
+                mut.drop_buffered(~np.isin(mut.buf_ids, ids[in_buf]))
+            if in_base.any():
+                tomb = mut.ensure_tombstone(self.index.n)
+                target = rows[pos[in_base]]
+                fresh = ~tomb[target]
+                if fresh.any():
+                    tomb[target[fresh]] = True
+                    newly += int(fresh.sum())
+                    mut.epoch += 1
+                    self._refresh_engine_attrs()
+            self.metrics.counter("delete_rows").inc(newly)
         return newly
 
     def flush(self, cells=None, graph: str = "auto") -> int:
@@ -586,18 +616,21 @@ class Collection:
         n_flush = int(sel.sum())
         if n_flush == 0:
             return 0
-        new_index, old_to_new = mut_mod.flush_index(
-            self.index, mut.buf_vectors[sel], mut.buf_attrs[sel],
-            mut.buf_ids[sel], mut.buf_cells[sel],
-            seed=mut.epoch, graph_mode=graph)
-        if mut.tombstone is not None:
-            tomb2 = np.zeros(new_index.n, bool)
-            tomb2[old_to_new] = mut.tombstone
-            mut.tombstone = tomb2
-        self.index = new_index
-        mut.drop_buffered(~sel)
-        mut.epoch += 1
-        self._drop_engines()
+        with span("collection.flush", rows=n_flush):
+            new_index, old_to_new = mut_mod.flush_index(
+                self.index, mut.buf_vectors[sel], mut.buf_attrs[sel],
+                mut.buf_ids[sel], mut.buf_cells[sel],
+                seed=mut.epoch, graph_mode=graph)
+            if mut.tombstone is not None:
+                tomb2 = np.zeros(new_index.n, bool)
+                tomb2[old_to_new] = mut.tombstone
+                mut.tombstone = tomb2
+            self.index = new_index
+            mut.drop_buffered(~sel)
+            mut.epoch += 1
+            self._drop_engines()
+            self.metrics.counter("flushes").inc()
+            self.metrics.counter("flush_rows").inc(n_flush)
         return n_flush
 
     def compact(self, seed: int = 0) -> dict:
@@ -608,11 +641,14 @@ class Collection:
         arena's slot quantum. Returns a summary dict."""
         mut = self._mutation()
         dropped, pending = mut.deleted_rows, mut.pending_rows
-        self.index = mut_mod.compact_index(self.index, mut, seed=seed)
-        mut.drop_buffered(np.zeros(mut.pending_rows, bool))
-        mut.tombstone = None
-        mut.epoch += 1
-        self._drop_engines()
+        with span("collection.compact", reclaimed=dropped,
+                  flushed=pending):
+            self.index = mut_mod.compact_index(self.index, mut, seed=seed)
+            mut.drop_buffered(np.zeros(mut.pending_rows, bool))
+            mut.tombstone = None
+            mut.epoch += 1
+            self._drop_engines()
+            self.metrics.counter("compacts").inc()
         return {"rows": self.index.n, "reclaimed": dropped,
                 "flushed": pending, "epoch": mut.epoch}
 
@@ -631,8 +667,38 @@ class Collection:
         all_ids = np.concatenate([ids, bi], axis=0)
         all_d = np.concatenate([d, bd], axis=0)
         qmap = np.concatenate([np.arange(B, dtype=np.int64), plan.qmap])
-        self.last_stats["buffered_rows"] = mut.pending_rows
-        return merge_segment_topk(all_ids, all_d, qmap, B, k)
+        self._stats_acc["buffered_rows"] = mut.pending_rows
+        with span("collection.fold_buffer", rows=mut.pending_rows):
+            return merge_segment_topk(all_ids, all_d, qmap, B, k)
+
+    # -- observability ------------------------------------------------------
+
+    @contextlib.contextmanager
+    def trace(self, path: Optional[str] = None, *,
+              sync: bool = False,
+              clock: Callable[[], float] = time.perf_counter,
+              tracer: Optional[Tracer] = None):
+        """Record every span the stack emits for the duration of the
+        block — engine waves, cache uploads, per-shard launches, buffer
+        folds — and (with ``path``) write a Perfetto-loadable Chrome
+        trace JSON on exit::
+
+            with col.trace("results/trace/search.trace.json"):
+                col.search(q, filters=F("price") <= 50)
+
+        ``sync=True`` blocks on each span's attached device arrays at
+        span close, attributing async device work to the span that
+        launched it (slower, but the span tree then accounts for the
+        true device timeline). ``clock`` injects a monotonic clock (the
+        serving harness passes its ``VirtualClock``). Yields the
+        :class:`~repro.obs.trace.Tracer` for programmatic inspection.
+        See ``docs/observability.md``."""
+        tr = tracer if tracer is not None else Tracer(clock=clock,
+                                                      sync=sync)
+        with tracing(tr):
+            yield tr
+        if path is not None:
+            write_chrome_trace(tr, path)
 
     # -- search -------------------------------------------------------------
 
@@ -659,16 +725,18 @@ class Collection:
         if params is None:
             params = SearchParams(k=k, ef=ef)
         which = self._resolve_engine(engine)
-        self.last_stats = {}          # never report a previous batch's stats
+        self._reset_stats()
         B = q.shape[0]
         # plan before the empty-batch return so invalid filters (unknown
         # attribute, bad shapes, DNF blowup) raise regardless of B
         plan = plan_queries(filters, self.schema, B)
         if B == 0:
             return QueryResult.empty(params.k, engine=which)
-        ids, d = self._execute_plan(q, plan, params, which)
+        with span("collection.search", engine=which, rows=B, k=params.k):
+            ids, d = self._execute_plan(q, plan, params, which)
+        self.metrics.counter("searches").inc()
         return QueryResult(ids=ids, distances=d, engine=which,
-                           stats=dict(self.last_stats))
+                           stats=self.engine_stats)
 
     def _execute_plan(self, q: np.ndarray, plan, params: SearchParams,
                       which: str, route_k=None):
@@ -686,18 +754,23 @@ class Collection:
         B = plan.n_queries
         if not plan.trivial:
             # box-batched disjunctive pass
-            self.last_stats["planner"] = dict(plan.stats)
+            self._stats_acc["planner"] = dict(plan.stats)
             if plan.n_boxes == 0:     # every branch of every query is empty
+                self.engine_stats = EngineStats.from_raw(self._stats_acc)
                 return (np.full((B, params.k), -1, np.int64),
                         np.full((B, params.k), np.inf, np.float32))
-        plan, routes = self._plan_routes(plan, params, route_k=route_k)
+        with span("collection.plan", boxes=plan.n_boxes):
+            plan, routes = self._plan_routes(plan, params, route_k=route_k)
         if plan.trivial:
             ids, d = eng.search(q, plan.lo, plan.hi, params, routes=routes)
         else:
             ids, d = eng.search(q[plan.qmap], plan.lo, plan.hi, params,
                                 qmap=plan.qmap, n_queries=B, routes=routes)
-        self.last_stats.update(eng.stats)
+        self._stats_acc.update(eng.stats)
         ids, d = self._fold_buffer(q, plan, ids, d, params.k)
+        # freeze the typed per-pass view AFTER the buffer fold so
+        # buffered_rows (when any) is part of the reported keys
+        self.engine_stats = EngineStats.from_raw(self._stats_acc)
         return ids, d
 
     def search_many(self, requests, ef: Optional[int] = None,
@@ -725,7 +798,7 @@ class Collection:
         requests = [(np.atleast_2d(np.asarray(q, np.float32)), f, int(kk))
                     for (q, f, kk) in requests]
         which = self._resolve_engine(engine)
-        self.last_stats = {}
+        self._reset_stats()
         if not requests:
             return []
         plans = [plan_queries(f, self.schema, q.shape[0])
@@ -747,9 +820,12 @@ class Collection:
         # as its solo disjunctive/buffered call would produce them
         if plan.trivial:
             plan = dataclasses.replace(plan, trivial=False)
-        ids, d = self._execute_plan(q_all, plan, run_params, which,
-                                    route_k=route_k)
-        stats = dict(self.last_stats)
+        with span("collection.search_many", requests=len(requests),
+                  engine=which, rows=int(q_all.shape[0])):
+            ids, d = self._execute_plan(q_all, plan, run_params, which,
+                                        route_k=route_k)
+        self.metrics.counter("searches").inc()
+        stats = self.engine_stats
         out = []
         for r, (_, _, kk) in enumerate(requests):
             s, e = int(q_offsets[r]), int(q_offsets[r + 1])

@@ -86,27 +86,33 @@ class EngineStats:
     shards: tuple = ()                 # per-shard ShardStats
     # anything mode-specific that has no typed slot yet
     extras: dict = dataclasses.field(default_factory=dict)
+    # keys the engine actually reported this pass (from_raw records
+    # them); raw_dict() filters to these so dict-compat consumers see
+    # exactly the engine's dict, not typed defaults for other modes
+    reported: tuple = ()
 
     @classmethod
     def from_raw(cls, raw: dict) -> "EngineStats":
         """Build from an engine's raw stats dict; unrecognized keys land
         in ``extras`` so nothing an engine reports is ever dropped."""
         known = {f.name for f in dataclasses.fields(cls)} - {"extras",
-                                                             "shards"}
+                                                             "shards",
+                                                             "reported"}
         kw = {k: v for k, v in raw.items() if k in known}
         shards = tuple(
             s if isinstance(s, ShardStats) else ShardStats.from_raw(s)
             for s in raw.get("shards", ()))
         extras = {k: v for k, v in raw.items()
                   if k not in known and k != "shards"}
-        return cls(shards=shards, extras=extras, **kw)
+        return cls(shards=shards, extras=extras,
+                   reported=tuple(raw.keys()), **kw)
 
     def to_dict(self) -> dict:
         """Flat dict for benches / JSON export: typed fields (Nones and
         empty mesh fields dropped), shards as dicts, extras merged."""
         out = {}
         for f in dataclasses.fields(self):
-            if f.name in ("extras", "shards"):
+            if f.name in ("extras", "shards", "reported"):
                 continue
             v = getattr(self, f.name)
             if v is None:
@@ -118,6 +124,16 @@ class EngineStats:
             out["shards"] = [s.to_dict() for s in self.shards]
         out.update(self.extras)
         return out
+
+    def raw_dict(self) -> dict:
+        """to_dict() filtered to the keys the engine reported — the
+        exact dict-compat view ``Collection.last_stats`` exposes (typed
+        defaults for other modes never leak in)."""
+        if not self.reported:
+            return {}
+        d = self.to_dict()
+        rep = set(self.reported)
+        return {k: v for k, v in d.items() if k in rep}
 
     # -- transitional mapping access ------------------------------------
     def __getitem__(self, key: str):

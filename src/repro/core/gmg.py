@@ -17,6 +17,7 @@ from repro.core import grid as grid_mod
 from repro.core import graph as graph_mod
 from repro.core import intercell, ordering, quantize
 from repro.core.types import GMGConfig, GMGIndex
+from repro.obs.trace import local_trace, span
 
 log = logging.getLogger(__name__)
 
@@ -53,55 +54,64 @@ def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
     m = attrs.shape[1]
     if m < config.p:
         raise ValueError(f"need >= p={config.p} attributes, got {m}")
-    t0 = time.perf_counter()
 
-    # --- Step 1: attribute partitioning (Alg. 1 lines 1-4) ---
-    seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi = \
-        grid_mod.build_grid(attrs.astype(np.float64), config.seg_per_attr)
-    vectors = np.ascontiguousarray(vectors[order], dtype=np.float32)
-    attrs_s = np.ascontiguousarray(attrs[order], dtype=np.float32)
-    cell_of = cell_of[order]
-    perm = order.astype(np.int64)
-    S = config.n_cells
-    t_grid = time.perf_counter()
+    # phase accounting is span-derived (obs, ISSUE 10): local_trace
+    # records the build.* spans even with no user trace active, and
+    # nests them into the user's trace when one is (Collection.trace
+    # around a build shows the same phases Table 2 reports)
+    with local_trace() as tr:
+        mark = tr.mark()
 
-    # --- Step 2: intra-cell graphs (Alg. 1 lines 6-9) ---
-    intra = -np.ones((n, config.intra_degree), dtype=np.int32)
-    for c in range(S):
-        s, e = int(cell_start[c]), int(cell_start[c + 1])
-        if e <= s:
-            continue
-        adj_local = cell_graph(vectors[s:e], config, seed=seed + c)
-        intra[s:e] = np.where(adj_local >= 0, adj_local + s, -1)
-    t_intra = time.perf_counter()
+        # --- Step 1: attribute partitioning (Alg. 1 lines 1-4) ---
+        with span("build.grid", n=n):
+            seg_bounds, cell_of, order, cell_start, cell_lo, cell_hi = \
+                grid_mod.build_grid(attrs.astype(np.float64),
+                                    config.seg_per_attr)
+            vectors = np.ascontiguousarray(vectors[order], dtype=np.float32)
+            attrs_s = np.ascontiguousarray(attrs[order], dtype=np.float32)
+            cell_of = cell_of[order]
+            perm = order.astype(np.int64)
+            S = config.n_cells
 
-    # --- Step 3: inter-cell edges (Alg. 1 lines 10-12) ---
-    inter = intercell.build_inter_edges(
-        vectors, attrs_s, intra, cell_start, config.inter_degree,
-        ef=config.search_ef, seed=seed)
-    t_inter = time.perf_counter()
+        # --- Step 2: intra-cell graphs (Alg. 1 lines 6-9) ---
+        with span("build.intra", cells=S):
+            intra = -np.ones((n, config.intra_degree), dtype=np.int32)
+            for c in range(S):
+                s, e = int(cell_start[c]), int(cell_start[c + 1])
+                if e <= s:
+                    continue
+                adj_local = cell_graph(vectors[s:e], config, seed=seed + c)
+                intra[s:e] = np.where(adj_local >= 0, adj_local + s, -1)
 
-    # --- ordering sketch (Section 4.2 offline half) ---
-    centroids = ordering.kmeans(vectors, config.n_clusters,
-                                iters=config.kmeans_iters, seed=seed)
-    hist = ordering.build_histogram(vectors, cell_of, centroids, S)
-    t_order = time.perf_counter()
+        # --- Step 3: inter-cell edges (Alg. 1 lines 10-12) ---
+        with span("build.inter", degree=config.inter_degree):
+            inter = intercell.build_inter_edges(
+                vectors, attrs_s, intra, cell_start, config.inter_degree,
+                ef=config.search_ef, seed=seed)
 
-    # --- per-attribute CDF grid (selectivity estimator for the adaptive
-    # dense path; covers ALL m attributes, not just the p partitioned) ---
-    attr_quantiles = attr_quantile_grid(attrs_s)
+        # --- ordering sketch (Section 4.2 offline half) ---
+        with span("build.order", clusters=config.n_clusters):
+            centroids = ordering.kmeans(vectors, config.n_clusters,
+                                        iters=config.kmeans_iters,
+                                        seed=seed)
+            hist = ordering.build_histogram(vectors, cell_of, centroids, S)
 
-    # --- quantized resident copy (Section 5.1) ---
-    vq = vscale = None
-    if config.quantize:
-        vq, vscale = quantize.quantize(vectors)
-    t_end = time.perf_counter()
+        # --- per-attribute CDF grid + quantized resident copy (§5.1);
+        # one phase, matching the historical "quant" log bucket ---
+        with span("build.quantize", quantize=config.quantize):
+            attr_quantiles = attr_quantile_grid(attrs_s)
+            vq = vscale = None
+            if config.quantize:
+                vq, vscale = quantize.quantize(vectors)
+
+        phases = build_phase_seconds(tr.spans_since(mark))
 
     if verbose:
         log.info("GMG build n=%d S=%d: grid %.2fs intra %.2fs inter %.2fs "
-                 "order %.2fs quant %.2fs", n, S, t_grid - t0,
-                 t_intra - t_grid, t_inter - t_intra, t_order - t_inter,
-                 t_end - t_order)
+                 "order %.2fs quant %.2fs", n, S,
+                 phases.get("grid", 0.0), phases.get("intra", 0.0),
+                 phases.get("inter", 0.0), phases.get("order", 0.0),
+                 phases.get("quantize", 0.0))
 
     return GMGIndex(
         config=config, vectors=vectors, attrs=attrs_s, perm=perm,
@@ -114,14 +124,33 @@ def build_gmg(vectors: np.ndarray, attrs: np.ndarray,
         vq=vq, vscale=vscale)
 
 
+def build_phase_seconds(spans) -> dict:
+    """{phase: seconds} over ``build.*`` spans (names with the
+    ``build.`` prefix stripped) — the thin dict view build_gmg's verbose
+    log and :func:`build_timings` both read."""
+    out: dict = {}
+    for s in spans:
+        if s.name.startswith("build."):
+            phase = s.name[len("build."):]
+            out[phase] = out.get(phase, 0.0) + s.duration
+    return out
+
+
 def build_timings(vectors: np.ndarray, attrs: np.ndarray,
                   config: GMGConfig | None = None, seed: int = 0) -> dict:
-    """Table-2 style build accounting: wall time per phase + sizes."""
+    """Table-2 style build accounting: wall time per phase + sizes.
+    Phase walls are the build.* span durations (obs layer) — the same
+    numbers a ``Collection.trace`` around the build exports."""
     config = config or GMGConfig()
     t0 = time.perf_counter()
-    index = build_gmg(vectors, attrs, config, seed=seed)
+    with local_trace() as tr:
+        mark = tr.mark()
+        index = build_gmg(vectors, attrs, config, seed=seed)
+        phases = build_phase_seconds(tr.spans_since(mark))
     wall = time.perf_counter() - t0
     out = {"build_seconds": wall}
+    for phase in ("grid", "intra", "inter", "order", "quantize"):
+        out[f"{phase}_seconds"] = phases.get(phase, 0.0)
     out.update(index.nbytes())
     out["n"] = index.n
     out["n_cells"] = index.n_cells

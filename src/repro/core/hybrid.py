@@ -70,6 +70,8 @@ from repro.core import selectivity as sel_mod
 from repro.core import scheduler as sched_mod
 from repro.core.runtime import CandidatePool, CellCache, CellRuntime
 from repro.core.types import GMGIndex, SearchParams
+from repro.obs.metrics import MetricsRegistry, PassMetrics
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -87,10 +89,15 @@ class HybridEngine:
             raise ValueError(f"unknown rerank {self.rerank!r}; "
                              f"expected one of {rt_mod.RERANKS}")
         self.rt = CellRuntime(self.index, storage="int8")
+        # one obs registry per engine: the cache's lifetime counters live
+        # in it, so this engine's per-pass stats are deltas over the very
+        # objects the cache increments (single-source, ISSUE 10)
+        self.metrics = MetricsRegistry()
         self.cache = CellCache(self.index,
                                budget_bytes=self.cache_budget_bytes,
                                n_slots=self.n_slots,
-                               policy=self.cache_policy)
+                               policy=self.cache_policy,
+                               registry=self.metrics)
         self.stats: dict = {}
 
     def refresh_index(self, index: GMGIndex) -> None:
@@ -161,27 +168,24 @@ class HybridEngine:
 
         pool = CandidatePool(B, ef)
         key = jax.random.PRNGKey(params.seed)
-        hits = misses = 0
         n_waves = total_active = 0
         est_err = None
-        # per-pass deltas off the cache's lifetime counters; the
-        # bytes_uploaded delta (not summed ensure() returns) is what
-        # transfer_bytes reports, so prefetch uploads count as the real
-        # H2D traffic they are
-        up0 = self.cache.bytes_uploaded
-        pf0 = self.cache.prefetches
-        pfh0 = self.cache.prefetch_hits
-        pfb0 = self.cache.prefetch_bytes
+        # per-pass deltas off the cache's lifetime counters (one obs
+        # registry shared with the cache); the bytes_uploaded delta (not
+        # summed ensure() returns) is what transfer_bytes reports, so
+        # prefetch uploads count as the real H2D traffic they are
+        snap = self.metrics.snapshot()
 
         # dense route: one fused int8 masked scan fills the pool — no
         # wave scheduling, no cache traffic; the shared exact fp32
         # re-rank below finishes these rows like any traversed row
         dense_rows = np.nonzero(use_dense)[0]
         if len(dense_rows) > 0:
-            ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
-                self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
-                inc[dense_rows], ef)
-            pool.merge(dense_rows, ids_d, d_d)
+            with span("hybrid.dense", rows=len(dense_rows)):
+                ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
+                    self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
+                    inc[dense_rows], ef)
+                pool.merge(dense_rows, ids_d, d_d)
             est_err = float(np.mean(
                 np.abs(routes.est_rows[dense_rows] - n_qual)
                 / np.maximum(n_qual, 1.0)))
@@ -237,70 +241,86 @@ class HybridEngine:
                 if len(act) > 0:
                     runnable.append((cells, act))
             for wi, (cells, act) in enumerate(runnable):
-                got = self.cache.ensure(cells)
-                hits += got["hits"]
-                misses += got["misses"]
-                graph = self.rt.cached_graph(self.cache)
+                with span("hybrid.wave", wave=wi, cells=len(cells),
+                          active=len(act), ef=ef_run):
+                    self.cache.ensure(cells)
+                    graph = self.rt.cached_graph(self.cache)
 
-                # per-active-query itinerary over *global* cell ids;
-                # vectorized: selected cells sort by rank (stable, so rank
-                # ties keep ascending cell order), unselected pad with -1
-                cells_arr = np.asarray(cells, np.int64)
-                sel = inc_b[np.ix_(act, cells_arr)]          # (n_act, W)
-                key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
-                                    np.iinfo(np.int32).max)
-                ordr = np.argsort(key_rank, axis=1, kind="stable")
-                itin = np.full((len(act), W), -1, np.int32)
-                itin[:, :len(cells)] = np.where(
-                    np.take_along_axis(sel, ordr, axis=1),
-                    cells_arr[ordr], -1).astype(np.int32)
+                    # per-active-query itinerary over *global* cell ids;
+                    # vectorized: selected cells sort by rank (stable, so
+                    # rank ties keep ascending cell order), unselected pad
+                    # with -1
+                    cells_arr = np.asarray(cells, np.int64)
+                    sel = inc_b[np.ix_(act, cells_arr)]      # (n_act, W)
+                    key_rank = np.where(sel, rank[np.ix_(act, cells_arr)],
+                                        np.iinfo(np.int32).max)
+                    ordr = np.argsort(key_rank, axis=1, kind="stable")
+                    itin = np.full((len(act), W), -1, np.int32)
+                    itin[:, :len(cells)] = np.where(
+                        np.take_along_axis(sel, ordr, axis=1),
+                        cells_arr[ordr], -1).astype(np.int32)
 
-                key, sub = jax.random.split(key)
-                # carried pool seeds directly: ids are global, no remap
-                ids_d, d_d, real = self.rt.run_launch(
-                    graph, q[act], lo[act], hi[act], sub,
-                    k=max(k, min(ef, 2 * k)), ef=ef_run,
-                    cell_order=itin, seeds=pool.ids[act],
-                    packed_visited=True, pool_reuse=params.pool_reuse)
-                if wi + 1 < len(runnable):
-                    self.cache.prefetch(runnable[wi + 1][0])
-                pool.merge(act, np.asarray(ids_d[:real]),
-                           np.asarray(d_d[:real]))
+                    key, sub = jax.random.split(key)
+                    # this span covers launch -> prefetch -> block, so the
+                    # cache.prefetch/cache.upload child spans sit inside
+                    # the in-flight traversal's window — the DMA/compute
+                    # overlap, visible as overlapping spans in Perfetto
+                    with span("hybrid.traverse", active=len(act),
+                              ef=ef_run) as tsp:
+                        # carried pool seeds directly: global ids, no remap
+                        ids_d, d_d, real = self.rt.run_launch(
+                            graph, q[act], lo[act], hi[act], sub,
+                            k=max(k, min(ef, 2 * k)), ef=ef_run,
+                            cell_order=itin, seeds=pool.ids[act],
+                            packed_visited=True,
+                            pool_reuse=params.pool_reuse)
+                        tsp.attach((ids_d, d_d))
+                        if wi + 1 < len(runnable):
+                            self.cache.prefetch(runnable[wi + 1][0])
+                        pool.merge(act, np.asarray(ids_d[:real]),
+                                   np.asarray(d_d[:real]))
 
-        self.stats = {
-            "n_waves": n_waves,
-            "total_active": total_active,
-            "cache_hits": hits,
-            "cache_misses": misses,
-            "hit_rate": hits / max(hits + misses, 1),
-            "transfer_bytes": self.cache.bytes_uploaded - up0,
-            "prefetches": self.cache.prefetches - pf0,
-            "prefetch_hits": self.cache.prefetch_hits - pfh0,
-            "prefetch_bytes": self.cache.prefetch_bytes - pfb0,
-            "prefetch_hit_rate": ((self.cache.prefetch_hits - pfh0)
-                                  / max(self.cache.prefetches - pf0, 1)),
-            "n_slots": self.cache.n_slots,
-            "cache_policy": self.cache.policy,
-            "resident_cells": len(self.cache.resident_cells()),
-            "rerank": self.rerank,
-            # flat keys above are this pass's deltas; the nested block is
-            # the cache's lifetime view (CellCache.stats), which a serving
-            # front-end can difference across ticks
-            "cache": self.cache.stats(),
-        }
-        self.stats.update(routes.counts())
+        # per-pass stats as a view over the obs registry: work counters
+        # fold into lifetime totals through PassMetrics, cache counters
+        # are this pass's deltas of the registry objects the cache itself
+        # incremented — one source, two projections (ISSUE 10)
+        dlt = self.metrics.delta(snap)
+        pm = PassMetrics(self.metrics)
+        pm.count("n_waves", n_waves)
+        pm.count("total_active", total_active)
+        hits, misses = dlt["cache_hits"], dlt["cache_misses"]
+        pm.put("cache_hits", hits)
+        pm.put("cache_misses", misses)
+        pm.set("hit_rate", hits / max(hits + misses, 1))
+        pm.count("transfer_bytes", dlt["bytes_uploaded"])
+        pm.put("prefetches", dlt["prefetches"])
+        pm.put("prefetch_hits", dlt["prefetch_hits"])
+        pm.put("prefetch_bytes", dlt["prefetch_bytes"])
+        pm.set("prefetch_hit_rate",
+               dlt["prefetch_hits"] / max(dlt["prefetches"], 1))
+        pm.put("n_slots", self.cache.n_slots)
+        pm.put("cache_policy", self.cache.policy)
+        pm.set("resident_cells", len(self.cache.resident_cells()))
+        pm.put("rerank", self.rerank)
+        # flat keys above are this pass's deltas; the nested block is
+        # the cache's lifetime view (CellCache.stats), which a serving
+        # front-end can difference across ticks
+        pm.put("cache", self.cache.stats())
+        pm.update_counts(routes.counts())
         if est_err is not None:
-            self.stats["est_rel_err_dense"] = est_err
+            pm.set("est_rel_err_dense", est_err)
+        self.stats = pm.stats()
 
         # (4) exact re-rank of survivors: fused on device by default,
         # host loop for the legacy/ablation path — bit-identical ids
-        if self.rerank == "device":
-            out_i, out_d = rt_mod.exact_rerank_device(
-                idx, self.rt.attrs_dev, pool, q, lo, hi, k,
-                cfg.rerank_mult)
-        else:
-            out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
-                                               cfg.rerank_mult)
+        with span("hybrid.rerank", rerank=self.rerank):
+            if self.rerank == "device":
+                out_i, out_d = rt_mod.exact_rerank_device(
+                    idx, self.rt.attrs_dev, pool, q, lo, hi, k,
+                    cfg.rerank_mult)
+            else:
+                out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                                   cfg.rerank_mult)
         if qmap is not None:
             self.stats["n_boxes"] = B
             out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,

@@ -58,6 +58,8 @@ from repro.core import scheduler as sched_mod
 from repro.core.runtime import CandidatePool, CellRuntime, round_up
 from repro.core.traversal import GraphView
 from repro.core.types import GMGIndex, SearchParams
+from repro.obs.metrics import MetricsRegistry, PassMetrics
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -153,6 +155,9 @@ class OutOfCoreEngine:
         self.vscale = self.rt.store.vscale
         self.attrs_dev = self.rt.attrs_dev          # attrs ride along (f32)
         self.stats: dict = {}
+        # per-engine obs registry: per-pass stats dicts are views over
+        # increments into it (PassMetrics, ISSUE 10)
+        self.metrics = MetricsRegistry()
 
     def refresh_index(self, index: GMGIndex) -> None:
         """Delete path (core.mutable): adopt a same-layout index whose
@@ -239,10 +244,12 @@ class OutOfCoreEngine:
         # fp32 re-rank below finishes them like any streamed row
         dense_rows = np.nonzero(use_dense)[0]
         if len(dense_rows) > 0:
-            ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
-                self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
-                inc[dense_rows], ef)
-            pool.merge(dense_rows, ids_d, d_d)
+            with span("ooc.dense", rows=len(dense_rows)) as dsp:
+                ids_d, d_d, n_qual = rt_mod.masked_dense_scan(
+                    self.rt, q[dense_rows], lo[dense_rows], hi[dense_rows],
+                    inc[dense_rows], ef)
+                dsp.attach((ids_d, d_d))
+                pool.merge(dense_rows, ids_d, d_d)
             est_err = float(np.mean(
                 np.abs(routes.est_rows[dense_rows] - n_qual)
                 / np.maximum(n_qual, 1.0)))
@@ -275,44 +282,54 @@ class OutOfCoreEngine:
             for t, plan in enumerate(plans):
                 dev = staged
                 transfer_bytes += plan.intra.nbytes + plan.inter.nbytes
-                if t + 1 < len(plans):
-                    staged = self._stage(plans[t + 1])  # prefetch next
-                if len(plan.active_queries) == 0:
-                    continue
-                key, sub = jax.random.split(key)
-                got_ids, got_d = self._run_batch(
-                    plan, dev, q, lo, hi, pool, k, ef, sub, params,
-                    ef_run=ef_run)
-                # (7) merge into carried pool (host, deterministic
-                # fold). Seeds re-found in later batches would
-                # otherwise duplicate and crowd the pool.
-                pool.merge(plan.active_queries, got_ids, got_d)
+                # the batch span covers dispatch + next-batch staging +
+                # the blocking merge, so the prefetched ooc.stage child
+                # visibly overlaps batch t's device compute in a trace
+                with span("ooc.batch", batch=t, cells=len(plan.cells),
+                          active=len(plan.active_queries)) as bsp:
+                    if t + 1 < len(plans):
+                        staged = self._stage(plans[t + 1])  # prefetch next
+                    if len(plan.active_queries) == 0:
+                        continue
+                    key, sub = jax.random.split(key)
+                    got_ids, got_d = self._run_batch(
+                        plan, dev, q, lo, hi, pool, k, ef, sub, params,
+                        ef_run=ef_run)
+                    bsp.attach((got_ids, got_d))
+                    # (7) merge into carried pool (host, deterministic
+                    # fold). Seeds re-found in later batches would
+                    # otherwise duplicate and crowd the pool.
+                    pool.merge(plan.active_queries, got_ids, got_d)
 
-        self.stats = {
-            "n_batches": n_batches,
-            "total_active": total_active,
-            "cells_per_batch": b,
-            "rerank": self.rerank,
-            "transfer_bytes": transfer_bytes,
-        }
-        self.stats.update(routes.counts())
+        # pass stats as views over the engine registry (ISSUE 10): the
+        # same call writes the lifetime counter and the dict entry
+        pm = PassMetrics(self.metrics)
+        pm.count("n_batches", n_batches)
+        pm.count("total_active", total_active)
+        pm.put("cells_per_batch", b)
+        pm.put("rerank", self.rerank)
+        pm.count("transfer_bytes", transfer_bytes)
+        pm.update_counts(routes.counts())
         if est_err is not None:
-            self.stats["est_rel_err_dense"] = est_err
+            pm.set("est_rel_err_dense", est_err)
+        self.stats = pm.stats()
 
         # exact re-rank of survivors (paper step 7): fused on device by
         # default, host loop as the legacy/ablation path (identical ids)
-        if self.rerank == "device":
-            out_i, out_d = rt_mod.exact_rerank_device(
-                idx, self.rt.attrs_dev, pool, q, lo, hi, k,
-                cfg.rerank_mult)
-        else:
-            out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
-                                               cfg.rerank_mult)
+        with span("ooc.rerank", rerank=self.rerank) as rsp:
+            if self.rerank == "device":
+                out_i, out_d = rt_mod.exact_rerank_device(
+                    idx, self.rt.attrs_dev, pool, q, lo, hi, k,
+                    cfg.rerank_mult)
+            else:
+                out_i, out_d = rt_mod.exact_rerank(idx, pool, q, lo, hi, k,
+                                                   cfg.rerank_mult)
+            rsp.attach((out_i, out_d))
         if qmap is not None:
-            self.stats["n_boxes"] = B
+            pm.count("n_boxes", B)
             out_i, out_d = rt_mod.merge_segment_topk(out_i, out_d, qmap,
                                                      n_queries, k)
-        self.stats["wall_seconds"] = time.perf_counter() - t_start
+        pm.set("wall_seconds", time.perf_counter() - t_start)
         return out_i, out_d
 
     # -- helpers -------------------------------------------------------------
@@ -323,12 +340,14 @@ class OutOfCoreEngine:
 
     def _stage(self, plan: BatchPlan):
         """Async H2D staging of one batch's partial index."""
-        return {
-            "intra": jax.device_put(plan.intra),
-            "inter": jax.device_put(plan.inter),
-            "local_start": jax.device_put(plan.local_start),
-            "rows": jax.device_put(plan.rows.astype(np.int32)),
-        }
+        with span("ooc.stage", cells=len(plan.cells),
+                  bytes=plan.intra.nbytes + plan.inter.nbytes):
+            return {
+                "intra": jax.device_put(plan.intra),
+                "inter": jax.device_put(plan.inter),
+                "local_start": jax.device_put(plan.local_start),
+                "rows": jax.device_put(plan.rows.astype(np.int32)),
+            }
 
     def _run_batch(self, plan: BatchPlan, dev, q, lo, hi,
                    pool: CandidatePool, k: int, ef: int, key,

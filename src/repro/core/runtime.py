@@ -46,6 +46,8 @@ from repro.core.traversal import (
     UNCACHED, GraphView, VectorStore, traversal_core)
 from repro.core.types import GMGIndex
 from repro.kernels import config as kernel_config
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import span
 
 
 # -- host-side padding helpers (deduplicated from search.py / pipeline.py) --
@@ -612,7 +614,8 @@ class CellCache:
     """
 
     def __init__(self, index: GMGIndex, budget_bytes: int | None = None,
-                 n_slots: int | None = None, policy: str = "size_aware"):
+                 n_slots: int | None = None, policy: str = "size_aware",
+                 registry: MetricsRegistry | None = None):
         if policy not in CACHE_POLICIES:
             raise ValueError(f"unknown cache policy {policy!r}; "
                              f"expected one of {CACHE_POLICIES}")
@@ -644,18 +647,56 @@ class CellCache:
         self._lru: "collections.OrderedDict[int, tuple[int, int]]" = \
             collections.OrderedDict()
         self._free: list[tuple[int, int]] = [(0, self.cap_rows)]
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.compactions = 0
-        self.bytes_uploaded = 0
+        # lifetime counters live in the obs registry (ISSUE 10): the
+        # owning engine passes its registry in so its per-pass stats are
+        # deltas over these same objects; the legacy attribute reads
+        # (cache.hits, cache.bytes_uploaded, ...) stay as properties
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._c_hits = self.metrics.counter("cache_hits")
+        self._c_misses = self.metrics.counter("cache_misses")
+        self._c_evictions = self.metrics.counter("cache_evictions")
+        self._c_compactions = self.metrics.counter("cache_compactions")
+        self._c_uploaded = self.metrics.counter("bytes_uploaded")
         # double-buffered streaming (ISSUE 8): cells uploaded ahead of
         # their wave by prefetch(); a later ensure() hit on one counts as
         # a prefetch hit, eviction before use as a wasted prefetch
-        self.prefetches = 0
-        self.prefetch_hits = 0
-        self.prefetch_bytes = 0
+        self._c_prefetches = self.metrics.counter("prefetches")
+        self._c_prefetch_hits = self.metrics.counter("prefetch_hits")
+        self._c_prefetch_bytes = self.metrics.counter("prefetch_bytes")
         self._prefetched: set[int] = set()
+
+    # registry-backed views of the lifetime counters
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
+
+    @property
+    def compactions(self) -> int:
+        return self._c_compactions.value
+
+    @property
+    def bytes_uploaded(self) -> int:
+        return self._c_uploaded.value
+
+    @property
+    def prefetches(self) -> int:
+        return self._c_prefetches.value
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self._c_prefetch_hits.value
+
+    @property
+    def prefetch_bytes(self) -> int:
+        return self._c_prefetch_bytes.value
 
     def capacity_bytes(self) -> int:
         return self.cap_rows * self.row_bytes
@@ -702,24 +743,27 @@ class CellCache:
         # re-uploads a compaction performs count too — transfer_bytes is
         # a CI-gated metric and must not undercount churn
         bytes_before = self.bytes_uploaded
-        for c in cells:
-            if c in self._lru:
+        with span("cache.ensure", cells=len(cells)) as sp:
+            for c in cells:
+                if c in self._lru:
+                    self._lru.move_to_end(c)
+                    hits += 1
+                    if c in self._prefetched:
+                        self._c_prefetch_hits.inc()
+                        self._prefetched.discard(c)
+                    continue
+                misses += 1
+                rows = self._rows_of(c)
+                start = self._alloc(rows, want)
+                self._upload(c, start, rows)
+                self._lru[c] = (start, rows)
                 self._lru.move_to_end(c)
-                hits += 1
-                if c in self._prefetched:
-                    self.prefetch_hits += 1
-                    self._prefetched.discard(c)
-                continue
-            misses += 1
-            rows = self._rows_of(c)
-            start = self._alloc(rows, want)
-            self._upload(c, start, rows)
-            self._lru[c] = (start, rows)
-            self._lru.move_to_end(c)
-        self.hits += hits
-        self.misses += misses
-        return {"hits": hits, "misses": misses,
-                "bytes": self.bytes_uploaded - bytes_before}
+            self._c_hits.inc(hits)
+            self._c_misses.inc(misses)
+            got = {"hits": hits, "misses": misses,
+                   "bytes": self.bytes_uploaded - bytes_before}
+            sp.annotate(**got)
+        return got
 
     def prefetch(self, cells) -> dict:
         """Best-effort upload of a *future* wave's missing cells while the
@@ -733,26 +777,32 @@ class CellCache:
         bytes_before = self.bytes_uploaded
         uploaded = 0
         want = set(c for c in cells if c in self._lru)
-        for c in cells:
-            if c in self._lru:
+        # the span sits INSIDE the enclosing wave-traversal span on the
+        # hybrid path, so in a Perfetto timeline these prefetch uploads
+        # visibly overlap the in-flight traversal they are hidden behind
+        with span("cache.prefetch") as sp:
+            for c in cells:
+                if c in self._lru:
+                    self._lru.move_to_end(c)
+                    continue
+                rows = self._rows_of(c)
+                want.add(c)
+                try:
+                    start = self._alloc(rows, want)
+                except ValueError:
+                    want.discard(c)
+                    continue
+                self._upload(c, start, rows)
+                self._lru[c] = (start, rows)
                 self._lru.move_to_end(c)
-                continue
-            rows = self._rows_of(c)
-            want.add(c)
-            try:
-                start = self._alloc(rows, want)
-            except ValueError:
-                want.discard(c)
-                continue
-            self._upload(c, start, rows)
-            self._lru[c] = (start, rows)
-            self._lru.move_to_end(c)
-            self._prefetched.add(c)
-            uploaded += 1
-        self.prefetches += uploaded
-        self.prefetch_bytes += self.bytes_uploaded - bytes_before
-        return {"prefetched": uploaded,
-                "bytes": self.bytes_uploaded - bytes_before}
+                self._prefetched.add(c)
+                uploaded += 1
+            self._c_prefetches.inc(uploaded)
+            self._c_prefetch_bytes.inc(self.bytes_uploaded - bytes_before)
+            got = {"prefetched": uploaded,
+                   "bytes": self.bytes_uploaded - bytes_before}
+            sp.annotate(**got)
+        return got
 
     # -- arena bookkeeping --------------------------------------------------
 
@@ -777,7 +827,7 @@ class CellCache:
             victim = next((cc for cc in self._lru if cc not in want), None)
             if victim is not None:
                 self._release(victim)
-                self.evictions += 1
+                self._c_evictions.inc()
                 continue
             # every resident cell is wanted: free space exists (the
             # capacity check passed) but is fragmented around pinned
@@ -807,7 +857,7 @@ class CellCache:
     def _compact(self) -> None:
         """Repack resident cells to the arena front (LRU order kept),
         re-uploading moved cells; frees one contiguous tail extent."""
-        self.compactions += 1
+        self._c_compactions.inc()
         cursor = 0
         for c in list(self._lru):
             start, rows = self._lru[c]
@@ -828,9 +878,10 @@ class CellCache:
         bi[:e - s] = idx.intra_adj[s:e]
         bx[:e - s] = idx.inter_adj[s:e]
         at = jnp.int32(start)
-        self.intra_buf = _write_slot(self.intra_buf, jnp.asarray(bi), at)
-        self.inter_buf = _write_slot(self.inter_buf, jnp.asarray(bx), at)
-        self.bytes_uploaded += bi.nbytes + bx.nbytes
+        with span("cache.upload", cell=c, bytes=bi.nbytes + bx.nbytes):
+            self.intra_buf = _write_slot(self.intra_buf, jnp.asarray(bi), at)
+            self.inter_buf = _write_slot(self.inter_buf, jnp.asarray(bx), at)
+        self._c_uploaded.inc(bi.nbytes + bx.nbytes)
 
     def cell_base(self) -> np.ndarray:
         """(S,) i32: arena base minus cell_start (UNCACHED when absent)."""
@@ -972,13 +1023,21 @@ class CellRuntime:
         if seeds is not None:
             sp, _ = pad_pow2(np.asarray(seeds, np.int32))
             seeds_d = jnp.asarray(sp)
-        ids, d = traversal_core(
-            self.store, graph, jnp.asarray(qp), jnp.asarray(lop),
-            jnp.asarray(hip), order_d, seeds_d, key,
-            k=k, ef=ef, entry_width=entry_width, entry_random=entry_random,
-            entry_beam_l=entry_beam_l, max_iters=max_iters,
-            use_inter=use_inter, packed_visited=packed_visited,
-            pool_reuse=pool_reuse, fused=kernel_config.use_pallas())
+        # kernels-launch accounting: this span covers the *dispatch* only
+        # (the program runs async); the enclosing engine span owns the
+        # launch->block window, so dispatch overhead is separable from
+        # device wait in a trace
+        fused = kernel_config.use_pallas()
+        with span("launch.dispatch", rows=int(qp.shape[0]), k=k, ef=ef,
+                  fused=fused):
+            ids, d = traversal_core(
+                self.store, graph, jnp.asarray(qp), jnp.asarray(lop),
+                jnp.asarray(hip), order_d, seeds_d, key,
+                k=k, ef=ef, entry_width=entry_width,
+                entry_random=entry_random, entry_beam_l=entry_beam_l,
+                max_iters=max_iters, use_inter=use_inter,
+                packed_visited=packed_visited, pool_reuse=pool_reuse,
+                fused=fused)
         return ids, d, real
 
     def run(self, graph: GraphView, q: np.ndarray, lo: np.ndarray,

@@ -65,6 +65,8 @@ from repro.core.ordering import order_cells
 from repro.core.runtime import merge_segment_topk  # noqa: F401  (re-export)
 from repro.core.runtime import CellRuntime, pad_pow2
 from repro.core.types import GMGIndex, SearchParams
+from repro.obs.metrics import MetricsRegistry, PassMetrics
+from repro.obs.trace import span
 
 # back-compat alias: callers historically imported the padding helper here
 _pad_pow2 = pad_pow2
@@ -90,6 +92,9 @@ class Searcher:
         # per-call engine counters, snapshotted by Collection.search onto
         # QueryResult.stats (observability satellite, ISSUE 6)
         self.stats: dict = {}
+        # per-engine obs registry: per-pass stats dicts are views over
+        # increments into it (PassMetrics, ISSUE 10)
+        self.metrics = MetricsRegistry()
 
     def refresh_index(self, index: GMGIndex) -> None:
         """Delete path (core.mutable): adopt a same-layout index whose
@@ -218,12 +223,18 @@ class Searcher:
                 # queries whose boxes were all pruned by the planner
                 raise ValueError("n_queries is required with qmap")
         t0 = time.perf_counter()
-        self.stats = {"engine": "incore", "n_rows": int(B),
-                      "n_dense": 0, "n_mid": 0, "n_broad": 0,
-                      "n_global": 0, "n_itinerary": 0}
+        # pass stats are a view over obs-registry increments (ISSUE 10):
+        # every numeric lands in self.metrics through the same call that
+        # writes the dict entry
+        pm = PassMetrics(self.metrics, static={"engine": "incore"})
+        pm.count("n_rows", int(B))
+        for name in ("n_dense", "n_mid", "n_broad", "n_global",
+                     "n_itinerary"):
+            pm.count(name, 0)
+        self.stats = pm.stats()
         if B == 0:
             nq = n_queries if qmap is not None else 0
-            self.stats["wall_seconds"] = time.perf_counter() - t0
+            pm.set("wall_seconds", time.perf_counter() - t0)
             return rt_mod.empty_topk(nq, params.k)
         base_key = jax.random.PRNGKey(params.seed)
 
@@ -241,30 +252,32 @@ class Searcher:
         else:
             use_global = np.zeros(B, bool)
         use_global &= ~use_dense
-        self.stats.update(routes.counts())
+        pm.update_counts(routes.counts())
 
         out_i = np.full((B, params.k), -1, np.int64)
         out_d = np.full((B, params.k), np.inf, np.float32)
 
         dense_rows = np.nonzero(use_dense)[0]
         if len(dense_rows) > 0:
-            ids, d = self._dense_scan(q[dense_rows], lo[dense_rows],
-                                      hi[dense_rows], inc[dense_rows],
-                                      params.k)
+            with span("incore.dense", rows=len(dense_rows)) as dsp:
+                ids, d = self._dense_scan(q[dense_rows], lo[dense_rows],
+                                          hi[dense_rows], inc[dense_rows],
+                                          params.k)
+                dsp.attach((ids, d))
             orig = np.where(ids >= 0, self.index.perm[np.maximum(ids, 0)], -1)
             out_i[dense_rows] = orig
             out_d[dense_rows] = d
             # estimator error against the scan's exact qualifying counts
             exact = self._last_dense_qual.astype(np.float64)
             est_r = routes.est_rows[dense_rows]
-            self.stats["est_rel_err_dense"] = float(
-                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0)))
+            pm.set("est_rel_err_dense", float(
+                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0))))
 
-        for path_idx, (flag, fn, stat) in enumerate(
-                ((False, self._traverse, "n_itinerary"),
-                 (True, self._global, "n_global"))):
+        for path_idx, (flag, fn, stat, sname) in enumerate(
+                ((False, self._traverse, "n_itinerary", "incore.traverse"),
+                 (True, self._global, "n_global", "incore.global"))):
             path_rows = (use_global == flag) & ~use_dense
-            self.stats[stat] = int(path_rows.sum())
+            pm.count(stat, int(path_rows.sum()))
             for mult in np.unique(routes.ef_mult[path_rows]):
                 sel = np.nonzero(path_rows
                                  & (routes.ef_mult == mult))[0]
@@ -278,13 +291,15 @@ class Searcher:
                 # historical codes 0/1 exactly.
                 code = path_idx + 2 * int(mult).bit_length() - 2
                 sub = jax.random.fold_in(base_key, code)
-                ids, d = fn(q[sel], lo[sel], hi[sel], params, sub,
-                            ef_mult=int(mult))
+                with span(sname, rows=len(sel), ef_mult=int(mult)) as tsp:
+                    ids, d = fn(q[sel], lo[sel], hi[sel], params, sub,
+                                ef_mult=int(mult))
+                    tsp.attach((ids, d))
                 orig = np.where(ids >= 0,
                                 self.index.perm[np.maximum(ids, 0)], -1)
                 out_i[sel] = orig
                 out_d[sel] = d
-        self.stats["wall_seconds"] = time.perf_counter() - t0
+        pm.set("wall_seconds", time.perf_counter() - t0)
         if qmap is not None:
             return merge_segment_topk(out_i, out_d, qmap, n_queries,
                                       params.k)

@@ -68,6 +68,8 @@ from repro.core.ordering import order_cells
 from repro.core.runtime import CellRuntime, merge_segment_topk, pad_pow2
 from repro.core.types import GMGIndex, SearchParams
 from repro.dist.straggler import StragglerMonitor
+from repro.obs.metrics import MetricsRegistry, PassMetrics
+from repro.obs.trace import local_trace, span
 
 BALANCE_BY = ("bytes", "rows")
 SHARD_MODES = ("incore", "hybrid", "ooc")
@@ -352,10 +354,15 @@ class ShardedEngine:
         self._cell_hi_dev = jnp.asarray(self.index.cell_hi)
         self._centroids_dev = jnp.asarray(self.index.centroids)
         self._hist_dev = jnp.asarray(self.index.hist)
-        # per-shard blocking-materialization wall times feed the fleet
-        # monitor (repro.dist.straggler), validated under real mesh runs
+        # per-shard walls are span-derived (obs, ISSUE 10): every shard
+        # launch runs under a "shard.*" span tagged shard=sid, and the
+        # fleet monitor (repro.dist.straggler) ingests those spans —
+        # one timing path for traces, stats, and straggler detection
         self.straggler = StragglerMonitor(self.spec.n_shards)
         self.stats: dict = {}
+        # per-engine obs registry: per-pass stats dicts are views over
+        # increments into it (PassMetrics, ISSUE 10)
+        self.metrics = MetricsRegistry()
 
     def _sub_window(self, sub: GMGIndex) -> Optional[int]:
         """Per-shard cache/window budget: the declared *per-device*
@@ -407,12 +414,18 @@ class ShardedEngine:
             if n_queries is None:
                 raise ValueError("n_queries is required with qmap")
         t0 = time.perf_counter()
-        self.stats = {"engine": self.mode, "n_rows": int(B),
-                      "sharded": True, "n_shards": self.spec.n_shards,
-                      "replicated_cells": int(self.placement.replicated.sum()),
-                      "replica_hits": 0, "total_active": 0, "shards": []}
+        # pass stats as views over the engine registry (ISSUE 10)
+        pm = PassMetrics(self.metrics,
+                         static={"engine": self.mode, "sharded": True})
+        pm.count("n_rows", int(B))
+        pm.put("n_shards", self.spec.n_shards)
+        pm.put("replicated_cells", int(self.placement.replicated.sum()))
+        pm.count("replica_hits", 0)
+        pm.count("total_active", 0)
+        pm.put("shards", [])
+        self.stats = pm.stats()
         if B == 0:
-            self.stats["wall_seconds"] = time.perf_counter() - t0
+            pm.set("wall_seconds", time.perf_counter() - t0)
             nq = n_queries if qmap is not None else 0
             return rt_mod.empty_topk(nq, k)
 
@@ -423,9 +436,9 @@ class ShardedEngine:
                   else np.asarray(route_k, np.int64))
             routes = sel_mod.route_boxes(idx, lo, hi, rk,
                                          cost=params.cost, inc=inc)
-        self.stats.update(routes.counts())
+        pm.update_counts(routes.counts())
         assign, replica_hits = assign_cells(inc, self.placement)
-        self.stats["replica_hits"] = replica_hits
+        pm.count("replica_hits", replica_hits)
         demand = inc.sum(axis=0).astype(np.int64)
         shard_stats = []
         for sh in self.shards:
@@ -440,41 +453,49 @@ class ShardedEngine:
                 "replica_hits": int(demand[sh.cells][away].sum()),
                 "transfer_bytes": 0, "wall_seconds": 0.0,
             })
-        self.stats["total_active"] = int(
-            sum(st["total_active"] for st in shard_stats))
+        pm.count("total_active",
+                 int(sum(st["total_active"] for st in shard_stats)))
 
-        if self.mode == "incore":
-            out_i, out_d = self._search_incore(
-                q, lo, hi, inc, assign, routes, params, shard_stats)
-        else:
-            out_i, out_d = self._search_streamed(
-                q, lo, hi, inc, assign, routes, params, shard_stats)
-
+        # per-shard walls come from the "shard.*" spans the launches
+        # emit below; local_trace records them even when nobody asked
+        # for a trace (and nests them into the user's trace when one is
+        # active), so the straggler monitor and per-shard stats read the
+        # exact numbers a Perfetto export would show
+        with local_trace() as tr:
+            mark = tr.mark()
+            if self.mode == "incore":
+                out_i, out_d = self._search_incore(
+                    q, lo, hi, inc, assign, routes, params, shard_stats,
+                    pm)
+            else:
+                out_i, out_d = self._search_streamed(
+                    q, lo, hi, inc, assign, routes, params, shard_stats)
+            walls = self.straggler.ingest(tr.spans_since(mark),
+                                          key="shard")
         for st in shard_stats:
-            if st["active_rows"]:
-                self.straggler.record(st["shard"], st["wall_seconds"])
-        self.stats["shards"] = shard_stats
-        self.stats["transfer_bytes"] = int(
-            sum(st["transfer_bytes"] for st in shard_stats))
+            st["wall_seconds"] = float(walls.get(st["shard"], 0.0))
+        pm.put("shards", shard_stats)
+        pm.count("transfer_bytes",
+                 int(sum(st["transfer_bytes"] for st in shard_stats)))
         if qmap is not None:
-            self.stats["n_boxes"] = B
+            pm.count("n_boxes", B)
             out_i, out_d = merge_segment_topk(out_i, out_d, qmap,
                                               n_queries, k)
-        self.stats["wall_seconds"] = time.perf_counter() - t0
+        pm.set("wall_seconds", time.perf_counter() - t0)
         return out_i, out_d
 
     # -- incore: the partition-independent traversal profile -----------------
 
     def _search_incore(self, q, lo, hi, inc, assign, routes,
-                       params: SearchParams, shard_stats):
+                       params: SearchParams, shard_stats, pm: PassMetrics):
         idx = self.index
         cfg = idx.config
         B, k = q.shape[0], params.k
         base_key = jax.random.PRNGKey(params.seed)
         use_dense = routes.route == sel_mod.ROUTE_DENSE
-        self.stats["profile"] = "partitioned"
-        self.stats["n_itinerary"] = int((~use_dense).sum())
-        self.stats["n_global"] = 0
+        pm.put("profile", "partitioned")
+        pm.count("n_itinerary", int((~use_dense).sum()))
+        pm.count("n_global", 0)
         # (S,) assigned-cell -> local id per shard, this pass
         assigned_local = []
         for sh in self.shards:
@@ -483,11 +504,6 @@ class ShardedEngine:
             al[m] = sh.g2l[m]
             assigned_local.append(al)
         cand_i, cand_d, cand_q = [], [], []
-
-        def touch(sh, act_rows, seconds):
-            st = shard_stats[sh.sid]
-            st["active_rows"] += int(act_rows)
-            st["wall_seconds"] += seconds
 
         # dense route: each shard exact-scans its assigned selected cells;
         # assignment partitions the cells, so per-shard qualifying counts
@@ -502,12 +518,12 @@ class ShardedEngine:
                 if len(act) == 0:
                     continue
                 rows = dense_rows[act]
-                t_s = time.perf_counter()
-                with jax.default_device(sh.device):
-                    ids_l, d_l, n_qual = rt_mod.masked_dense_scan(
-                        sh.rt, q[rows], lo[rows], hi[rows],
-                        inc_loc[act], k)
-                touch(sh, len(act), time.perf_counter() - t_s)
+                with span("shard.dense", shard=sh.sid, rows=len(act)):
+                    with jax.default_device(sh.device):
+                        ids_l, d_l, n_qual = rt_mod.masked_dense_scan(
+                            sh.rt, q[rows], lo[rows], hi[rows],
+                            inc_loc[act], k)
+                shard_stats[sh.sid]["active_rows"] += int(len(act))
                 cand_i.append(np.where(
                     ids_l >= 0, sh.sub.perm[np.maximum(ids_l, 0)], -1))
                 cand_d.append(d_l)
@@ -515,8 +531,8 @@ class ShardedEngine:
                 n_qual_total[act] += n_qual
             exact = n_qual_total.astype(np.float64)
             est_r = routes.est_rows[dense_rows]
-            self.stats["est_rel_err_dense"] = float(
-                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0)))
+            pm.set("est_rel_err_dense", float(
+                np.mean(np.abs(est_r - exact) / np.maximum(exact, 1.0))))
 
         # itinerary path: ONE global cell order (identical to the
         # single-device Searcher's), masked per shard at the same
@@ -572,23 +588,26 @@ class ShardedEngine:
                 ord_p = np.full((q_s.shape[0], order_s.shape[1]), -1,
                                 np.int32)
                 ord_p[:real_s] = order_s[act]
-                t_s = time.perf_counter()
-                with jax.default_device(sh.device):
-                    ids_dev, d_dev, _ = sh.rt.run_launch(
-                        sh.rt.resident_graph(), q_s, lo_s, hi_s, sub_key,
-                        k=k_run, ef=ef, cell_order=ord_p,
-                        entry_beam_l=beam, use_inter=False,
-                        pool_reuse=params.pool_reuse)
-                launch_s = time.perf_counter() - t_s
-                launches.append((sh, ids_dev, d_dev, real_s, act, launch_s))
+                # dispatch-only span: async launch returns immediately;
+                # the blocking materialization is the shard.block span —
+                # summed per shard=sid they reproduce the old
+                # launch+block wall the straggler monitor judged
+                with span("shard.launch", shard=sh.sid, rows=len(act),
+                          ef=ef):
+                    with jax.default_device(sh.device):
+                        ids_dev, d_dev, _ = sh.rt.run_launch(
+                            sh.rt.resident_graph(), q_s, lo_s, hi_s,
+                            sub_key, k=k_run, ef=ef, cell_order=ord_p,
+                            entry_beam_l=beam, use_inter=False,
+                            pool_reuse=params.pool_reuse)
+                launches.append((sh, ids_dev, d_dev, real_s, act))
             # all shards launched (async dispatch overlaps across
             # devices); now block each and fold candidates
-            for sh, ids_dev, d_dev, real_s, act, launch_s in launches:
-                t_b = time.perf_counter()
-                ids_l = np.asarray(ids_dev[:real_s, :k])
-                d_l = np.asarray(d_dev[:real_s, :k])
-                touch(sh, len(act),
-                      launch_s + (time.perf_counter() - t_b))
+            for sh, ids_dev, d_dev, real_s, act in launches:
+                with span("shard.block", shard=sh.sid, rows=len(act)):
+                    ids_l = np.asarray(ids_dev[:real_s, :k])
+                    d_l = np.asarray(d_dev[:real_s, :k])
+                shard_stats[sh.sid]["active_rows"] += int(len(act))
                 cand_i.append(np.where(
                     ids_l >= 0, sh.sub.perm[np.maximum(ids_l, 0)], -1))
                 cand_d.append(d_l)
@@ -621,14 +640,18 @@ class ShardedEngine:
             act = np.nonzero(inc_loc.any(axis=1))[0]
             if len(act) == 0:
                 continue
-            t_s = time.perf_counter()
-            with jax.default_device(sh.device):
-                ids_s, d_s = sh.engine.search(
-                    q[act], lo[act], hi[act], params,
-                    routes=_slice_routes(routes, act))
+            # the sub-engine's own spans (hybrid.wave / ooc.batch / ...)
+            # nest inside this one; only shard.search carries the shard=
+            # attr, so per-shard wall sums never double-count children
+            with span("shard.search", shard=sh.sid, mode=self.mode,
+                      rows=len(act)) as ssp:
+                with jax.default_device(sh.device):
+                    ids_s, d_s = sh.engine.search(
+                        q[act], lo[act], hi[act], params,
+                        routes=_slice_routes(routes, act))
+                ssp.attach((ids_s, d_s))
             st = shard_stats[sh.sid]
             st["active_rows"] += int(len(act))
-            st["wall_seconds"] += time.perf_counter() - t_s
             est = sh.engine.stats
             st["transfer_bytes"] += int(est.get("transfer_bytes", 0))
             for key in ("n_waves", "n_batches", "total_active"):

@@ -30,6 +30,19 @@ class StragglerMonitor:
             self.alpha * seconds + (1.0 - self.alpha) * prev)
         self._count[host] += 1
 
+    def ingest(self, spans, key: str = "host") -> dict:
+        """Fold obs spans into the EWMA: span durations are summed per
+        ``key`` attribute (one step sample per host present — hosts that
+        did no work emit no spans and are not penalized with zeros).
+        Returns the {host: wall_seconds} walls that were recorded, so
+        callers (e.g. the sharded engine's per-shard stats) reuse the
+        same numbers the monitor judged."""
+        from repro.obs.trace import sum_walls
+        walls = sum_walls(spans, key)
+        for host, w in sorted(walls.items()):
+            self.record(int(host), float(w))
+        return walls
+
     def is_straggler(self, host: int) -> bool:
         if self._count[host] < self.min_steps or self._ewma[host] is None:
             return False

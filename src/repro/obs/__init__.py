@@ -1,0 +1,36 @@
+"""``repro.obs`` — structured tracing + metrics for the whole stack
+(ISSUE 10 tentpole).
+
+Three pieces, one reporting path:
+
+``trace``    — hierarchical spans with an injectable monotonic clock, an
+               optional ``block_until_ready`` sync at span close (so
+               async device work is attributed to the right span), and a
+               strict no-op fast path when tracing is off.
+``metrics``  — the counter/gauge/histogram registry every layer's
+               counters live in; engine per-pass stats dicts are views
+               over registry increments (``PassMetrics``), not a
+               parallel bookkeeping path.
+``export``   — Chrome trace-event JSON (Perfetto-loadable) and
+               Prometheus text exposition.
+
+Entry points users actually touch: ``Collection.trace(path=...)``, the
+``--trace`` flag on ``benchmarks/run.py``, and
+``VectorFrontend.prometheus()``. Span taxonomy and walkthroughs:
+``docs/observability.md``.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, PassMetrics)
+from repro.obs.trace import (NOOP_SPAN, Span, Tracer,  # noqa: F401
+                             active_tracer, local_trace, span, sum_walls,
+                             tracing)
+from repro.obs.export import (chrome_trace_events,  # noqa: F401
+                              prometheus_text, write_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "PassMetrics",
+    "NOOP_SPAN", "Span", "Tracer", "active_tracer", "local_trace", "span",
+    "sum_walls", "tracing",
+    "chrome_trace_events", "prometheus_text", "write_chrome_trace",
+]

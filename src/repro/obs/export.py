@@ -1,0 +1,120 @@
+"""Exporters for the obs layer: Perfetto-loadable Chrome trace-event
+JSON from a :class:`~repro.obs.trace.Tracer`, and Prometheus text
+exposition from a :class:`~repro.obs.metrics.MetricsRegistry`.
+
+Chrome trace format: one ``"X"`` (complete) event per finished span,
+``ts``/``dur`` in microseconds relative to the earliest span start, span
+attributes under ``args``. Load at https://ui.perfetto.dev (or
+``chrome://tracing``) — the viewer reconstructs nesting from the
+intervals, so parent/child spans stack and concurrent DMA/compute spans
+(cache prefetch uploads inside an in-flight traversal span) visibly
+overlap. ``docs/observability.md`` walks through reading one.
+
+Prometheus exposition: ``# TYPE`` headers plus one sample line per
+counter/gauge; histograms export summary-style quantiles (0.5/0.95/0.99)
+with ``_sum`` and ``_count``. Metric names are sanitized to the
+Prometheus grammar and prefixed (default ``repro_``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Optional
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Tracer
+
+__all__ = ["chrome_trace_events", "write_chrome_trace", "prometheus_text"]
+
+_US = 1_000_000.0
+
+
+def _jsonable(v):
+    """Span attrs may carry numpy scalars; JSON wants plain types."""
+    if hasattr(v, "item"):
+        return v.item()
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
+def chrome_trace_events(tracer: Tracer, *, pid: int = 0,
+                        tid: int = 0) -> list:
+    """Finished spans as Chrome trace-event dicts (``ph: "X"``)."""
+    spans = tracer.spans
+    if not spans:
+        return []
+    t_base = min(s.t0 for s in spans)
+    events = []
+    for s in spans:
+        events.append({
+            "name": s.name,
+            "ph": "X",
+            "ts": (s.t0 - t_base) * _US,
+            "dur": s.duration * _US,
+            "pid": pid,
+            "tid": tid,
+            "cat": s.name.split(".", 1)[0],
+            "args": {k: _jsonable(v) for k, v in s.attrs.items()},
+        })
+    # Perfetto reconstructs nesting from intervals; sorting by start time
+    # (parents before their children on ties) keeps the file stable
+    events.sort(key=lambda e: (e["ts"], -e["dur"]))
+    return events
+
+
+def write_chrome_trace(tracer: Tracer, path: str, *, pid: int = 0,
+                       tid: int = 0) -> str:
+    """Write ``{"traceEvents": [...]}`` JSON; returns the path."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    doc = {"traceEvents": chrome_trace_events(tracer, pid=pid, tid=tid),
+           "displayTimeUnit": "ms"}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(prefix: str, name: str) -> str:
+    out = _NAME_RE.sub("_", prefix + name)
+    if out and out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _fmt(v) -> str:
+    f = float(v)
+    return repr(int(f)) if f == int(f) else repr(f)
+
+
+def prometheus_text(registry: MetricsRegistry, prefix: str = "repro_",
+                    extra: Optional[dict] = None) -> str:
+    """Prometheus text exposition (v0.0.4) of every registered metric.
+    ``extra`` adds gauge samples computed outside the registry (e.g.
+    queue depth read off a live object)."""
+    lines = []
+    for name, m in sorted(registry.items()):
+        pn = _prom_name(prefix, name)
+        if isinstance(m, Counter):
+            lines.append(f"# TYPE {pn} counter")
+            lines.append(f"{pn} {_fmt(m.value)}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# TYPE {pn} gauge")
+            lines.append(f"{pn} {_fmt(m.value)}")
+        elif isinstance(m, Histogram):
+            lines.append(f"# TYPE {pn} summary")
+            for q in (0.5, 0.95, 0.99):
+                lines.append(f'{pn}{{quantile="{q}"}} '
+                             f"{_fmt(m.percentile(100 * q))}")
+            lines.append(f"{pn}_sum {_fmt(m.total)}")
+            lines.append(f"{pn}_count {_fmt(m.count)}")
+    for name, v in sorted((extra or {}).items()):
+        pn = _prom_name(prefix, name)
+        lines.append(f"# TYPE {pn} gauge")
+        lines.append(f"{pn} {_fmt(v)}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,195 @@
+"""Counter / gauge / histogram registry (the ``repro.obs`` metrics half).
+
+One :class:`MetricsRegistry` is the single source for every counter the
+CI gate tracks: engines accumulate their per-pass work counters through
+it (``PassMetrics``), the :class:`~repro.core.runtime.CellCache` keeps
+its lifetime hit/prefetch counters in it, and the serving frontend's
+lifetime counters and latency quantiles live in it. The per-pass stats
+dicts the engines still expose (``engine.stats`` ->
+``Collection.last_stats`` -> ``EngineStats``) are *views over registry
+increments*, not a parallel bookkeeping path: ``PassMetrics.count``
+writes the registry counter and the pass dict in one call, so the two
+can never disagree, and :func:`prometheus_text
+<repro.obs.export.prometheus_text>` exports the same objects.
+
+Everything is plain host-side Python — no numpy on the increment path,
+no locks (the engines are single-threaded per process).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "PassMetrics"]
+
+
+class Counter:
+    """Monotonic accumulator."""
+
+    __slots__ = ("name", "value")
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n=1):
+        self.value += n
+        return self.value
+
+
+class Gauge:
+    """Last-value metric (rates, residency, derived fractions)."""
+
+    __slots__ = ("name", "value")
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v):
+        self.value = v
+        return v
+
+
+class Histogram:
+    """Value-list histogram: exact quantiles at export time. Bounded by
+    ``maxlen`` (reservoir-free ring: old samples roll off) so long-lived
+    serving processes do not grow without bound."""
+
+    __slots__ = ("name", "_values", "count", "total", "maxlen")
+    kind = "histogram"
+
+    def __init__(self, name: str, maxlen: int = 65536):
+        self.name = name
+        self._values: List[float] = []
+        self.count = 0
+        self.total = 0.0
+        self.maxlen = maxlen
+
+    def observe(self, v) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self._values.append(v)
+        if len(self._values) > self.maxlen:
+            del self._values[: len(self._values) - self.maxlen]
+
+    @property
+    def values(self) -> List[float]:
+        return list(self._values)
+
+    def percentile(self, p: float) -> float:
+        if not self._values:
+            return 0.0
+        import numpy as np
+        return float(np.percentile(np.asarray(self._values, np.float64), p))
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create accessors. Names are flat
+    dotted/underscored strings; a name is permanently bound to its first
+    kind (asking for a counter named like an existing gauge raises)."""
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} is a {type(m).__name__}, "
+                            f"not a {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # -- reading ------------------------------------------------------------
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def items(self) -> Iterable[Tuple[str, object]]:
+        return self._metrics.items()
+
+    def value(self, name: str, default=0):
+        m = self._metrics.get(name)
+        if m is None:
+            return default
+        if isinstance(m, Histogram):
+            return m.count
+        return m.value
+
+    def snapshot(self) -> dict:
+        """{name: value} over counters and gauges (histograms report
+        their sample count) — pair with :meth:`delta` to scope a pass."""
+        out = {}
+        for name, m in self._metrics.items():
+            out[name] = m.count if isinstance(m, Histogram) else m.value
+        return out
+
+    def delta(self, before: dict) -> dict:
+        """Counter increments since ``before`` (a :meth:`snapshot`);
+        gauges report their current value."""
+        out = {}
+        for name, m in self._metrics.items():
+            if isinstance(m, Counter):
+                out[name] = m.value - before.get(name, 0)
+            elif isinstance(m, Histogram):
+                out[name] = m.count - before.get(name, 0)
+            else:
+                out[name] = m.value
+        return out
+
+
+class PassMetrics:
+    """Builds one engine pass's stats dict while folding every numeric
+    into the engine's lifetime registry — the single-source contract:
+    the dict entry and the registry increment are written by the same
+    call, so ``engine.stats`` values are registry values by
+    construction.
+
+    ``count`` -> registry counter += v (work counters: waves, bytes,
+    active rows); ``set`` -> registry gauge = v (derived values: rates,
+    residency); ``put`` -> pass-dict only (strings, nested dicts — not
+    meaningfully aggregable).
+    """
+
+    __slots__ = ("_reg", "_stats", "_prefix")
+
+    def __init__(self, registry: MetricsRegistry, prefix: str = "",
+                 static: Optional[dict] = None):
+        self._reg = registry
+        self._prefix = prefix
+        self._stats = dict(static or {})
+
+    def count(self, name: str, v) -> None:
+        self._reg.counter(self._prefix + name).inc(v)
+        self._stats[name] = self._stats.get(name, 0) + v
+
+    def set(self, name: str, v) -> None:
+        self._reg.gauge(self._prefix + name).set(v)
+        self._stats[name] = v
+
+    def put(self, name: str, v) -> None:
+        self._stats[name] = v
+
+    def update_counts(self, d: dict) -> None:
+        for k, v in d.items():
+            self.count(k, v)
+
+    def stats(self) -> dict:
+        return self._stats

@@ -1,0 +1,270 @@
+"""Hierarchical span tracing (the ``repro.obs`` tentpole, ISSUE 10).
+
+One :class:`Tracer` records a tree of timed :class:`Span` objects; code
+anywhere in the stack marks a region with the module-level helper::
+
+    from repro.obs.trace import span
+    with span("hybrid.wave", cells=n_cells, bytes=n_bytes):
+        ...
+
+Design points (all load-bearing for the search hot path):
+
+  - **Strict no-op fast path.** When no tracer is active, ``span(...)``
+    returns one shared immutable :data:`NOOP_SPAN` — a module-global
+    ``is None`` check and a constant return, no object allocation, no
+    clock read. The tracing-off QPS budget in the acceptance criteria
+    (within 2% of pre-PR) rests on this.
+  - **Injectable monotonic clock.** ``Tracer(clock=...)`` accepts any
+    zero-arg callable returning float seconds —
+    ``time.perf_counter`` by default, or the serving frontend's
+    ``VirtualClock`` so open-loop harness traces line up with its
+    deterministic timeline.
+  - **Optional device sync at span close.** JAX dispatch is async: a
+    launch returns before the kernel runs, so a naive span would bill
+    device time to whichever later span happens to block. A span can
+    ``attach(arrays)`` its launch results; with ``Tracer(sync=True)``
+    the span blocks on them (``jax.block_until_ready``) before taking
+    its end timestamp, attributing the device work to the right span.
+    With ``sync=False`` (default) ``attach`` is free and the natural
+    blocking point (``np.asarray`` of the results) still falls inside
+    the enclosing span.
+  - **Nesting by activation stack.** Spans nest lexically; the parent is
+    whatever span is open on the tracer when a child starts. Export
+    (``repro.obs.export``) emits Chrome trace events whose ts/dur
+    intervals reproduce the tree in Perfetto.
+
+Activation is process-global and explicitly scoped::
+
+    tr = Tracer()
+    with tracing(tr):
+        ...            # every span(...) in this block records into tr
+
+``Collection.trace(path=...)`` wraps exactly this and writes the
+Perfetto JSON on exit. Subsystems that need timings even when the user
+traces nothing (the sharded engine's straggler walls, build phase
+accounting) use :func:`local_trace`, which reuses the active tracer or
+activates a temporary one.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, List, Optional
+
+__all__ = ["Span", "Tracer", "NOOP_SPAN", "span", "tracing",
+           "local_trace", "active_tracer", "sum_walls"]
+
+
+class Span:
+    """One finished-or-open timed region. ``attrs`` carries arbitrary
+    key/value annotations (cells=, bytes=, shard=, ...)."""
+
+    __slots__ = ("name", "t0", "t1", "parent", "depth", "attrs", "_payload",
+                 "_tracer")
+
+    def __init__(self, tracer: "Tracer", name: str, parent: Optional["Span"],
+                 attrs: Optional[dict]):
+        self._tracer = tracer
+        self.name = name
+        self.parent = parent
+        self.depth = 0 if parent is None else parent.depth + 1
+        self.attrs = attrs if attrs else {}
+        self.t0 = 0.0
+        self.t1: Optional[float] = None
+        self._payload = None
+
+    # -- annotation ---------------------------------------------------------
+
+    def annotate(self, **kw) -> "Span":
+        """Merge key/value attributes into the span."""
+        self.attrs.update(kw)
+        return self
+
+    def attach(self, payload):
+        """Register device arrays (any pytree) this span's work produced;
+        a ``sync=True`` tracer blocks on them at close so async device
+        time lands in *this* span. Returns the payload unchanged."""
+        self._payload = payload
+        return payload
+
+    # -- lifecycle (driven by the tracer) -----------------------------------
+
+    def __enter__(self) -> "Span":
+        self._tracer._open(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self._tracer._close(self)
+        return False
+
+    @property
+    def duration(self) -> float:
+        """Seconds (0.0 while still open)."""
+        return 0.0 if self.t1 is None else self.t1 - self.t0
+
+    def interval(self) -> tuple:
+        """(t0, t1) in the tracer's clock."""
+        return (self.t0, self.t1 if self.t1 is not None else self.t0)
+
+    def __repr__(self) -> str:
+        return (f"Span({self.name!r}, dur={self.duration:.6f}, "
+                f"depth={self.depth}, attrs={self.attrs})")
+
+
+class _NoopSpan:
+    """The shared do-nothing span returned while tracing is off. One
+    immutable instance; every method is a constant-time no-op."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+    def annotate(self, **kw):
+        return self
+
+    def attach(self, payload):
+        return payload
+
+    name = "<noop>"
+    attrs: dict = {}
+    parent = None
+    depth = 0
+    duration = 0.0
+
+    def interval(self):
+        return (0.0, 0.0)
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class Tracer:
+    """Records a tree of spans against an injectable monotonic clock.
+
+    ``spans`` lists finished spans in completion order (children before
+    their parents); :meth:`roots` / :meth:`children_of` recover the tree.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 sync: bool = False):
+        self.clock = clock
+        self.sync = bool(sync)
+        self.spans: List[Span] = []
+        self._stack: List[Span] = []
+
+    # -- span creation ------------------------------------------------------
+
+    def span(self, name: str, **attrs) -> Span:
+        """A context manager recording one span under the current one."""
+        parent = self._stack[-1] if self._stack else None
+        return Span(self, name, parent, attrs)
+
+    def _open(self, sp: Span) -> None:
+        # re-parent in case the span object was created early and entered
+        # later (or re-entered): nesting is defined at __enter__ time
+        sp.parent = self._stack[-1] if self._stack else None
+        sp.depth = 0 if sp.parent is None else sp.parent.depth + 1
+        self._stack.append(sp)
+        sp.t0 = self.clock()
+
+    def _close(self, sp: Span) -> None:
+        if self.sync and sp._payload is not None:
+            import jax
+            jax.block_until_ready(sp._payload)
+        sp._payload = None
+        sp.t1 = self.clock()
+        if self._stack and self._stack[-1] is sp:
+            self._stack.pop()
+        else:                      # tolerate out-of-order exits
+            try:
+                self._stack.remove(sp)
+            except ValueError:
+                pass
+        self.spans.append(sp)
+
+    # -- inspection ---------------------------------------------------------
+
+    def mark(self) -> int:
+        """Position marker; pair with :meth:`spans_since`."""
+        return len(self.spans)
+
+    def spans_since(self, mark: int) -> List[Span]:
+        return self.spans[mark:]
+
+    def roots(self) -> List[Span]:
+        return [s for s in self.spans if s.parent is None]
+
+    def children_of(self, parent: Span) -> List[Span]:
+        return [s for s in self.spans if s.parent is parent]
+
+    def by_name(self, name: str) -> List[Span]:
+        return [s for s in self.spans if s.name == name]
+
+    def clear(self) -> None:
+        self.spans = []
+        self._stack = []
+
+
+def sum_walls(spans, key: str) -> dict:
+    """Sum span durations grouped by the ``key`` attribute (spans missing
+    it are skipped) — e.g. per-shard walls for the straggler monitor."""
+    out: dict = {}
+    for s in spans:
+        g = s.attrs.get(key)
+        if g is None:
+            continue
+        out[g] = out.get(g, 0.0) + s.duration
+    return out
+
+
+# -- process-global activation ------------------------------------------------
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def active_tracer() -> Optional[Tracer]:
+    """The tracer ``span(...)`` currently records into (None = off)."""
+    return _ACTIVE
+
+
+def span(name: str, **attrs):
+    """Module-level span entry point: records into the active tracer, or
+    returns the shared :data:`NOOP_SPAN` when tracing is off."""
+    t = _ACTIVE
+    if t is None:
+        return NOOP_SPAN
+    return t.span(name, **attrs)
+
+
+@contextlib.contextmanager
+def tracing(tracer: Optional[Tracer] = None, *,
+            clock: Callable[[], float] = time.perf_counter,
+            sync: bool = False):
+    """Activate ``tracer`` (or a fresh one) for the dynamic extent of the
+    block; nests — the previous tracer is restored on exit."""
+    global _ACTIVE
+    tr = tracer if tracer is not None else Tracer(clock=clock, sync=sync)
+    prev, _ACTIVE = _ACTIVE, tr
+    try:
+        yield tr
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def local_trace(clock: Callable[[], float] = time.perf_counter):
+    """The active tracer if one is on, else a temporary private one —
+    for subsystems whose own accounting (straggler walls, build phase
+    timings) is span-derived and must exist even when nobody asked for
+    a trace. Spans nest into the user's trace when there is one."""
+    tr = _ACTIVE
+    if tr is not None:
+        yield tr
+    else:
+        with tracing(Tracer(clock=clock)) as tr:
+            yield tr

@@ -58,6 +58,9 @@ import numpy as np
 from repro.api.collection import Collection
 from repro.api.result import QueryResult
 from repro.core.types import SearchParams
+from repro.obs.export import prometheus_text
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import span
 
 
 @dataclasses.dataclass
@@ -134,17 +137,46 @@ class VectorFrontend:
         self._next_rid = 0
         self._last_flush = self._clock()
         self._last_submit = self._clock()
-        # lifetime counters
-        self.n_ticks = 0
-        self.n_passes = 0
-        self.n_served = 0
-        self.n_shed = 0
-        self.n_flushes = 0
-        self.n_flush_deferrals = 0
+        # lifetime counters + latency/occupancy quantiles live in the
+        # obs registry (ISSUE 10): metrics() and prometheus() read the
+        # same objects; the n_* names stay as read-only properties
+        self.metrics_registry = MetricsRegistry()
+        self._c_ticks = self.metrics_registry.counter("ticks")
+        self._c_passes = self.metrics_registry.counter("passes")
+        self._c_served = self.metrics_registry.counter("served")
+        self._c_shed = self.metrics_registry.counter("shed")
+        self._c_flushes = self.metrics_registry.counter("flushes")
+        self._c_deferrals = self.metrics_registry.counter("flush_deferrals")
+        self._h_latency = self.metrics_registry.histogram("latency_seconds")
+        self._h_occupancy = self.metrics_registry.histogram(
+            "batch_occupancy")
         self._flush_cost: Optional[float] = None  # last measured wall time
-        self._latencies: list[float] = []
-        self._occupancy: list[float] = []
         self.last_tick_stats: dict = {}
+
+    # registry-backed views of the historical counter attributes
+    @property
+    def n_ticks(self) -> int:
+        return self._c_ticks.value
+
+    @property
+    def n_passes(self) -> int:
+        return self._c_passes.value
+
+    @property
+    def n_served(self) -> int:
+        return self._c_served.value
+
+    @property
+    def n_shed(self) -> int:
+        return self._c_shed.value
+
+    @property
+    def n_flushes(self) -> int:
+        return self._c_flushes.value
+
+    @property
+    def n_flush_deferrals(self) -> int:
+        return self._c_deferrals.value
 
     # -- intake --------------------------------------------------------------
 
@@ -194,7 +226,7 @@ class VectorFrontend:
         if shed:
             self.queue.clear()
             self.queue.extend(live)
-            self.n_shed += shed
+            self._c_shed.inc(shed)
         return shed
 
     def _admit(self, now: float) -> "list[SearchRequest]":
@@ -236,7 +268,7 @@ class VectorFrontend:
             # empty queue != quiescence: under open-loop traffic arrivals
             # are imminent, so idle flushes wait out the grace window
             if now - self._last_submit < self.idle_grace:
-                self.n_flush_deferrals += 1
+                self._c_deferrals.inc()
                 return
         elif now - self._last_flush < self.flush_budget:
             return
@@ -250,25 +282,35 @@ class VectorFrontend:
                          if r.deadline is not None]
             if deadlines and (self._flush_cost is None
                               or now + self._flush_cost > min(deadlines)):
-                self.n_flush_deferrals += 1
+                self._c_deferrals.inc()
                 return
         t0 = time.perf_counter()
-        self._timed(self.collection.flush)
+        with span("tick.flush", pending=pending):
+            self._timed(self.collection.flush)
         self._flush_cost = time.perf_counter() - t0
         self._last_flush = self._clock()
-        self.n_flushes += 1
+        self._c_flushes.inc()
 
     def tick(self) -> dict:
         """One scheduling step: shed -> (maybe wait) -> admit -> one
-        widened pass -> fold results -> maintenance. Returns tick stats."""
-        self.n_ticks += 1
+        widened pass -> fold results -> maintenance. Returns tick stats.
+        Under an active trace each sub-phase is its own span
+        (tick.shed / tick.admit / tick.engine / tick.fold /
+        tick.maintain / tick.flush)."""
+        self._c_ticks.inc()
+        with span("tick", n=self.n_ticks) as tick_sp:
+            return self._tick_body(tick_sp)
+
+    def _tick_body(self, tick_sp) -> dict:
         now = self._clock()
-        shed = self._shed_expired(now)
+        with span("tick.shed"):
+            shed = self._shed_expired(now)
         stats = {"t": now, "shed": shed, "admitted": 0, "served_queries": 0,
                  "queue_depth": len(self.queue), "waited": False,
                  "occupancy": 0.0}
         if not self.queue:
-            self._maintain(now, idle=True)
+            with span("tick.maintain", idle=True):
+                self._maintain(now, idle=True)
             self.last_tick_stats = stats
             return stats
         oldest = min(r.t_submit for r in self.queue)
@@ -276,29 +318,38 @@ class VectorFrontend:
                 and now - oldest < self.max_wait):
             # microbatching: under-full and young — let arrivals pile up
             stats["waited"] = True
-            self._maintain(now, idle=False)
+            with span("tick.maintain", idle=False):
+                self._maintain(now, idle=False)
             self.last_tick_stats = stats
             return stats
-        batch = self._admit(now)
-        results = self._timed(
-            self.collection.search_many,
-            [(r.q, r.filters, r.k) for r in batch],
-            params=self.params, engine=self.engine)
+        with span("tick.admit", queued=len(self.queue)):
+            batch = self._admit(now)
+        with span("tick.engine", requests=len(batch),
+                  rows=sum(r.n_queries for r in batch)):
+            results = self._timed(
+                self.collection.search_many,
+                [(r.q, r.filters, r.k) for r in batch],
+                params=self.params, engine=self.engine)
         t_end = self._clock()
-        for r, res in zip(batch, results):
-            r.result = res
-            r.t_done = t_end
-            self.completed[r.rid] = r
-            self._latencies.append(r.latency)
-        self.n_passes += 1
-        self.n_served += len(batch)
+        with span("tick.fold", requests=len(batch)):
+            for r, res in zip(batch, results):
+                r.result = res
+                r.t_done = t_end
+                self.completed[r.rid] = r
+                self._h_latency.observe(r.latency)
+        self._c_passes.inc()
+        self._c_served.inc(len(batch))
         occ = sum(r.n_queries for r in batch) / self.max_batch_queries
-        self._occupancy.append(occ)
+        self._h_occupancy.observe(occ)
+        tick_sp.annotate(admitted=len(batch), occupancy=occ)
+        # the typed per-pass engine view (EngineStats keeps mapping-style
+        # access, so dict consumers of stats["engine"] keep working)
         stats.update(admitted=len(batch), occupancy=occ,
                      served_queries=sum(r.n_queries for r in batch),
                      queue_depth=len(self.queue),
-                     engine=dict(self.collection.last_stats))
-        self._maintain(t_end, idle=not self.queue)
+                     engine=self.collection.engine_stats)
+        with span("tick.maintain", idle=not self.queue):
+            self._maintain(t_end, idle=not self.queue)
         self.last_tick_stats = stats
         return stats
 
@@ -321,18 +372,30 @@ class VectorFrontend:
 
     def metrics(self) -> dict:
         """Lifetime aggregates: latency quantiles (seconds), shed rate,
-        mean batch occupancy, pass/tick counts."""
-        lat = np.asarray(self._latencies, np.float64)
-        q = (lambda p: float(np.percentile(lat, p))) if lat.size \
-            else (lambda p: 0.0)
+        mean batch occupancy, pass/tick counts — every value read from
+        the obs registry (``metrics_registry``), the same objects
+        :meth:`prometheus` exports."""
         total = self.n_served + self.n_shed
         return {"served": self.n_served, "shed": self.n_shed,
                 "shed_rate": self.n_shed / max(total, 1),
-                "p50_latency": q(50), "p95_latency": q(95),
-                "p99_latency": q(99),
-                "mean_batch_occupancy": (float(np.mean(self._occupancy))
-                                         if self._occupancy else 0.0),
+                "p50_latency": self._h_latency.percentile(50),
+                "p95_latency": self._h_latency.percentile(95),
+                "p99_latency": self._h_latency.percentile(99),
+                "mean_batch_occupancy": self._h_occupancy.mean(),
                 "n_ticks": self.n_ticks, "n_passes": self.n_passes,
                 "n_flushes": self.n_flushes,
                 "n_flush_deferrals": self.n_flush_deferrals,
                 "queue_depth": len(self.queue)}
+
+    def prometheus(self, prefix: str = "repro_serve_") -> str:
+        """Prometheus text exposition of the frontend's lifetime
+        counters and latency/occupancy quantiles, plus live gauges
+        (queue depth, pending buffered rows). Serve it from any HTTP
+        handler; see ``docs/observability.md`` for a scrape example."""
+        mut = self.collection._mut
+        extra = {"queue_depth": len(self.queue),
+                 "pending_queries": self.pending_queries(),
+                 "pending_buffered_rows":
+                     0 if mut is None else mut.pending_rows}
+        return prometheus_text(self.metrics_registry, prefix=prefix,
+                               extra=extra)

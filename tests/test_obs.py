@@ -1,0 +1,484 @@
+"""Observability layer (ISSUE 10): span tracing, the unified metrics
+registry, Perfetto/Prometheus export, and the wiring contracts —
+engine stats are registry views, straggler walls are span-derived,
+and a traced sharded-hybrid search accounts for (almost) all of its
+own wall clock.
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import AttrSchema, Collection, EngineStats
+from repro.core.types import GMGConfig
+from repro.dist.straggler import StragglerMonitor
+from repro.obs.export import (chrome_trace_events, prometheus_text,
+                              write_chrome_trace)
+from repro.obs.metrics import MetricsRegistry, PassMetrics
+from repro.obs.trace import (NOOP_SPAN, Tracer, active_tracer, local_trace,
+                             span, sum_walls, tracing)
+from repro.serve.frontend import VectorFrontend, VirtualClock
+
+
+class FakeClock:
+    """Deterministic clock: every read advances by ``step``."""
+
+    def __init__(self, step=1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_attrs():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    with tracing(tr):
+        with span("search", rows=8) as root:
+            clock.advance(1.0)
+            with span("wave", wave=0) as w0:
+                clock.advance(2.0)
+            with span("wave", wave=1) as w1:
+                clock.advance(3.0)
+                w1.annotate(cells=4)
+        with span("other"):
+            clock.advance(0.5)
+    assert active_tracer() is None
+    # completion order: children before parents
+    assert [s.name for s in tr.spans] == ["wave", "wave", "search", "other"]
+    assert w0.parent is root and w1.parent is root and root.parent is None
+    assert root.depth == 0 and w0.depth == 1
+    assert root.duration == pytest.approx(6.0)
+    assert w0.duration == pytest.approx(2.0)
+    assert w1.duration == pytest.approx(3.0)
+    assert w1.attrs == {"wave": 1, "cells": 4}
+    assert tr.roots() == [root, tr.spans[-1]]
+    assert tr.children_of(root) == [w0, w1]
+    assert tr.by_name("wave") == [w0, w1]
+    # child intervals sit inside the parent's
+    for c in (w0, w1):
+        assert root.t0 <= c.t0 and c.t1 <= root.t1
+
+
+def test_mark_and_spans_since():
+    tr = Tracer(clock=FakeClock())
+    with tracing(tr):
+        with span("a"):
+            pass
+        mark = tr.mark()
+        with span("b"):
+            pass
+    assert [s.name for s in tr.spans_since(mark)] == ["b"]
+    tr.clear()
+    assert tr.spans == [] and tr.mark() == 0
+
+
+def test_sum_walls_groups_by_attr():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    with tracing(tr):
+        for sid, dt in ((0, 1.0), (1, 2.0), (0, 3.0)):
+            with span("shard.search", shard=sid):
+                clock.advance(dt)
+        with span("unrelated"):
+            clock.advance(9.0)
+    walls = sum_walls(tr.spans, "shard")
+    assert walls == {0: pytest.approx(4.0), 1: pytest.approx(2.0)}
+
+
+def test_noop_fast_path():
+    assert active_tracer() is None
+    sp = span("anything", cells=3)
+    assert sp is NOOP_SPAN
+    payload = object()
+    assert sp.attach(payload) is payload
+    assert sp.annotate(x=1) is sp and sp.duration == 0.0
+    # loose CI-safe bound: 200k disabled spans must be far under a second
+    t0 = time.perf_counter()
+    for _ in range(200_000):
+        with span("hot.loop"):
+            pass
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_virtualclock_tracer_compat():
+    clock = VirtualClock(t0=100.0)
+    tr = Tracer(clock=clock)
+    with tracing(tr):
+        with span("pass") as sp:
+            clock.advance(0.25)
+    assert sp.t0 == pytest.approx(100.0)
+    assert sp.duration == pytest.approx(0.25)
+
+
+def test_sync_close_blocks_on_payload():
+    import jax.numpy as jnp
+    tr = Tracer(sync=True)
+    with tracing(tr):
+        with span("launch") as sp:
+            out = sp.attach(jnp.arange(8) * 2)
+    assert sp.duration >= 0.0 and sp._payload is None
+    np.testing.assert_array_equal(np.asarray(out), np.arange(8) * 2)
+
+
+def test_local_trace_reuses_active_tracer():
+    tr = Tracer(clock=FakeClock())
+    with tracing(tr):
+        with local_trace() as lt:
+            assert lt is tr
+            with span("inner"):
+                pass
+    assert [s.name for s in tr.spans] == ["inner"]
+    # no active tracer: a temporary one collects, nothing leaks
+    with local_trace() as lt2:
+        assert lt2 is not tr and active_tracer() is lt2
+        with span("tmp"):
+            pass
+    assert active_tracer() is None
+    assert [s.name for s in lt2.spans] == ["tmp"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_kinds_and_snapshot_delta():
+    reg = MetricsRegistry()
+    c = reg.counter("n_waves")
+    assert reg.counter("n_waves") is c
+    c.inc(3)
+    reg.gauge("hit_rate").set(0.5)
+    h = reg.histogram("lat")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    with pytest.raises(TypeError):
+        reg.gauge("n_waves")
+    assert reg.value("n_waves") == 3
+    assert reg.value("lat") == 4           # histograms report sample count
+    assert reg.value("missing", default=7) == 7
+    assert "n_waves" in reg and "missing" not in reg
+    snap = reg.snapshot()
+    c.inc(2)
+    h.observe(5.0)
+    reg.gauge("hit_rate").set(0.75)
+    dlt = reg.delta(snap)
+    assert dlt["n_waves"] == 2 and dlt["lat"] == 1
+    assert dlt["hit_rate"] == 0.75         # gauges report current value
+    assert h.mean() == pytest.approx(3.0)
+    assert h.percentile(50) == pytest.approx(3.0)
+
+
+def test_histogram_ring_bound():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    h.maxlen = 8
+    for v in range(100):
+        h.observe(float(v))
+    assert len(h.values) == 8 and h.count == 100
+    assert h.values == [float(v) for v in range(92, 100)]
+
+
+def test_pass_metrics_single_source():
+    reg = MetricsRegistry()
+    pm = PassMetrics(reg, static={"engine": "incore"})
+    pm.count("n_rows", 4)
+    pm.count("n_rows", 2)
+    pm.set("hit_rate", 0.5)
+    pm.put("cache_policy", "fixed")        # dict-only, no registry metric
+    pm.update_counts({"n_dense": 1, "n_broad": 3})
+    stats = pm.stats()
+    assert stats["n_rows"] == 6 == reg.value("n_rows")
+    assert stats["hit_rate"] == 0.5 == reg.value("hit_rate")
+    assert stats["n_dense"] == 1 and reg.value("n_broad") == 3
+    assert stats["engine"] == "incore" and "engine" not in reg
+    assert stats["cache_policy"] == "fixed" and "cache_policy" not in reg
+    # stats() is the live dict: later pm writes show through
+    pm.count("n_rows", 1)
+    assert stats["n_rows"] == 7
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_event_schema(tmp_path):
+    clock = VirtualClock(t0=5.0)
+    tr = Tracer(clock=clock)
+    with tracing(tr):
+        with span("hybrid.wave", cells=np.int32(4), note="x"):
+            clock.advance(0.002)
+            with span("cache.upload", bytes=1024):
+                clock.advance(0.001)
+    events = chrome_trace_events(tr)
+    assert len(events) == 2
+    for e in events:
+        assert set(e) == {"name", "ph", "ts", "dur", "pid", "tid", "cat",
+                          "args"}
+        assert e["ph"] == "X" and e["ts"] >= 0.0
+    # sorted by start; the parent (longer) first on ties; cat = prefix
+    assert [e["name"] for e in events] == ["hybrid.wave", "cache.upload"]
+    assert events[0]["cat"] == "hybrid" and events[1]["cat"] == "cache"
+    assert events[0]["dur"] == pytest.approx(3000.0)   # µs
+    assert events[0]["args"]["cells"] == 4             # numpy -> plain int
+    assert isinstance(events[0]["args"]["cells"], int)
+    path = tmp_path / "sub" / "t.trace.json"           # dirs auto-created
+    assert write_chrome_trace(tr, str(path)) == str(path)
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["traceEvents"] == events
+    assert chrome_trace_events(Tracer()) == []
+
+
+def test_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("n_waves").inc(3)
+    reg.gauge("hit_rate").set(0.25)
+    h = reg.histogram("latency_seconds")
+    for v in (0.1, 0.2, 0.3, 0.4):
+        h.observe(v)
+    reg.counter("weird.name-1").inc()
+    text = prometheus_text(reg, extra={"queue_depth": 2})
+    lines = text.splitlines()
+    assert "# TYPE repro_n_waves counter" in lines
+    assert "repro_n_waves 3" in lines
+    assert "# TYPE repro_hit_rate gauge" in lines
+    assert "repro_hit_rate 0.25" in lines
+    assert "# TYPE repro_latency_seconds summary" in lines
+    assert 'repro_latency_seconds{quantile="0.5"}' in text
+    assert "repro_latency_seconds_sum 1" in lines    # ints lose the .0
+    assert "repro_latency_seconds_count 4" in lines
+    assert "repro_weird_name_1 1" in lines             # sanitized
+    assert "# TYPE repro_queue_depth gauge" in lines
+    assert "repro_queue_depth 2" in lines
+    assert text.endswith("\n")
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: a 16-cell index so streamed modes multi-wave + prefetch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def obs_col(small_data):
+    v, a = small_data
+    cfg = GMGConfig(seg_per_attr=(4, 4), intra_degree=12, n_clusters=16,
+                    build_ef=48, batch_cells=2, dense_threshold=256)
+    return Collection.build(
+        v, a, schema=AttrSchema(["price", "ts", "views", "duration"]),
+        config=cfg, seed=0)
+
+
+@pytest.fixture(scope="module")
+def obs_queries(small_data):
+    """16 broad 2-attr windows: every query touches many cells."""
+    v, a = small_data
+    rng = np.random.default_rng(0)
+    lo = np.full((16, 4), -np.inf, np.float32)
+    hi = np.full((16, 4), np.inf, np.float32)
+    lo[:, :2] = np.quantile(a[:, :2], 0.15, axis=0)
+    hi[:, :2] = np.quantile(a[:, :2], 0.85, axis=0)
+    q = (v[rng.integers(0, len(v), 16)] + 0.01).astype(np.float32)
+    return q, lo, hi
+
+
+def _strip_timing(stats):
+    """Drop wall-clock keys (the only legitimately nondeterministic
+    stats) so two identical passes compare equal."""
+    out = {}
+    for k, v in stats.items():
+        if "wall" in k or "seconds" in k:
+            continue
+        if k == "shards":
+            out[k] = [{kk: vv for kk, vv in s.items()
+                       if "wall" not in kk and "seconds" not in kk}
+                      for s in v]
+        else:
+            out[k] = v
+    return out
+
+
+def test_traced_sharded_hybrid_coverage(obs_col, obs_queries, small_data,
+                                        tmp_path):
+    """The acceptance scenario: sharded hybrid search with a pending
+    mutation buffer, traced end to end. Depth-1 child spans must cover
+    >= 95% of the collection.search wall, cache prefetches must visibly
+    overlap in-flight traversals, and the mid-stream buffer fold must
+    appear as its own span."""
+    v, a = small_data
+    q, lo, hi = obs_queries
+    budget = int(obs_col.hybrid_min_bytes() * 0.6)   # tight per-shard cache
+    col = Collection(index=obs_col.index, schema=obs_col.schema,
+                     shards=2, device_budget_bytes=budget)
+    col.insert(v[:5] + 0.01, a[:5])                  # pending buffer
+    col.search(q, filters=(lo, hi), k=10, engine="hybrid")   # warm compile
+    path = tmp_path / "search.trace.json"
+    with col.trace(str(path)) as tr:
+        res = col.search(q, filters=(lo, hi), k=10, engine="hybrid")
+    assert res.ids.shape == (16, 10)
+
+    roots = [s for s in tr.roots() if s.name == "collection.search"]
+    assert len(roots) == 1
+    root = roots[0]
+    kids = tr.children_of(root)
+    names = [s.name for s in kids]
+    assert names.count("shard.search") == 2
+    assert "collection.plan" in names
+    assert "collection.fold_buffer" in names         # mid-stream fold
+    # union of depth-1 child intervals covers >= 95% of the search wall
+    covered, cur = 0.0, None
+    for t0, t1 in sorted(s.interval() for s in kids):
+        if cur is None or t0 > cur[1]:
+            if cur is not None:
+                covered += cur[1] - cur[0]
+            cur = [t0, t1]
+        else:
+            cur[1] = max(cur[1], t1)
+    covered += cur[1] - cur[0]
+    assert covered / root.duration >= 0.95
+    # DMA/compute overlap: every prefetch upload sits inside an
+    # in-flight traversal span (hybrid.traverse covers launch->prefetch)
+    prefetches = tr.by_name("cache.prefetch")
+    assert len(prefetches) >= 2                      # both shards multi-wave
+    for pf in prefetches:
+        anc = pf.parent
+        while anc is not None and anc.name != "hybrid.traverse":
+            anc = anc.parent
+        assert anc is not None
+        assert anc.t0 <= pf.t0 and pf.t1 <= anc.t1
+    # the straggler monitor saw exactly the per-shard span walls the
+    # stats report (satellite: no hand-threaded shard timing)
+    eng = col._sharded
+    assert sum(eng.straggler._count) > 0
+    walls = sum_walls(tr.spans_since(0), "shard")
+    for st in col.last_stats["shards"]:
+        assert st["wall_seconds"] == pytest.approx(walls[st["shard"]])
+    # the exported file is schema-valid Perfetto JSON of this tracer
+    doc = json.loads(path.read_text())
+    assert doc["traceEvents"] == chrome_trace_events(tr)
+    assert len(doc["traceEvents"]) == len(tr.spans)
+
+
+@pytest.mark.parametrize("mode", ["incore", "hybrid", "ooc"])
+def test_counter_parity_with_registry(obs_col, obs_queries, mode):
+    """Gate-tracked stats are registry views: after one pass on a fresh
+    engine, every numeric stat whose name is registered reads the same
+    from the stats dict and from the registry (PassMetrics writes both
+    through one call — they cannot disagree)."""
+    q, lo, hi = obs_queries
+    col = Collection(index=obs_col.index, schema=obs_col.schema)
+    col.search(q, filters=(lo, hi), k=10, engine=mode)
+    eng = col._engine_for(mode)
+    stats, reg = eng.stats, eng.metrics
+    checked = 0
+    for name, val in stats.items():
+        if isinstance(val, (int, float)) and name in reg:
+            assert reg.value(name) == pytest.approx(val), name
+            checked += 1
+    assert checked >= 5
+    # the facade view reports exactly what the engine did
+    assert col.last_stats
+    if mode == "incore":
+        assert col.last_stats["n_rows"] == 16
+
+
+@pytest.mark.parametrize("mode", ["incore", "hybrid"])
+def test_tracing_does_not_change_stats(obs_col, obs_queries, mode):
+    """Overhead guard: the same pass traced and untraced reports
+    value-identical gate metrics (tracing only observes)."""
+    q, lo, hi = obs_queries
+    col_a = Collection(index=obs_col.index, schema=obs_col.schema)
+    col_b = Collection(index=obs_col.index, schema=obs_col.schema)
+    for col in (col_a, col_b):                       # identical warm-up
+        col.search(q, filters=(lo, hi), k=10, engine=mode)
+    with col_a.trace():
+        col_a.search(q, filters=(lo, hi), k=10, engine=mode)
+    col_b.search(q, filters=(lo, hi), k=10, engine=mode)
+    assert _strip_timing(col_a.last_stats) == _strip_timing(col_b.last_stats)
+
+
+def test_engine_stats_raw_dict_roundtrip():
+    assert EngineStats().raw_dict() == {}
+    raw = {"engine": "incore", "n_rows": 4, "n_waves": 2}
+    st = EngineStats.from_raw(raw)
+    assert st.raw_dict() == raw
+    assert "n_batches" not in st.raw_dict()          # unreported key absent
+
+
+def test_straggler_ingest_from_spans():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    with tracing(tr):
+        for sid, dt in ((0, 0.1), (1, 0.4)):
+            with span("shard.search", shard=sid):
+                clock.advance(dt)
+    mon = StragglerMonitor(n_hosts=3)
+    walls = mon.ingest(tr.spans, key="shard")
+    assert walls == {0: pytest.approx(0.1), 1: pytest.approx(0.4)}
+    assert mon._count == [1, 1, 0]                   # idle host 2 untouched
+    assert mon._ewma[0] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# build phases + serving export
+# ---------------------------------------------------------------------------
+
+def test_build_phase_spans(small_data):
+    from repro.core.gmg import build_gmg, build_phase_seconds, build_timings
+    v, a = small_data
+    cfg = GMGConfig(seg_per_attr=(2,), intra_degree=8, n_clusters=8,
+                    build_ef=32)
+    t = build_timings(v[:512], a[:512], cfg, seed=0)
+    phases = ("grid", "intra", "inter", "order", "quantize")
+    assert all(t[f"{p}_seconds"] > 0.0 for p in phases)
+    assert sum(t[f"{p}_seconds"] for p in phases) <= t["build_seconds"]
+    # a user trace around a build sees the same phases as spans
+    tr = Tracer()
+    with tracing(tr):
+        build_gmg(v[:512], a[:512], cfg, seed=0)
+    got = build_phase_seconds(tr.spans)
+    assert set(got) == set(phases)
+
+
+def test_frontend_prometheus_export(obs_col, obs_queries):
+    q, lo, hi = obs_queries
+    col = Collection(index=obs_col.index, schema=obs_col.schema)
+    fe = VectorFrontend(col, max_batch_queries=64, clock=VirtualClock())
+    rids = [fe.submit(q[i:i + 1], filters=(lo[i:i + 1], hi[i:i + 1]), k=5)
+            for i in range(4)]
+    fe.drain()
+    assert all(fe.take(r).result is not None for r in rids)
+    assert isinstance(fe.metrics_registry, MetricsRegistry)
+    m = fe.metrics()
+    assert m["served"] == 4 and m["n_passes"] >= 1
+    assert fe.n_served == 4                          # registry-backed props
+    text = fe.prometheus()
+    assert "# TYPE repro_serve_served counter" in text
+    assert "repro_serve_served 4" in text
+    assert "# TYPE repro_serve_ticks counter" in text
+    assert 'repro_serve_latency_seconds{quantile="0.99"}' in text
+    assert "repro_serve_queue_depth 0" in text
+
+
+def test_frontend_tick_spans(obs_col, obs_queries):
+    """A traced tick shows the sub-phase spans (admit/engine/fold)."""
+    q, lo, hi = obs_queries
+    col = Collection(index=obs_col.index, schema=obs_col.schema)
+    fe = VectorFrontend(col, max_batch_queries=64, clock=VirtualClock())
+    fe.submit(q[:2], filters=(lo[:2], hi[:2]), k=5)
+    tr = Tracer()
+    with tracing(tr):
+        fe.tick()
+    ticks = tr.by_name("tick")
+    assert len(ticks) == 1
+    kid_names = {s.name for s in tr.children_of(ticks[0])}
+    assert "tick.admit" in kid_names and "tick.engine" in kid_names
+    # the engine pass nests inside the tick
+    searches = tr.by_name("collection.search_many")
+    assert searches and searches[0].depth >= 1
